@@ -1,0 +1,50 @@
+"""Appendix A: optimal snapshot/checkpoint intervals and total overhead.
+
+Feeds *measured* saving overheads (from the micro benchmark sizes) into
+Eqs. 4-11 for a hypothetical week-long pretraining at several failure
+rates, and reports REFT's total fault-tolerance overhead vs
+checkpoint-only.
+"""
+from __future__ import annotations
+
+from repro.core import policy
+
+
+def run(t_snapshot: float = 0.4, t_checkpoint: float = 4.0,
+        t_comp: float = 1.0, n: int = 6) -> list:
+    rows = []
+    t_total = 7 * 24 * 3600.0
+    for mttf_h in (2.0, 8.0, 24.0):
+        lam = 1.0 / (mttf_h * 3600.0)
+        plan = policy.plan_frequencies(
+            t_snapshot=t_snapshot, t_checkpoint=t_checkpoint,
+            t_comp=t_comp, lam_node=lam, n=n)
+        # REFT: snapshots hide behind compute (Eq. 8), restart pays the
+        # snapshot interval; checkpoints only for the rare Eq. 7 event.
+        snap_int = max(plan.snapshot_interval, t_comp)
+        o_reft = policy.total_overhead(
+            t_total, snap_int, plan.o_snapshot, lam, t_sch=30, t_load=5) + \
+            policy.total_overhead(
+                t_total, max(plan.checkpoint_interval, 60.0), 0.0,
+                plan.lam_unrecoverable, t_sch=30, t_load=30)
+        # checkpoint-only baseline
+        o_ck_save = policy.effective_save_overhead(t_checkpoint, t_comp)
+        t_ck = policy.optimal_interval(o_ck_save, lam)
+        o_ckpt = policy.total_overhead(t_total, max(t_ck, t_comp),
+                                       o_ck_save, lam, t_sch=30, t_load=30)
+        rows.append((f"intervals_mttf{mttf_h}h", snap_int,
+                     plan.checkpoint_interval, t_ck, o_reft, o_ckpt,
+                     o_ckpt / max(o_reft, 1e-9)))
+    return rows
+
+
+def main():
+    print("bench,snap_interval_s,reft_ckpt_interval_s,baseline_ckpt_interval_s,"
+          "reft_total_overhead_s,ckpt_total_overhead_s,reduction")
+    for r in run():
+        print(f"{r[0]},{r[1]:.1f},{r[2]:.1f},{r[3]:.1f},{r[4]:.0f},"
+              f"{r[5]:.0f},{r[6]:.1f}x")
+
+
+if __name__ == "__main__":
+    main()

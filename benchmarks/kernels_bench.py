@@ -1,0 +1,66 @@
+"""Kernel micro-benches: interpret-mode Pallas vs oracle wall time (CPU
+sanity only — TPU perf comes from the roofline analysis) plus the host
+numpy XOR path used by the SMP (the production encode on this box).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import timeit
+from repro.core.raim5 import xor_blocks
+from repro.kernels.ops import ssd_scan, swa_attention, xor_parity_encode
+from repro.kernels.ref import ssd_scan_ref, swa_attention_ref, xor_reduce_ref
+
+
+def run() -> list:
+    rows = []
+    rng = np.random.default_rng(0)
+
+    # xor parity: host numpy (production path) vs kernel oracle
+    blocks = rng.integers(0, 256, size=(3, 64 << 20), dtype=np.uint8)
+    t_np = timeit(lambda: xor_blocks(list(blocks)), repeat=3)
+    gb = blocks.nbytes / 2 ** 30
+    rows.append(("xor_host_numpy_64MBx3", t_np, f"{gb/t_np:.1f}GB/s"))
+    blk_small = jnp.asarray(blocks[:, :1 << 20])
+    t_k = timeit(lambda: jax.block_until_ready(
+        xor_parity_encode(blk_small)), repeat=3)
+    rows.append(("xor_pallas_interp_1MBx3", t_k, "interpret-mode"))
+
+    # ssd: chunked kernel vs naive recurrence (both jitted, CPU)
+    ks = jax.random.split(jax.random.PRNGKey(0), 4)
+    B, S, H, P, N = 2, 1024, 4, 64, 128
+    u = jax.random.normal(ks[0], (B, S, H, P))
+    a = -jax.nn.softplus(jax.random.normal(ks[1], (B, S, H)))
+    Bm = jax.random.normal(ks[2], (B, S, N))
+    Cm = jax.random.normal(ks[3], (B, S, N))
+    ref = jax.jit(ssd_scan_ref)
+    t_r = timeit(lambda: jax.block_until_ready(ref(u, a, Bm, Cm)))
+    rows.append(("ssd_naive_scan_1k", t_r, "jit"))
+    t_c = timeit(lambda: jax.block_until_ready(
+        ssd_scan(u, a, Bm, Cm, chunk=128)))
+    rows.append(("ssd_pallas_interp_1k", t_c, f"vs_naive={t_r/t_c:.2f}x"))
+
+    # swa flash kernel vs dense reference
+    q = jax.random.normal(ks[0], (1, 1024, 2, 4, 64))
+    k = jax.random.normal(ks[1], (1, 1024, 2, 64))
+    v = jax.random.normal(ks[2], (1, 1024, 2, 64))
+    refa = jax.jit(lambda q, k, v: swa_attention_ref(q, k, v, window=128))
+    t_d = timeit(lambda: jax.block_until_ready(refa(q, k, v)))
+    rows.append(("swa_dense_ref_1k_w128", t_d, "jit"))
+    t_f = timeit(lambda: jax.block_until_ready(
+        swa_attention(q, k, v, window=128)))
+    rows.append(("swa_pallas_interp_1k_w128", t_f, f"vs_dense={t_d/t_f:.2f}x"))
+    return rows
+
+
+def main():
+    print("bench,seconds,derived")
+    for name, s, d in run():
+        print(f"{name},{s:.4f},{d}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,73 @@
+"""Figure 9: single-node micro-benchmark.
+
+Four simulated GPUs snapshot a synthetic parameter set; we measure (per
+method) the phase speeds actually achievable on this host:
+  d2h        — device->host copy (jax array -> numpy)
+  sha-mem    — staging-ring write + SMP copy (REFT-Sn's extra hop)
+  serialize  — byte-stream framing (CheckFreq/TorchSnapshot phase 2)
+  persist    — disk write
+and the end-to-end 'perf' GB/s of REFT-Sn / REFT-Ckpt / CheckFreq /
+TorchSnapshot, reproducing the figure's ordering.
+"""
+from __future__ import annotations
+
+import tempfile
+import time
+
+import numpy as np
+
+from benchmarks.common import make_param_state, tree_bytes
+from repro.ckpt import CheckFreqCheckpointer, TorchSnapshotCheckpointer
+from repro.core.snapshot import ReftConfig, SnapshotEngine
+
+SIZE = 256 << 20          # 256 MB synthetic state (paper used 20 GB/4 GPUs)
+
+
+def run(size: int = SIZE) -> list:
+    state = make_param_state(size)
+    nbytes = tree_bytes(state)
+    gb = nbytes / 2 ** 30
+    rows = []
+
+    # --- REFT-Sn: async sharded snapshot to SMP shared memory
+    eng = SnapshotEngine(0, 1, state, ReftConfig(bucket_bytes=16 << 20))
+    try:
+        eng.snapshot_sync(state, 1)                     # warm
+        t0 = time.perf_counter()
+        eng.snapshot_sync(state, 2)
+        t_sn = time.perf_counter() - t0
+        rows.append(("fig9_reft_sn", t_sn, gb / t_sn))
+
+        # --- REFT-Ckpt: SMP persists its clean buffer (no trainer time)
+        with tempfile.NamedTemporaryFile(suffix=".reft") as f:
+            t0 = time.perf_counter()
+            eng.persist(f.name)
+            t_ck = time.perf_counter() - t0
+        rows.append(("fig9_reft_ckpt", t_ck, gb / t_ck))
+    finally:
+        eng.close()
+
+    # --- CheckFreq (full async ckpt) / TorchSnapshot (sharded async ckpt)
+    for cls, kw, name in [
+            (CheckFreqCheckpointer, {}, "fig9_checkfreq"),
+            (TorchSnapshotCheckpointer, {"n_ranks": 4},
+             "fig9_torchsnapshot")]:
+        with tempfile.TemporaryDirectory() as d:
+            ck = cls(d, state, **kw)
+            ck.save_sync(state, 1)                      # warm
+            t = ck.save_sync(state, 2)
+            rows.append((name, t.total, gb / t.total))
+            rows.append((name + "_d2h", t.d2h, gb / max(t.d2h, 1e-9)))
+            rows.append((name + "_persist", t.persist,
+                         gb / max(t.persist, 1e-9)))
+    return rows
+
+
+def main():
+    print("bench,seconds,GB_per_s")
+    for name, s, gbps in run():
+        print(f"{name},{s:.4f},{gbps:.2f}")
+
+
+if __name__ == "__main__":
+    main()

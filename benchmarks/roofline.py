@@ -1,0 +1,57 @@
+"""Roofline table: formats results/*.jsonl from the dry-run campaigns.
+
+Reads (in order of preference) the roofline (extrapolated-unrolled) records
+and merges per-pair memory stats from the scanned proof records.
+"""
+from __future__ import annotations
+
+import json
+import os
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "results")
+
+
+def load(name):
+    path = os.path.join(RESULTS, name)
+    if not os.path.exists(path):
+        return {}
+    out = {}
+    with open(path) as f:
+        for line in f:
+            r = json.loads(line)
+            out[(r["arch"], r["shape"])] = r
+    return out
+
+
+def run() -> list:
+    roof = load("roofline_baseline.jsonl")
+    proof = load("dryrun_single_pod.jsonl")
+    rows = []
+    for key in sorted(set(roof) | set(proof)):
+        r = roof.get(key, proof.get(key))
+        if "skipped" in r:
+            rows.append((*key, "skip", r["skipped"], "", "", "", "", ""))
+            continue
+        if "error" in r:
+            rows.append((*key, "ERROR", r["error"], "", "", "", "", ""))
+            continue
+        mem = (proof.get(key) or {}).get("memory", {})
+        args_gib = mem.get("argument_bytes", 0) / 2 ** 30
+        rows.append((*key, r["dominant"],
+                     f"{r['t_compute_s']:.3e}",
+                     f"{r['t_memory_s']:.3e}",
+                     f"{r['t_collective_s']:.3e}",
+                     f"{(r.get('useful_compute_ratio') or 0):.3f}",
+                     f"{args_gib:.2f}"))
+    return rows
+
+
+def main():
+    print("arch,shape,dominant,t_compute_s,t_memory_s,t_collective_s,"
+          "useful_ratio,args_GiB_per_chip")
+    for r in run():
+        print(",".join(str(x) for x in r))
+
+
+if __name__ == "__main__":
+    main()

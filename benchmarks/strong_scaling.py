@@ -1,0 +1,71 @@
+"""Figures 10-11 strong scaling: saving speed/overhead vs PP stages.
+
+Paper setting: DP=1, TP=4, PP in {1,2,4,6}; each PP stage is one SG of one
+node, so REFT's parallelism comes from per-stage engines saving their stage
+slice concurrently.  CheckFreq writes the whole model from one node.
+"""
+from __future__ import annotations
+
+import tempfile
+import time
+
+import numpy as np
+
+import jax
+
+from benchmarks.common import make_param_state, tree_bytes
+from repro.ckpt import CheckFreqCheckpointer
+from repro.core.snapshot import ReftConfig, SnapshotEngine
+
+SIZE = 96 << 20
+PP = (1, 2, 4, 6)
+
+
+def _stage_slice(state, i, n):
+    def cut(x):
+        if x.ndim == 0:
+            return x
+        per = -(-x.shape[0] // n)
+        return x[i * per:(i + 1) * per]
+    return jax.tree.map(cut, state)
+
+
+def run(size: int = SIZE, pps=PP) -> list:
+    rows = []
+    state = make_param_state(size)
+    gb = tree_bytes(state) / 2 ** 30
+    for pp in pps:
+        stages = [_stage_slice(state, i, pp) for i in range(pp)]
+        engines = [SnapshotEngine(0, 1, st, ReftConfig(
+            bucket_bytes=16 << 20, run_id=f"ss{pp}-{i}"))
+            for i, st in enumerate(stages)]
+        try:
+            for e, st in zip(engines, stages):
+                e.snapshot_sync(st, 1)                  # warm
+            t0 = time.perf_counter()
+            for e, st in zip(engines, stages):          # async, parallel
+                assert e.snapshot_async(st, 2)
+            for e in engines:
+                e.wait()
+            t = time.perf_counter() - t0
+            rows.append((f"strong_reft_sn_pp{pp}", t, gb / t))
+        finally:
+            for e in engines:
+                e.close()
+
+        with tempfile.TemporaryDirectory() as d:
+            ck = CheckFreqCheckpointer(d, state)
+            ck.save_sync(state, 1)
+            t = ck.save_sync(state, 2).total
+            rows.append((f"strong_checkfreq_pp{pp}", t, gb / t))
+    return rows
+
+
+def main():
+    print("bench,seconds,GB_per_s")
+    for name, s, gbps in run():
+        print(f"{name},{s:.4f},{gbps:.2f}")
+
+
+if __name__ == "__main__":
+    main()

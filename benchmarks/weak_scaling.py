@@ -1,0 +1,61 @@
+"""§6.2a weak scaling: saving speed vs number of DP paths.
+
+The state is replicated across m DP nodes; REFT shards it so each node
+moves ~2W/m bytes (own shard + parity stripe), all nodes in parallel.
+We run the m engines' snapshots concurrently (each a real SMP process) and
+report the aggregate GB/s, against CheckFreq (every node writes the full
+state) and TorchSnapshot (each node writes W/m to disk in parallel).
+"""
+from __future__ import annotations
+
+import tempfile
+import time
+
+from benchmarks.common import make_param_state, tree_bytes
+from repro.ckpt import CheckFreqCheckpointer, TorchSnapshotCheckpointer
+from repro.core.coordinator import ReftGroup
+from repro.core.snapshot import ReftConfig
+
+SIZE = 96 << 20
+PATHS = (1, 2, 4, 6, 8, 12)      # paper scales to DP-24 on 6 nodes; this
+                                 # 24-core host sustains 12 parallel paths
+
+
+def run(size: int = SIZE, paths=PATHS) -> list:
+    rows = []
+    state = make_param_state(size)
+    gb = tree_bytes(state) / 2 ** 30
+    for m in paths:
+        g = ReftGroup(m, state, ReftConfig(
+            bucket_bytes=16 << 20, ckpt_dir=tempfile.mkdtemp(),
+            checkpoint_every_snapshots=10 ** 9))
+        try:
+            g.snapshot(state, 1)                        # warm
+            t0 = time.perf_counter()
+            g.snapshot(state, 2)
+            t = time.perf_counter() - t0
+            rows.append((f"weak_reft_sn_dp{m}", t, gb / t))
+        finally:
+            g.close()
+
+        with tempfile.TemporaryDirectory() as d:
+            ck = TorchSnapshotCheckpointer(d, state, n_ranks=m)
+            ck.save_sync(state, 1)
+            t = ck.save_sync(state, 2).total
+            rows.append((f"weak_torchsnapshot_dp{m}", t, gb / t))
+        with tempfile.TemporaryDirectory() as d:
+            ck = CheckFreqCheckpointer(d, state)
+            ck.save_sync(state, 1)
+            t = ck.save_sync(state, 2).total
+            rows.append((f"weak_checkfreq_dp{m}", t, gb / t))
+    return rows
+
+
+def main():
+    print("bench,seconds,GB_per_s")
+    for name, s, gbps in run():
+        print(f"{name},{s:.4f},{gbps:.2f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,46 @@
+"""Quickstart: train a tiny model with REFT in-memory fault tolerance.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.configs.base import InputShape
+from repro.core import ReftConfig, ReftGroup
+from repro.data.pipeline import SyntheticDataset
+from repro.train.steps import init_train_state, make_train_step
+
+
+def main():
+    cfg = get_config("qwen3-8b").reduced()        # 2-layer smoke variant
+    shape = InputShape("demo", 64, 2, "train")
+    state = init_train_state(cfg, 0).tree()
+    ds = SyntheticDataset(cfg, shape)
+    step_fn = jax.jit(make_train_step(cfg))
+
+    # one sharding group of 4 simulated nodes, each with a real SMP process
+    group = ReftGroup(4, state, ReftConfig(ckpt_dir="/tmp/reft-quickstart"))
+    try:
+        for _ in range(6):
+            state, metrics = step_fn(state, next(ds))
+            step = int(state["step"])
+            group.snapshot(state, step, extra_meta=ds.state())
+            print(f"step {step}: loss={float(metrics['loss']):.4f} "
+                  f"(snapshot clean @ {step})")
+
+        # simulate losing a whole node: RAIM5 decodes its shard from parity
+        group.inject_node_failure(2)
+        recovered, rstep, extra, tier = group.recover()
+        same = all(np.array_equal(np.asarray(a), np.asarray(b))
+                   for a, b in zip(jax.tree.leaves(recovered),
+                                   jax.tree.leaves(state)))
+        print(f"recovered via {tier} at step {rstep}; bit-exact: {same}")
+        assert same and rstep == step
+    finally:
+        group.close()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,48 @@
+"""Serving demo: batched prefill + decode with a KV cache.
+
+Runs the same serve_step the dry-run lowers for decode_32k/long_500k,
+here on a reduced model with a batch of synthetic requests.
+
+    PYTHONPATH=src python examples/serve.py
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.models import model as M
+
+
+def main():
+    cfg = get_config("gemma3-4b").reduced()      # SWA + global interleave
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    B, prompt_len, gen_len, max_seq = 4, 16, 24, 64
+
+    prompts = jax.random.randint(jax.random.PRNGKey(1), (B, prompt_len),
+                                 0, cfg.vocab_size)
+
+    # prefill: consume the prompt once, then decode token by token
+    cache = M.init_cache(cfg, B, max_seq)
+    decode = jax.jit(lambda p, c, t: M.decode_step(cfg, p, c, t))
+    tok = prompts[:, :1]
+    t0 = time.time()
+    out_tokens = []
+    for t in range(prompt_len + gen_len - 1):
+        logits, cache = decode(params, cache, tok)
+        if t + 1 < prompt_len:
+            tok = prompts[:, t + 1:t + 2]        # teacher-forced prefill
+        else:
+            tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            out_tokens.append(tok)
+    dt = time.time() - t0
+    gen = jnp.concatenate(out_tokens, axis=1)
+    print(f"served batch={B}: generated {gen.shape[1]} tokens/request "
+          f"in {dt:.2f}s ({B * gen.shape[1] / dt:.1f} tok/s)")
+    print("sample:", gen[0, :12].tolist())
+    assert gen.shape == (B, gen_len)
+    assert not bool(jnp.any(jnp.isnan(logits)))
+
+
+if __name__ == "__main__":
+    main()

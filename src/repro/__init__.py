@@ -1,0 +1,8 @@
+"""REFT-JAX: reliable & efficient in-memory fault tolerance for
+hybrid-parallel training — production-grade JAX reproduction.
+
+Subpackages: core (the paper), models, configs, optim, data, dist, ckpt,
+kernels (Pallas TPU), launch, plus tests/ benchmarks/ examples/ at the
+repo root. See README.md / DESIGN.md / EXPERIMENTS.md.
+"""
+__version__ = "1.0.0"

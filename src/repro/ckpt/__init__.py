@@ -1,0 +1,7 @@
+from repro.ckpt.baselines import (
+    AsyncCheckpointer, CheckFreqCheckpointer, TorchSnapshotCheckpointer,
+    load_checkpoint,
+)
+
+__all__ = ["AsyncCheckpointer", "CheckFreqCheckpointer",
+           "TorchSnapshotCheckpointer", "load_checkpoint"]

@@ -1,0 +1,84 @@
+"""Checkpoint retention manager for the REFT-Ckpt tier.
+
+Production hygiene around the rare persisted checkpoints: an atomic
+manifest of complete checkpoints (a step counts only when every SG
+member's shard landed), keep-latest-k garbage collection, and discovery
+for recovery.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+import re
+from typing import Dict, List, Optional
+
+_SHARD_RE = re.compile(r"step-(\d+)-node-(\d+)\.reft$")
+MANIFEST = "MANIFEST.json"
+
+
+def scan_shards(ckpt_dir: str) -> Dict[int, List[int]]:
+    """{step: [nodes present]} from the files on disk."""
+    out: Dict[int, List[int]] = {}
+    for p in glob.glob(os.path.join(ckpt_dir, "step-*-node-*.reft")):
+        m = _SHARD_RE.search(os.path.basename(p))
+        if m:
+            out.setdefault(int(m.group(1)), []).append(int(m.group(2)))
+    return {s: sorted(ns) for s, ns in out.items()}
+
+
+class CheckpointManager:
+    def __init__(self, ckpt_dir: str, n_members: int, *, keep: int = 3):
+        self.dir = ckpt_dir
+        self.n = n_members
+        self.keep = keep
+        os.makedirs(ckpt_dir, exist_ok=True)
+
+    # ------------------------------------------------------------ state
+    def complete_steps(self) -> List[int]:
+        """Steps for which every member's shard is on disk."""
+        return sorted(s for s, nodes in scan_shards(self.dir).items()
+                      if nodes == list(range(self.n)))
+
+    def latest(self) -> Optional[int]:
+        steps = self.complete_steps()
+        return steps[-1] if steps else None
+
+    # --------------------------------------------------------- manifest
+    def commit(self) -> dict:
+        """Atomically publish the manifest and GC beyond keep-latest-k."""
+        steps = self.complete_steps()
+        kept = steps[-self.keep:] if self.keep else steps
+        manifest = {"n_members": self.n, "complete_steps": kept}
+        tmp = os.path.join(self.dir, MANIFEST + ".tmp")
+        with open(tmp, "w") as f:
+            json.dump(manifest, f)
+            f.flush()
+            os.fsync(f.fileno())
+        os.replace(tmp, os.path.join(self.dir, MANIFEST))
+        self._gc(set(kept))
+        return manifest
+
+    def read_manifest(self) -> Optional[dict]:
+        try:
+            with open(os.path.join(self.dir, MANIFEST)) as f:
+                return json.load(f)
+        except FileNotFoundError:
+            return None
+
+    def _gc(self, keep_steps: set) -> int:
+        removed = 0
+        for s, nodes in scan_shards(self.dir).items():
+            complete = nodes == list(range(self.n))
+            if s in keep_steps and complete:
+                continue
+            # drop superseded steps AND incomplete (torn) step families
+            if complete or s < (max(keep_steps) if keep_steps else 0):
+                for node in nodes:
+                    try:
+                        os.remove(os.path.join(
+                            self.dir, f"step-{s}-node-{node}.reft"))
+                        removed += 1
+                    except FileNotFoundError:
+                        pass
+        return removed

@@ -1,0 +1,17 @@
+"""REFT core: the paper's contribution (in-memory fault tolerance)."""
+from repro.core.coordinator import NodeState, Reft, ReftGroup
+from repro.core.policy import (
+    FrequencyPlan, ckpt_survival, optimal_interval, plan_frequencies,
+    reft_fail_rate, reft_survival, safe_horizon, weibull_survival,
+)
+from repro.core.snapshot import ReftConfig, SnapshotEngine
+from repro.core.recovery import (
+    RecoveryError, restore_from_checkpoint, restore_state,
+)
+
+__all__ = [
+    "NodeState", "Reft", "ReftGroup", "ReftConfig", "SnapshotEngine",
+    "RecoveryError", "restore_from_checkpoint", "restore_state",
+    "FrequencyPlan", "ckpt_survival", "optimal_interval", "plan_frequencies",
+    "reft_fail_rate", "reft_survival", "safe_horizon", "weibull_survival",
+]

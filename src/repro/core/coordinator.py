@@ -1,0 +1,178 @@
+"""Elastic coordinator (paper §4.2 "Elastic Functionality").
+
+State machine per node: HEALTHY -> SNAP (snapshotting) -> HEALTHY;
+UNHEALTHY = software failure (trainer lost, SMP alive);
+OFFLINE  = node failure (SMP + memory gone).
+
+`ReftGroup` drives one SG (n members) from a synchronous training loop —
+the paper's setting: all DP members snapshot the same iteration.  Each
+member owns a real SMP process; snapshotting runs in parallel member
+threads (the simulated analogue of parallel per-host PCIe links).
+"""
+from __future__ import annotations
+
+import enum
+import os
+import time
+from typing import Any, Dict, List, Optional, Tuple
+
+from repro.core.policy import FrequencyPlan, plan_frequencies
+from repro.core.recovery import (
+    RecoveryError, restore_from_checkpoint, restore_state,
+)
+from repro.core.snapshot import ReftConfig, SnapshotEngine
+
+
+class NodeState(enum.Enum):
+    HEALTHY = "HEALTHY"
+    SNAP = "SNAP"
+    UNHEALTHY = "UNHEALTHY"      # software failure: trainer gone, SMP alive
+    OFFLINE = "OFFLINE"          # node failure: SMP and its memory gone
+
+
+class ReftGroup:
+    """REFT for one sharding group of `n` members."""
+
+    def __init__(self, n: int, state_template: Any,
+                 cfg: ReftConfig = ReftConfig()):
+        self.n, self.cfg = n, cfg
+        self.run = cfg.run_id
+        self.engines = [SnapshotEngine(i, n, state_template, cfg,
+                                       run_id=self.run) for i in range(n)]
+        self.template = state_template
+        self.total_bytes = self.engines[0].spec.total_bytes
+        self.states = {i: NodeState.HEALTHY for i in range(n)}
+        self._snapshots_since_ckpt = 0
+        os.makedirs(cfg.ckpt_dir, exist_ok=True)
+
+    # ------------------------------------------------------------- save
+    def snapshot(self, state: Any, step: int, extra_meta: dict = None,
+                 wait: bool = True) -> bool:
+        """All members snapshot iteration `step` in parallel (async)."""
+        started = all(e.snapshot_async(state, step, extra_meta)
+                      for e in self.engines
+                      if self.states[e.node] == NodeState.HEALTHY)
+        if wait:
+            self.wait()
+        return started
+
+    def wait(self) -> int:
+        steps = [e.wait() for e in self.engines
+                 if self.states[e.node] == NodeState.HEALTHY]
+        self._snapshots_since_ckpt += 1
+        if self._snapshots_since_ckpt >= self.cfg.checkpoint_every_snapshots:
+            self.checkpoint()
+        return min(steps) if steps else -1
+
+    def checkpoint(self) -> Optional[int]:
+        """REFT-Ckpt: every healthy SMP persists its shard (no trainer
+        involvement)."""
+        step = None
+        for e in self.engines:
+            if self.states[e.node] != NodeState.HEALTHY:
+                continue
+            s = e.last_clean_step
+            path = os.path.join(self.cfg.ckpt_dir,
+                                f"step-{s}-node-{e.node}.reft")
+            e.persist(path)
+            step = s
+        self._snapshots_since_ckpt = 0
+        return step
+
+    # ---------------------------------------------------------- failure
+    def inject_software_failure(self, node: int):
+        """Trainer process dies; SMP and its segments survive."""
+        self.states[node] = NodeState.UNHEALTHY
+
+    def inject_node_failure(self, node: int):
+        """Whole node dies: SMP killed, volatile memory wiped."""
+        e = self.engines[node]
+        e.smp.kill()
+        from repro.core.smp import ReadOnlyNode
+        ReadOnlyNode.unlink_node(self.run, node)
+        self.states[node] = NodeState.OFFLINE
+
+    # ---------------------------------------------------------- recover
+    def recover(self) -> Tuple[Any, int, dict, str]:
+        """Returns (state, step, extra_meta, tier) per the 3-tier policy."""
+        alive = [i for i in range(self.n)
+                 if self.states[i] != NodeState.OFFLINE]
+        try:
+            state, step, extra = restore_state(
+                self.run, self.n, self.total_bytes, self.template, alive)
+            tier = "in-memory" if len(alive) == self.n else "raim5"
+            return state, step, extra, tier
+        except RecoveryError:
+            state, step, extra = restore_from_checkpoint(
+                self.cfg.ckpt_dir, self.n, self.template)
+            return state, step, extra, "checkpoint"
+
+    def heal(self, node: int):
+        """Elastic replacement node rejoins (new SMP)."""
+        if self.states[node] == NodeState.OFFLINE:
+            self.engines[node] = SnapshotEngine(
+                node, self.n, self.template, self.cfg, run_id=self.run)
+        self.states[node] = NodeState.HEALTHY
+
+    def close(self):
+        for e in self.engines:
+            try:
+                e.close()
+            except Exception:
+                pass
+
+
+class Reft:
+    """User-facing per-trainer facade: policy-scheduled REFT-Sn + REFT-Ckpt.
+
+    With ``auto=True`` it implements Appendix A's adaptive policy: it
+    benchmarks the observed per-step compute time and per-snapshot saving
+    time, derives the effective overhead (Eq. 8) and the optimal snapshot
+    interval (Eq. 9 with the single-node failure rate), and re-tunes
+    ``snapshot_every`` on the fly.
+
+    >>> reft = Reft(group, auto=True, lam_node=1e-4)
+    >>> for step, batch in enumerate(data):
+    ...     state, _ = train_step(state, batch)
+    ...     reft.maybe_snapshot(state, step, extra_meta=data.state())
+    """
+
+    def __init__(self, group: ReftGroup, plan: FrequencyPlan = None,
+                 snapshot_every: int = 1, *, auto: bool = False,
+                 lam_node: float = 1e-4, warmup: int = 4):
+        self.group = group
+        self.plan = plan
+        self.snapshot_every = snapshot_every
+        self.auto = auto
+        self.lam_node = lam_node
+        self.warmup = warmup
+        self._last = -1
+        self._last_call_t: Optional[float] = None
+        self._step_times: List[float] = []
+
+    def _retune(self):
+        from repro.core.policy import (effective_save_overhead,
+                                       optimal_interval)
+        stats = [e.stats for e in self.group.engines
+                 if e.stats["snapshots"] > 0]
+        if not stats or len(self._step_times) < self.warmup:
+            return
+        t_comp = sum(self._step_times[-self.warmup:]) / self.warmup
+        t_sn = max(s["seconds"] / s["snapshots"] for s in stats)
+        o_save = effective_save_overhead(t_sn, t_comp)
+        t_opt = optimal_interval(o_save, self.lam_node)
+        # interval in steps; o_save==0 -> snapshot every step (Figure 4)
+        self.snapshot_every = max(1, int(t_opt / max(t_comp, 1e-9)))
+
+    def maybe_snapshot(self, state, step, extra_meta=None, wait=False):
+        now = time.time()
+        if self._last_call_t is not None:
+            self._step_times.append(now - self._last_call_t)
+        self._last_call_t = now
+        if self.auto:
+            self._retune()
+        if step - self._last >= self.snapshot_every:
+            if self.group.snapshot(state, step, extra_meta, wait=wait):
+                self._last = step
+                return True
+        return False

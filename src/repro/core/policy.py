@@ -1,0 +1,118 @@
+"""Reliability model and optimal-frequency policy (paper §5 + Appendix A).
+
+Implements:
+  Eq. 1   Weibull single-node survival        P = exp(-lam * t^c)
+  Eq. 2   REFT survival (<=1 node loss / SG)  P_re_survive
+  Eq. 3   checkpoint-only survival            P_ck_survive
+  Eq. 5   classic optimal interval            T = sqrt(2 O_save / lam)
+  Eq. 7   REFT unrecoverable-failure rate     lam_re_fail
+  Eq. 8   effective saving overhead           O_save = relu(T_ft - T_comp)
+  Eq. 9-11 optimal snapshot/checkpoint intervals
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+
+
+def weibull_survival(lam: float, t: float, c: float = 1.0) -> float:
+    """Eq. 1: cumulative survival probability of one node at time t."""
+    return math.exp(-lam * (t ** c))
+
+
+def reft_survival(k: int, n: int, t: float, *, lam_hw: float,
+                  lam_smp: float = 0.0, c: float = 1.0) -> float:
+    """Eq. 2: parameters survive iff every SG of n nodes has <=1 hardware
+    failure and all SMPs are healthy. k = total nodes, k/n SGs."""
+    assert k % n == 0, "k must be a multiple of the SG size"
+    ps = weibull_survival(lam_hw, t, c)
+    p_sg = ps ** n + n * (1.0 - ps) * ps ** (n - 1)
+    p_smp = weibull_survival(lam_smp, t, c) ** k
+    return (p_sg ** (k // n)) * p_smp
+
+
+def ckpt_survival(k: int, t: float, *, lam_hw: float, lam_sw: float,
+                  c: float = 1.0) -> float:
+    """Eq. 3: without REFT, in-memory parameters survive only if every node
+    survives both hardware and software failures."""
+    ps = weibull_survival(lam_hw, t, c)
+    ptr = weibull_survival(lam_sw, t, c)
+    return (ps ** k) * (ptr ** k)
+
+
+def safe_horizon(survive_fn, threshold: float = 0.9,
+                 t_max: float = 1e5) -> float:
+    """Largest t (bisection) with survive_fn(t) >= threshold (Fig. 8's
+    '16.22 days vs 0.5 days' numbers)."""
+    lo, hi = 0.0, t_max
+    if survive_fn(hi) >= threshold:
+        return hi
+    for _ in range(200):
+        mid = 0.5 * (lo + hi)
+        if survive_fn(mid) >= threshold:
+            lo = mid
+        else:
+            hi = mid
+    return lo
+
+
+def reft_fail_rate(lam_node: float, n: int) -> float:
+    """Eq. 7: rate of >=2 failures within an SG of n nodes (the only event
+    that forces a restart from a persisted checkpoint)."""
+    p = lam_node
+    return 1.0 - (1.0 - p) ** n - n * p * (1.0 - p) ** (n - 1)
+
+
+def effective_save_overhead(t_ft: float, t_comp: float) -> float:
+    """Eq. 8: only the part of the fault-tolerance time not hidden behind
+    compute counts: O = 0.5 (|T_ft - T_comp| + T_ft - T_comp) = relu(.)"""
+    return 0.5 * (abs(t_ft - t_comp) + t_ft - t_comp)
+
+
+def optimal_interval(o_save: float, lam_fail: float) -> float:
+    """Eq. 5: T = sqrt(2 O_save / lambda). O_save==0 -> snapshot every step
+    (interval 0 means 'as often as possible')."""
+    if lam_fail <= 0:
+        return math.inf
+    return math.sqrt(2.0 * max(o_save, 0.0) / lam_fail)
+
+
+@dataclass(frozen=True)
+class FrequencyPlan:
+    snapshot_interval: float      # seconds between REFT-Sn snapshots
+    checkpoint_interval: float    # seconds between REFT-Ckpt persists
+    o_snapshot: float
+    o_checkpoint: float
+    lam_node: float
+    lam_unrecoverable: float
+
+
+def plan_frequencies(*, t_snapshot: float, t_checkpoint: float,
+                     t_comp: float, lam_node: float, n: int
+                     ) -> FrequencyPlan:
+    """Appendix A, Eqs. 9-11: snapshot interval against single-node failures
+    (REFT-Sn repairs those); checkpoint interval against the rare >=2-per-SG
+    event (Eq. 7)."""
+    o_sn = effective_save_overhead(t_snapshot, t_comp)
+    o_ck = effective_save_overhead(t_checkpoint, t_comp)
+    lam_un = reft_fail_rate(lam_node, n)
+    return FrequencyPlan(
+        snapshot_interval=optimal_interval(o_sn, lam_node),
+        checkpoint_interval=optimal_interval(o_sn, lam_un),
+        o_snapshot=o_sn,
+        o_checkpoint=o_ck,
+        lam_node=lam_node,
+        lam_unrecoverable=lam_un,
+    )
+
+
+def total_overhead(t_total: float, t_save_interval: float, o_save: float,
+                   lam_fail: float, t_sch: float = 0.0,
+                   t_load: float = 0.0) -> float:
+    """Eq. 4: O_total = O_save * T/T_save + O_restart * T * lambda, where
+    O_restart = T_save/2 (average lost recomputation) + T_sch + T_load."""
+    if t_save_interval <= 0:
+        return math.inf
+    o_restart = t_save_interval / 2.0 + t_sch + t_load
+    return (o_save * t_total / t_save_interval
+            + o_restart * t_total * lam_fail)

@@ -1,0 +1,143 @@
+"""RAIM5 — Redundant Array of Independent Memory 5 (paper §4.3).
+
+The SG's full state (W bytes) is cut into n stripes x (n-1) equal blocks.
+Layout (matches Figure 7): stripe s keeps its parity on node s; data block
+j of stripe s lives on node (s + 1 + j) mod n.  Each node therefore:
+
+  * persists (n-1) data blocks  (its 1/n shard of W), and
+  * additionally snapshots the (n-1) blocks of its parity stripe —
+    "doubling the snapshotting parameter size" — XORs them locally into
+    one parity block, then releases them.
+
+Any single node loss per SG is decodable: the dead node's parity is
+re-encoded from survivors, and each of its data blocks is XOR-decoded from
+its stripe's parity + surviving siblings.
+
+XOR runs on uint64 lanes on the host (paper: "byte-wise on the CPU"); the
+TPU-side Pallas kernel (kernels/xor_parity.py) is the beyond-paper
+on-accelerator variant.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, List, Sequence, Tuple
+
+import numpy as np
+
+
+def block_size(total_bytes: int, n: int) -> int:
+    """Equal block size (padded up) for n nodes: n*(n-1) blocks cover W."""
+    nblocks = n * (n - 1)
+    return -(-total_bytes // nblocks)           # ceil
+
+
+@dataclass(frozen=True)
+class BlockRef:
+    stripe: int
+    index: int                                   # data block index in stripe
+
+    def byte_range(self, bs: int, n: int) -> Tuple[int, int]:
+        blk = self.stripe * (n - 1) + self.index
+        return blk * bs, (blk + 1) * bs
+
+
+def node_of_block(stripe: int, index: int, n: int) -> int:
+    return (stripe + 1 + index) % n
+
+
+def data_blocks_of_node(node: int, n: int) -> List[BlockRef]:
+    """The (n-1) data blocks stored on `node` (one per stripe != node)."""
+    out = []
+    for s in range(n):
+        if s == node:
+            continue
+        j = (node - s - 1) % n
+        assert node_of_block(s, j, n) == node and 0 <= j < n - 1
+        out.append(BlockRef(s, j))
+    return out
+
+
+def parity_stripe_of_node(node: int, n: int) -> List[BlockRef]:
+    """Blocks XOR-ed into the parity that `node` stores (its own stripe)."""
+    return [BlockRef(node, j) for j in range(n - 1)]
+
+
+def snapshot_ranges(node: int, n: int, total_bytes: int
+                    ) -> List[Tuple[int, int]]:
+    """Byte ranges this node must snapshot: own data blocks + parity-stripe
+    blocks (the doubled traffic of §4.3), clipped to total_bytes."""
+    bs = block_size(total_bytes, n)
+    refs = data_blocks_of_node(node, n) + parity_stripe_of_node(node, n)
+    out = []
+    for r in refs:
+        lo, hi = r.byte_range(bs, n)
+        out.append((min(lo, total_bytes), min(hi, total_bytes)))
+    return out
+
+
+def xor_blocks(blocks: Sequence[np.ndarray]) -> np.ndarray:
+    """XOR-reduce equal-length byte blocks on uint64 lanes."""
+    assert blocks, "no blocks"
+    n = blocks[0].nbytes
+    pad = (-n) % 8
+    acc = None
+    for b in blocks:
+        assert b.nbytes == n
+        v = b.reshape(-1).view(np.uint8)
+        if pad:
+            v = np.concatenate([v, np.zeros(pad, np.uint8)])
+        v64 = v.view(np.uint64)
+        acc = v64.copy() if acc is None else np.bitwise_xor(acc, v64, out=acc)
+    return acc.view(np.uint8)[:n]
+
+
+def encode_parity(node: int, n: int, full_state: np.ndarray) -> np.ndarray:
+    """Parity block for `node`'s stripe, from the (replicated) full state.
+    Blocks beyond total_bytes are zero-padded (XOR identity)."""
+    bs = block_size(full_state.nbytes, n)
+    blocks = []
+    for ref in parity_stripe_of_node(node, n):
+        lo, hi = ref.byte_range(bs, n)
+        blk = np.zeros(bs, np.uint8)
+        a, b = min(lo, full_state.nbytes), min(hi, full_state.nbytes)
+        if b > a:
+            blk[:b - a] = full_state[a:b]
+        blocks.append(blk)
+    return xor_blocks(blocks)
+
+
+def decode_node(failed: int, n: int, total_bytes: int,
+                read_block, read_parity) -> Dict[Tuple[int, int], np.ndarray]:
+    """Reconstruct every data block of `failed`.
+
+    read_block(node, stripe, index) -> np.uint8[bs]   (from survivor SMPs)
+    read_parity(node) -> np.uint8[bs]
+    Returns {(stripe, index): bytes} for the failed node's blocks.
+    """
+    bs = block_size(total_bytes, n)
+    out = {}
+    for ref in data_blocks_of_node(failed, n):
+        s = ref.stripe
+        assert s != failed
+        siblings = [read_block(node_of_block(s, j, n), s, j)
+                    for j in range(n - 1) if j != ref.index]
+        parity = read_parity(s)                  # stripe s parity on node s
+        out[(s, ref.index)] = xor_blocks(siblings + [parity])
+    return out
+
+
+def reassemble(n: int, total_bytes: int, read_block,
+               recovered: Dict[Tuple[int, int], np.ndarray] = None
+               ) -> np.ndarray:
+    """Full state bytes from all data blocks (survivors + recovered)."""
+    bs = block_size(total_bytes, n)
+    recovered = recovered or {}
+    full = np.zeros(n * (n - 1) * bs, np.uint8)
+    for s in range(n):
+        for j in range(n - 1):
+            lo, hi = BlockRef(s, j).byte_range(bs, n)
+            blk = recovered.get((s, j))
+            if blk is None:
+                blk = read_block(node_of_block(s, j, n), s, j)
+            full[lo:hi] = blk
+    return full[:total_bytes]

@@ -1,0 +1,161 @@
+"""Recovery paths (paper §3 step 5, §4.2 "Loading", §4.3 decoding).
+
+Three tiers, tried in order:
+  1. software failure (trainer died, SMPs alive): reassemble the full state
+     from every SG member's in-memory shard;
+  2. single node failure per SG: RAIM5-decode the dead node's blocks from
+     survivors' shards + parities, then reassemble;
+  3. >1 node failure in an SG: fall back to the last persisted REFT-Ckpt.
+"""
+from __future__ import annotations
+
+import glob
+import os
+import pickle
+from typing import Any, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core import raim5
+from repro.core.smp import NodeLayout, ReadOnlyNode
+from repro.core.treebytes import FlatSpec, buffer_to_tree
+
+
+class RecoveryError(RuntimeError):
+    pass
+
+
+def attach_survivors(run: str, nodes: List[int], n: int, total_bytes: int
+                     ) -> Dict[int, ReadOnlyNode]:
+    views = {}
+    for node in nodes:
+        try:
+            views[node] = ReadOnlyNode(run, node, n, total_bytes)
+        except (FileNotFoundError, RuntimeError):
+            pass
+    return views
+
+
+def common_step(views: Dict[int, ReadOnlyNode]) -> Optional[int]:
+    """Newest step CLEAN on *every* surviving view."""
+    sets = [set(v.clean_steps()) for v in views.values()]
+    if not sets:
+        return None
+    common = set.intersection(*sets)
+    return max(common) if common else None
+
+
+def verify_crc(view: ReadOnlyNode, step: int, n: int,
+               total_bytes: int) -> bool:
+    """Recompute the snapshot's own-shard checksum (written by the engine
+    at save time). Detects silent in-memory corruption — a corrupt member
+    is treated like a failed node and repaired from RAIM5 parity."""
+    import zlib
+    try:
+        meta = pickle.loads(view.meta(step))
+    except Exception:
+        return False
+    expect = meta.get("crc_own")
+    if expect is None:                       # legacy snapshot: no checksum
+        return True
+    # the engine streams the own region contiguously (full blocks incl.
+    # the zero padding of the tail block), so one pass over it suffices
+    buf = view.read_own(step)
+    span = total_bytes if n == 1 else view.layout.own_bytes
+    return zlib.crc32(buf[:span]) == expect
+
+
+def _read_block_fn(views, step):
+    def read_block(node, stripe, index):
+        return views[node].read_block(step, stripe, index)
+    return read_block
+
+
+def restore_bytes(views: Dict[int, ReadOnlyNode], n: int, total_bytes: int,
+                  step: int, failed: Optional[int] = None) -> np.ndarray:
+    """Full state bytes at `step`; RAIM5-decodes `failed`'s blocks if set."""
+    if n == 1:
+        (view,) = views.values()
+        return view.read_own(step)[:total_bytes].copy()
+    recovered = None
+    if failed is not None:
+        recovered = raim5.decode_node(
+            failed, n, total_bytes,
+            read_block=_read_block_fn(views, step),
+            read_parity=lambda s: views[s].read_parity(step))
+    return raim5.reassemble(n, total_bytes, _read_block_fn(views, step),
+                            recovered)
+
+
+def restore_state(run: str, n: int, total_bytes: int, template: Any,
+                  alive_nodes: List[int]) -> Tuple[Any, int, dict]:
+    """End-to-end in-memory restore. Returns (state_tree, step, extra_meta).
+
+    Raises RecoveryError when more than one node per SG is gone (tier 3
+    must take over).
+    """
+    views = attach_survivors(run, alive_nodes, n, total_bytes)
+    try:
+        step = common_step(views)
+        if step is None:
+            raise RecoveryError("no common clean snapshot across survivors")
+        # integrity: corrupt members are demoted to "failed" and repaired
+        corrupt = [node for node, v in views.items()
+                   if not verify_crc(v, step, n, total_bytes)]
+        for node in corrupt:
+            views.pop(node).close()
+        missing = sorted(set(range(n)) - set(views))
+        if len(missing) > 1:
+            raise RecoveryError(
+                f"{len(missing)} members unusable in one SG (dead: "
+                f"{sorted(set(range(n)) - set(alive_nodes))}, corrupt: "
+                f"{corrupt}); RAIM5 protects exactly one")
+        failed = missing[0] if missing else None
+        buf = restore_bytes(views, n, total_bytes, step, failed)
+        any_view = next(iter(views.values()))
+        meta = pickle.loads(any_view.meta(step))
+        spec = FlatSpec.from_json(meta["spec"])
+        tree = buffer_to_tree(template, spec, buf)
+        return tree, step, meta.get("extra", {})
+    finally:
+        for v in views.values():
+            v.close()
+
+
+# --------------------------------------------------------------- tier 3
+def latest_checkpoint_step(ckpt_dir: str) -> Optional[int]:
+    steps = set()
+    for p in glob.glob(os.path.join(ckpt_dir, "step-*-node-*.reft")):
+        steps.add(int(os.path.basename(p).split("-")[1]))
+    return max(steps) if steps else None
+
+
+def restore_from_checkpoint(ckpt_dir: str, n: int, template: Any,
+                            step: Optional[int] = None
+                            ) -> Tuple[Any, int, dict]:
+    """Rebuild from REFT-Ckpt files (each node persisted shard+parity)."""
+    step = latest_checkpoint_step(ckpt_dir) if step is None else step
+    if step is None:
+        raise RecoveryError("no checkpoints available")
+    shards = {}
+    head = None
+    for node in range(n):
+        path = os.path.join(ckpt_dir, f"step-{step}-node-{node}.reft")
+        with open(path, "rb") as f:
+            head = pickle.load(f)
+            shards[node] = np.frombuffer(f.read(), np.uint8)
+    total = head["total_bytes"]
+    lay = NodeLayout(n, total)
+    if n == 1:
+        buf = shards[0][:total]
+    else:
+        def read_block(node, stripe, index):
+            refs = raim5.data_blocks_of_node(node, n)
+            li = next(i for i, r in enumerate(refs)
+                      if (r.stripe, r.index) == (stripe, index))
+            return shards[node][li * lay.bs:(li + 1) * lay.bs]
+        buf = raim5.reassemble(n, total, read_block)
+    meta = pickle.loads(head["meta"])
+    spec = FlatSpec.from_json(meta["spec"])
+    tree = buffer_to_tree(template, spec, buf)
+    return tree, head["step"], meta.get("extra", {})

@@ -1,0 +1,379 @@
+"""Snapshot Management Process (paper §4.2).
+
+The SMP is a real OS process whose lifecycle is independent of the training
+process.  Data flow (Figure 6): the trainer writes tiny buckets into a
+shared-memory staging ring; the SMP copies data buckets into the *dirty*
+snapshot buffer and XOR-accumulates parity-stripe buckets straight into the
+dirty buffer's parity area ("intermediary tensors are released after use").
+On `end`, the dirty buffer becomes the new *clean* snapshot.  Three buffers
+rotate (dirty / clean / previous-clean) — the paper's "at most 3x" memory
+bound — so survivors always share at least one common consistent step even
+if a node dies mid-snapshot.
+
+Buffers live in *named* POSIX shared memory, so recovery can read a dead
+trainer's clean snapshot without the trainer, and the coordinator can
+RAIM5-decode across surviving nodes' segments.  Node failure is simulated
+by killing the SMP and unlinking its segments.
+"""
+from __future__ import annotations
+
+import os
+import pickle
+import struct
+import time
+from dataclasses import dataclass
+from multiprocessing import get_context
+from multiprocessing.shared_memory import SharedMemory
+from typing import Optional
+
+import numpy as np
+
+from repro.core import raim5
+
+_MP = get_context("spawn")
+
+NBUF = 3
+CTL_SLOTS = 2 + 2 * NBUF      # [magic, latest_clean_idx, (step,state)*NBUF]
+ST_FREE, ST_DIRTY, ST_CLEAN = 0, 1, 2
+MAGIC = 0x5EF7
+META_SLOT = 1 << 20           # per-buffer metadata slot (step-consistent)
+
+
+def _seg(run: str, node: int, what: str) -> str:
+    return f"reft-{run}-n{node}-{what}"
+
+
+class _Shm(SharedMemory):
+    """SharedMemory whose destructor tolerates numpy views that are still
+    alive at interpreter exit (close is always attempted explicitly first;
+    this only silences the cosmetic late-GC BufferError)."""
+
+    def __del__(self):
+        try:
+            super().__del__()
+        except BufferError:
+            pass
+
+
+def _create(name: str, size: int) -> SharedMemory:
+    try:
+        old = _Shm(name=name, track=False)
+        old.close()
+        old.unlink()
+    except FileNotFoundError:
+        pass
+    return _Shm(name=name, create=True, size=max(size, 1), track=False)
+
+
+def _attach(name: str) -> SharedMemory:
+    return _Shm(name=name, track=False)
+
+
+@dataclass(frozen=True)
+class NodeLayout:
+    """Byte layout of one node's snapshot buffer for an SG of n nodes."""
+    n: int
+    total_bytes: int            # full state W of the SG
+
+    @property
+    def bs(self) -> int:
+        return raim5.block_size(self.total_bytes, self.n) if self.n > 1 else \
+            self.total_bytes
+
+    @property
+    def own_bytes(self) -> int:
+        return (self.n - 1) * self.bs if self.n > 1 else self.total_bytes
+
+    @property
+    def parity_bytes(self) -> int:
+        return self.bs if self.n > 1 else 0
+
+    @property
+    def buf_bytes(self) -> int:
+        return self.own_bytes + self.parity_bytes
+
+
+# ---------------------------------------------------------------- process
+def _smp_main(conn, run: str, node: int, n: int, total_bytes: int,
+              stage_slots: int, bucket_bytes: int, sem):
+    lay = NodeLayout(n, total_bytes)
+    stage = _create(_seg(run, node, "stage"), stage_slots * bucket_bytes)
+    bufs = [_create(_seg(run, node, f"buf{i}"), lay.buf_bytes)
+            for i in range(NBUF)]
+    ctl_shm = _create(_seg(run, node, "ctl"), CTL_SLOTS * 8)
+    ctl = np.ndarray((CTL_SLOTS,), np.int64, ctl_shm.buf)
+    ctl[:] = 0
+    ctl[0] = MAGIC
+    ctl[1] = -1                                    # no clean buffer yet
+    meta_shm = _create(_seg(run, node, "meta"), NBUF * META_SLOT)
+
+    stage_np = np.ndarray((stage_slots, bucket_bytes), np.uint8, stage.buf)
+    buf_np = [np.ndarray((lay.buf_bytes,), np.uint8, b.buf) for b in bufs]
+
+    dirty = -1
+    try:
+        while True:
+            msg = conn.recv()
+            op = msg[0]
+            if op == "begin":
+                _, step = msg
+                # pick the oldest non-clean-latest buffer as dirty
+                latest = int(ctl[1])
+                prev_steps = [(int(ctl[2 + 2 * i]), i) for i in range(NBUF)
+                              if i != latest]
+                dirty = min(prev_steps)[1]
+                ctl[2 + 2 * dirty] = step
+                ctl[3 + 2 * dirty] = ST_DIRTY
+                if lay.parity_bytes:
+                    buf_np[dirty][lay.own_bytes:] = 0
+            elif op == "bucket":
+                _, slot, kind, dst, nb = msg
+                src = stage_np[slot, :nb]
+                if kind == 0:                      # own data block bytes
+                    buf_np[dirty][dst:dst + nb] = src
+                else:                              # parity-stripe bytes: XOR
+                    dview = buf_np[dirty][lay.own_bytes + dst:
+                                          lay.own_bytes + dst + nb]
+                    np.bitwise_xor(dview, src, out=dview)
+                sem.release()
+            elif op == "end":
+                _, step, meta_blob = msg
+                base = dirty * META_SLOT
+                mb = memoryview(meta_shm.buf)
+                mb[base:base + 8] = struct.pack("<q", len(meta_blob))
+                mb[base + 8:base + 8 + len(meta_blob)] = meta_blob
+                ctl[2 + 2 * dirty] = step
+                ctl[3 + 2 * dirty] = ST_CLEAN
+                ctl[1] = dirty                     # atomic-enough publish
+                dirty = -1
+                conn.send(("clean", step))
+            elif op == "persist":
+                _, path = msg
+                _persist(path, run, node, lay, ctl, buf_np, meta_shm)
+                conn.send(("persisted", path))
+            elif op == "ping":
+                conn.send(("pong", time.time()))
+            elif op == "stop":
+                break
+    except (EOFError, KeyboardInterrupt):
+        # Training side vanished (software failure). The paper's SMP keeps
+        # the clean snapshot alive; we simply keep segments and exit our
+        # loop when told, but here we *stay alive* awaiting a reconnect
+        # signal is not possible over a broken pipe -> idle-hold the
+        # segments until killed.
+        try:
+            while True:
+                time.sleep(0.2)
+        except KeyboardInterrupt:
+            pass
+    finally:
+        import gc
+        del stage_np, buf_np, ctl
+        gc.collect()
+        for s in [stage, ctl_shm, meta_shm] + bufs:
+            try:
+                s.close()
+            except Exception:
+                pass
+
+
+def _persist(path, run, node, lay, ctl, buf_np, meta_shm):
+    latest = int(ctl[1])
+    if latest < 0:
+        raise RuntimeError("no clean snapshot to persist")
+    step = int(ctl[2 + 2 * latest])
+    base = latest * META_SLOT
+    mlen = struct.unpack("<q", bytes(meta_shm.buf[base:base + 8]))[0]
+    meta = bytes(meta_shm.buf[base + 8:base + 8 + mlen])
+    tmp = path + ".tmp"
+    with open(tmp, "wb") as f:
+        head = {"node": node, "n": lay.n, "total_bytes": lay.total_bytes,
+                "step": step, "meta": meta}
+        pickle.dump(head, f)
+        f.write(buf_np[latest].tobytes())
+        f.flush()
+        os.fsync(f.fileno())
+    os.replace(tmp, path)
+
+
+# ---------------------------------------------------------------- handles
+class SMPHandle:
+    """Trainer-side handle to one node's SMP."""
+
+    def __init__(self, run: str, node: int, n: int, total_bytes: int, *,
+                 stage_slots: int = 8, bucket_bytes: int = 4 << 20):
+        self.run, self.node, self.n = run, node, n
+        self.layout = NodeLayout(n, total_bytes)
+        self.stage_slots = stage_slots
+        self.bucket_bytes = bucket_bytes
+        self._sem = _MP.BoundedSemaphore(stage_slots)
+        self._conn, child = _MP.Pipe()
+        self.proc = _MP.Process(
+            target=_smp_main,
+            args=(child, run, node, n, total_bytes, stage_slots,
+                  bucket_bytes, self._sem),
+            daemon=True, name=f"smp-{run}-n{node}")
+        self.proc.start()
+        child.close()
+        self._stage = None
+        self._slot = 0
+        self._wait_segments()
+
+    def _wait_segments(self, timeout=20.0):
+        t0 = time.time()
+        while time.time() - t0 < timeout:
+            try:
+                self._stage = _attach(_seg(self.run, self.node, "stage"))
+                self._stage_np = np.ndarray(
+                    (self.stage_slots, self.bucket_bytes), np.uint8,
+                    self._stage.buf)
+                return
+            except (FileNotFoundError, ValueError):
+                # ValueError: segment exists but isn't ftruncate'd yet
+                # (attach raced the SMP's shm_open) — retry
+                time.sleep(0.01)
+        raise TimeoutError("SMP did not come up")
+
+    # -- snapshot protocol -------------------------------------------------
+    def begin(self, step: int):
+        self._conn.send(("begin", int(step)))
+
+    def send_bucket(self, kind: int, dst: int, payload: np.ndarray):
+        self._sem.acquire()
+        slot = self._slot
+        self._slot = (self._slot + 1) % self.stage_slots
+        nb = payload.nbytes
+        self._stage_np[slot, :nb] = payload.reshape(-1).view(np.uint8)
+        self._conn.send(("bucket", slot, kind, int(dst), nb))
+
+    def end(self, step: int, meta_blob: bytes) -> None:
+        self._conn.send(("end", int(step), meta_blob))
+
+    def wait_clean(self, timeout=60.0) -> int:
+        if not self._conn.poll(timeout):
+            raise TimeoutError("SMP ack timeout")
+        tag, step = self._conn.recv()
+        assert tag == "clean", tag
+        return step
+
+    def persist(self, path: str, timeout=120.0) -> str:
+        self._conn.send(("persist", path))
+        if not self._conn.poll(timeout):
+            raise TimeoutError("persist timeout")
+        tag, p = self._conn.recv()
+        assert tag == "persisted", tag
+        return p
+
+    def alive(self) -> bool:
+        return self.proc.is_alive()
+
+    def stop(self):
+        try:
+            self._conn.send(("stop",))
+        except (BrokenPipeError, OSError):
+            pass
+        self.proc.join(timeout=5)
+        if self.proc.is_alive():
+            self.proc.kill()
+        self._stage_np = None
+        import gc
+        gc.collect()
+        if self._stage is not None:
+            self._stage.close()
+            self._stage = None
+        ReadOnlyNode.unlink_node(self.run, self.node)
+
+    def kill(self):
+        """Simulate an SMP software crash (segments survive)."""
+        self.proc.kill()
+        self.proc.join()
+        self.release()
+
+    def release(self):
+        """Drop this handle's shm mappings (no unlink, no proc changes)."""
+        self._stage_np = None
+        import gc
+        gc.collect()
+        if self._stage is not None:
+            try:
+                self._stage.close()
+            except BufferError:
+                pass
+            self._stage = None
+
+
+class ReadOnlyNode:
+    """Recovery-side view of a node's SMP segments (attach by name)."""
+
+    def __init__(self, run: str, node: int, n: int, total_bytes: int):
+        self.run, self.node = run, node
+        self.layout = NodeLayout(n, total_bytes)
+        self._ctl_shm = _attach(_seg(run, node, "ctl"))
+        if self._ctl(0) != MAGIC:
+            self._ctl_shm.close()
+            raise RuntimeError("bad ctl magic")
+        self._bufs = [_attach(_seg(run, node, f"buf{i}")) for i in range(NBUF)]
+        self._meta = _attach(_seg(run, node, "meta"))
+
+    def _ctl(self, i: int) -> int:
+        """Read one ctl slot without keeping exported pointers alive."""
+        return struct.unpack_from("<q", self._ctl_shm.buf, i * 8)[0]
+
+    def clean_steps(self) -> dict:
+        """{step: buf_idx} of all CLEAN buffers."""
+        out = {}
+        for i in range(NBUF):
+            if self._ctl(3 + 2 * i) == ST_CLEAN:
+                out[self._ctl(2 + 2 * i)] = i
+        return out
+
+    def latest_clean(self) -> Optional[int]:
+        idx = self._ctl(1)
+        return None if idx < 0 else self._ctl(2 + 2 * idx)
+
+    def _buf(self, step: int) -> np.ndarray:
+        idx = self.clean_steps()[step]
+        shm = self._bufs[idx]
+        # copy: callers keep results after close(), and the segment may be
+        # unlinked under us (simulated node failure)
+        return np.ndarray((self.layout.buf_bytes,), np.uint8, shm.buf).copy()
+
+    def meta(self, step: int) -> bytes:
+        idx = self.clean_steps()[step]
+        base = idx * META_SLOT
+        mlen = struct.unpack("<q", bytes(self._meta.buf[base:base + 8]))[0]
+        return bytes(self._meta.buf[base + 8:base + 8 + mlen])
+
+    def read_own(self, step: int) -> np.ndarray:
+        return self._buf(step)[:self.layout.own_bytes]
+
+    def read_block(self, step: int, stripe: int, index: int) -> np.ndarray:
+        """One of this node's data blocks, addressed by (stripe, index)."""
+        lay = self.layout
+        refs = raim5.data_blocks_of_node(self.node, lay.n)
+        local = next(i for i, r in enumerate(refs)
+                     if (r.stripe, r.index) == (stripe, index))
+        return self._buf(step)[local * lay.bs:(local + 1) * lay.bs]
+
+    def read_parity(self, step: int) -> np.ndarray:
+        lay = self.layout
+        return self._buf(step)[lay.own_bytes:lay.own_bytes + lay.parity_bytes]
+
+    def close(self):
+        for s in [self._ctl_shm, self._meta] + self._bufs:
+            try:
+                s.close()
+            except Exception:
+                pass
+
+    @staticmethod
+    def unlink_node(run: str, node: int):
+        """Simulated node failure / final cleanup: drop all segments."""
+        for what in (["stage", "ctl", "meta"] +
+                     [f"buf{i}" for i in range(NBUF)]):
+            try:
+                s = SharedMemory(name=_seg(run, node, what), track=False)
+                s.close()
+                s.unlink()
+            except FileNotFoundError:
+                pass

@@ -1,0 +1,117 @@
+"""Flat byte-stream view of a train-state pytree.
+
+REFT shards, XOR-encodes, and snapshots *byte ranges*, not tensors: the whole
+state (params + optimizer moments + step + RNG key) is laid out as one
+contiguous logical byte stream so that (a) SG members get exactly-equal
+orthogonal shards, (b) RAIM5 parity blocks line up across nodes, and
+(c) restore is a single pass.  Leaf order is the deterministic pytree
+flatten order; a JSON-able spec records (path, shape, dtype, offset).
+"""
+from __future__ import annotations
+
+import json
+from dataclasses import dataclass
+from typing import Any, Iterator, List, Tuple
+
+import numpy as np
+
+import jax
+
+
+def _path_str(path) -> str:
+    return jax.tree_util.keystr(path)
+
+
+@dataclass(frozen=True)
+class LeafSpec:
+    path: str
+    shape: Tuple[int, ...]
+    dtype: str
+    offset: int
+    nbytes: int
+
+
+@dataclass(frozen=True)
+class FlatSpec:
+    leaves: Tuple[LeafSpec, ...]
+    total_bytes: int
+    treedef_repr: str
+
+    def to_json(self) -> str:
+        return json.dumps({
+            "total_bytes": self.total_bytes,
+            "treedef": self.treedef_repr,
+            "leaves": [[l.path, list(l.shape), l.dtype, l.offset, l.nbytes]
+                       for l in self.leaves],
+        })
+
+    @classmethod
+    def from_json(cls, s: str) -> "FlatSpec":
+        d = json.loads(s)
+        leaves = tuple(LeafSpec(p, tuple(sh), dt, off, nb)
+                       for p, sh, dt, off, nb in d["leaves"])
+        return cls(leaves=leaves, total_bytes=d["total_bytes"],
+                   treedef_repr=d["treedef"])
+
+
+def make_flat_spec(tree: Any) -> FlatSpec:
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    leaves: List[LeafSpec] = []
+    off = 0
+    for path, leaf in flat:
+        arr = np.asarray(leaf) if not hasattr(leaf, "dtype") else leaf
+        nbytes = int(np.prod(arr.shape)) * np.dtype(arr.dtype).itemsize \
+            if arr.shape else np.dtype(arr.dtype).itemsize
+        leaves.append(LeafSpec(_path_str(path), tuple(arr.shape),
+                               str(np.dtype(arr.dtype)), off, nbytes))
+        off += nbytes
+    return FlatSpec(tuple(leaves), off, str(treedef))
+
+
+def leaf_arrays(tree: Any):
+    """Leaves in the same order as the spec, as host-transferable arrays."""
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    return [leaf for _, leaf in flat]
+
+
+def tree_to_buffer(tree: Any, spec: FlatSpec, out: np.ndarray,
+                   lo: int = 0, hi: int = None) -> None:
+    """Copy the byte range [lo, hi) of the flat stream into `out` (uint8,
+    length hi-lo). Device->host transfer happens leaf-slice by leaf-slice."""
+    hi = spec.total_bytes if hi is None else hi
+    assert out.nbytes >= hi - lo
+    leaves = leaf_arrays(tree)
+    for ls, leaf in zip(spec.leaves, leaves):
+        a, b = max(lo, ls.offset), min(hi, ls.offset + ls.nbytes)
+        if a >= b:
+            continue
+        host = np.asarray(leaf)                 # d2h for jax arrays
+        raw = host.reshape(-1).view(np.uint8)[a - ls.offset:b - ls.offset]
+        out[a - lo:b - lo] = raw
+
+
+def buffer_to_tree(template: Any, spec: FlatSpec, buf: np.ndarray) -> Any:
+    """Rebuild a pytree (host numpy leaves) from the full flat buffer."""
+    assert buf.nbytes >= spec.total_bytes
+    flat, treedef = jax.tree_util.tree_flatten(template)
+    out = []
+    for ls in spec.leaves:
+        raw = buf[ls.offset:ls.offset + ls.nbytes]
+        arr = raw.view(np.dtype(ls.dtype))
+        out.append(arr.reshape(ls.shape).copy())
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def iter_buckets(lo: int, hi: int, bucket_bytes: int
+                 ) -> Iterator[Tuple[int, int]]:
+    """Tiny-bucket ranges covering [lo, hi) (paper §4.1)."""
+    a = lo
+    while a < hi:
+        b = min(a + bucket_bytes, hi)
+        yield a, b
+        a = b
+
+
+def crc32_of(buf: np.ndarray) -> int:
+    import zlib
+    return zlib.crc32(buf.tobytes()) & 0xFFFFFFFF

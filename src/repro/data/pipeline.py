@@ -1,0 +1,88 @@
+"""Deterministic synthetic data pipeline + dry-run input specs.
+
+`input_specs(cfg, shape)` returns ShapeDtypeStruct stand-ins for every model
+input — the dry-run lowers against these with zero device allocation.  The
+modality carve-out lives here: audio/VLM configs receive precomputed
+frame/patch embeddings of the documented shape instead of raw media.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import InputShape, ModelConfig
+
+
+def _text_len(cfg: ModelConfig, seq_len: int) -> int:
+    if cfg.family == "vlm":
+        return seq_len - cfg.num_patches
+    return seq_len
+
+
+def batch_shapes(cfg: ModelConfig, shape: InputShape) -> dict:
+    """Name -> (shape, dtype) for the given (arch, input-shape)."""
+    B, S = shape.global_batch, shape.seq_len
+    embed_dt = jnp.dtype(cfg.dtype)
+    if shape.kind == "decode":
+        return {"tokens": ((B, 1), jnp.int32)}
+    out = {}
+    if cfg.family == "vlm":
+        out["patches"] = ((B, cfg.num_patches, cfg.d_model), embed_dt)
+        out["tokens"] = ((B, _text_len(cfg, S)), jnp.int32)
+        out["labels"] = ((B, S), jnp.int32)
+    elif not cfg.embed_inputs:                  # audio frames
+        out["frames"] = ((B, S, cfg.d_model), embed_dt)
+        out["labels"] = ((B, S), jnp.int32)
+    else:
+        out["tokens"] = ((B, S), jnp.int32)
+        out["labels"] = ((B, S), jnp.int32)
+    return out
+
+
+def input_specs(cfg: ModelConfig, shape: InputShape) -> dict:
+    return {k: jax.ShapeDtypeStruct(s, d)
+            for k, (s, d) in batch_shapes(cfg, shape).items()}
+
+
+def make_batch(cfg: ModelConfig, shape: InputShape, seed: int = 0) -> dict:
+    """Concrete deterministic batch (smoke tests / examples)."""
+    rng = np.random.default_rng(seed)
+    out = {}
+    for k, (s, d) in batch_shapes(cfg, shape).items():
+        if jnp.dtype(d) == jnp.int32:
+            hi = cfg.vocab_size if k in ("tokens", "labels") else 2
+            out[k] = jnp.asarray(rng.integers(0, hi, size=s, dtype=np.int64),
+                                 jnp.int32)
+        else:
+            out[k] = jnp.asarray(rng.standard_normal(s), d)
+    return out
+
+
+class SyntheticDataset:
+    """Deterministic, restartable token stream.
+
+    `state()`/`restore()` give the exact RNG position — this is the "RNG
+    state" the paper's snapshots must capture for bit-exact resume.
+    """
+
+    def __init__(self, cfg: ModelConfig, shape: InputShape, seed: int = 0):
+        self.cfg, self.shape, self.seed = cfg, shape, seed
+        self._step = 0
+
+    def state(self) -> dict:
+        return {"seed": self.seed, "step": self._step}
+
+    def restore(self, state: dict) -> None:
+        self.seed = int(state["seed"])
+        self._step = int(state["step"])
+
+    def __next__(self) -> dict:
+        batch = make_batch(self.cfg, self.shape,
+                           seed=hash((self.seed, self._step)) % (2 ** 31))
+        self._step += 1
+        return batch
+
+    def __iter__(self):
+        return self

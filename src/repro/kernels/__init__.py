@@ -1,0 +1,16 @@
+"""Pallas TPU kernels for the perf-critical hot spots:
+
+* xor_parity    — RAIM5 parity encode/decode (the paper's EC hot loop,
+                  moved on-accelerator as a beyond-paper option)
+* ssd_scan      — Mamba2 chunked state-space-duality scan
+* swa_attention — banded (sliding-window) flash attention
+
+Each kernel ships <name>.py (pl.pallas_call + BlockSpec), a jit'd wrapper
+in ops.py, and a pure-jnp oracle in ref.py, swept in tests/.
+"""
+from repro.kernels.ops import (
+    ssd_scan, swa_attention, xor_parity_decode, xor_parity_encode,
+)
+
+__all__ = ["ssd_scan", "swa_attention", "xor_parity_decode",
+           "xor_parity_encode"]

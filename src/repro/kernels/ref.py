@@ -1,0 +1,45 @@
+"""Pure-jnp oracles for every Pallas kernel (shape/dtype-swept in tests)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def xor_reduce_ref(blocks: jax.Array) -> jax.Array:
+    """blocks: (k, n) uint32 -> (n,) uint32."""
+    out = blocks[0]
+    for i in range(1, blocks.shape[0]):
+        out = jnp.bitwise_xor(out, blocks[i])
+    return out
+
+
+def ssd_scan_ref(u, a, Bm, Cm, h0=None):
+    """Naive SSD recurrence (same semantics as models.ssm.ssd_scan_ref).
+
+    u: (B,S,H,P) fp32; a: (B,S,H) log-decay; Bm/Cm: (B,S,N).
+    Returns (y (B,S,H,P), h_final (B,H,P,N)).
+    """
+    from repro.models.ssm import ssd_scan_ref as _r
+    return _r(u, a, Bm, Cm, h0=h0)
+
+
+def swa_attention_ref(q, k, v, *, window, causal=True):
+    """Naive masked softmax attention.
+
+    q: (B,Sq,KV,G,hd), k/v: (B,Sk,KV,hd); window: python int or FULL.
+    """
+    B, Sq, KV, G, hd = q.shape
+    Sk = k.shape[1]
+    s = jnp.einsum("bqkgh,bskh->bkgqs", q, k,
+                   preferred_element_type=jnp.float32) * (hd ** -0.5)
+    qpos = jnp.arange(Sq)[:, None]
+    kpos = jnp.arange(Sk)[None, :]
+    ok = jnp.ones((Sq, Sk), bool)
+    if causal:
+        ok = ok & (kpos <= qpos)
+    ok = ok & (qpos - kpos < window) & (kpos - qpos < window)
+    s = jnp.where(ok[None, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bkgqs,bskh->bqkgh", p.astype(v.dtype), v)

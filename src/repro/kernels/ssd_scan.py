@@ -1,0 +1,104 @@
+"""Chunked Mamba2 SSD scan as a Pallas TPU kernel.
+
+Grid is (B, H, num_chunks) with the chunk axis innermost and *sequential*;
+the inter-chunk recurrent state lives in the `h_out` block (whose index map
+ignores the chunk index, so Pallas keeps it resident in VMEM across the
+whole scan and flushes it once per (batch, head)).  Within a chunk the
+computation is three (Q,Q)/(Q,N)/(N,P) matmuls — MXU work — exactly the
+state-space-duality trade the paper family targets.
+
+Tile choices: Q (chunk) = 128 rows, P (head dim) and N (state) are already
+TPU-lane-sized (64/128); everything fp32 in VMEM.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _ssd_kernel(u_ref, a_ref, b_ref, c_ref, h0_ref, y_ref, h_ref):
+    nc = pl.num_programs(2)
+    ci = pl.program_id(2)
+
+    u = u_ref[0, 0, 0]                    # (Q, P)
+    a = a_ref[0, 0, 0]                    # (Q,)
+    Bm = b_ref[0, 0]                      # (Q, N) — shared across heads
+    Cm = c_ref[0, 0]                      # (Q, N)
+    Q = u.shape[0]
+
+    @pl.when(ci == 0)
+    def _init():
+        h_ref[0, 0] = h0_ref[0, 0]        # (N, P)
+
+    h = h_ref[0, 0]                       # (N, P) carried state
+
+    cum = jnp.cumsum(a)                   # (Q,)
+    rel = cum[:, None] - cum[None, :]     # (Q, Q) <= 0 on the lower triangle
+    rows = jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 0)
+    cols = jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 1)
+    L = jnp.where(rows >= cols, jnp.exp(rel), 0.0)
+
+    scores = jnp.dot(Cm, Bm.T, preferred_element_type=jnp.float32)   # (Q,Q)
+    y_intra = jnp.dot(scores * L, u, preferred_element_type=jnp.float32)
+
+    y_inter = jnp.dot(Cm, h, preferred_element_type=jnp.float32) \
+        * jnp.exp(cum)[:, None]                                      # (Q,P)
+
+    dec = jnp.exp(cum[-1] - cum)          # (Q,)
+    state = jnp.dot((Bm * dec[:, None]).T, u,
+                    preferred_element_type=jnp.float32)              # (N,P)
+    h_ref[0, 0] = h * jnp.exp(cum[-1]) + state
+
+    y_ref[0, 0, 0] = y_intra + y_inter
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("chunk", "interpret"))
+def ssd_scan(u, a, Bm, Cm, h0=None, *, chunk: int = 128,
+             interpret: bool = True):
+    """u: (B,S,H,P) fp32; a: (B,S,H); Bm/Cm: (B,S,N).
+    Returns (y (B,S,H,P), h_final (B,H,P,N)) — same contract as
+    models.ssm.ssd_chunked."""
+    B, S, H, P = u.shape
+    N = Bm.shape[-1]
+    Q = min(chunk, S)
+    while S % Q:
+        Q -= 1
+    nc = S // Q
+
+    u_c = u.astype(jnp.float32).transpose(0, 2, 1, 3) \
+        .reshape(B, H, nc, Q, P)
+    a_c = a.astype(jnp.float32).transpose(0, 2, 1).reshape(B, H, nc, Q)
+    b_c = Bm.astype(jnp.float32).reshape(B, nc, Q, N)
+    c_c = Cm.astype(jnp.float32).reshape(B, nc, Q, N)
+    if h0 is None:
+        h0 = jnp.zeros((B, H, N, P), jnp.float32)
+    else:
+        h0 = jnp.swapaxes(h0, -1, -2).astype(jnp.float32)   # (B,H,N,P)
+
+    y, h = pl.pallas_call(
+        _ssd_kernel,
+        grid=(B, H, nc),
+        in_specs=[
+            pl.BlockSpec((1, 1, 1, Q, P), lambda b, h, c: (b, h, c, 0, 0)),
+            pl.BlockSpec((1, 1, 1, Q), lambda b, h, c: (b, h, c, 0)),
+            pl.BlockSpec((1, 1, Q, N), lambda b, h, c: (b, c, 0, 0)),
+            pl.BlockSpec((1, 1, Q, N), lambda b, h, c: (b, c, 0, 0)),
+            pl.BlockSpec((1, 1, N, P), lambda b, h, c: (b, h, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, 1, Q, P), lambda b, h, c: (b, h, c, 0, 0)),
+            pl.BlockSpec((1, 1, N, P), lambda b, h, c: (b, h, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, H, nc, Q, P), jnp.float32),
+            jax.ShapeDtypeStruct((B, H, N, P), jnp.float32),
+        ],
+        interpret=interpret,
+    )(u_c, a_c, b_c, c_c, h0)
+
+    y = y.reshape(B, H, S, P).transpose(0, 2, 1, 3)
+    return y, jnp.swapaxes(h, -1, -2)                        # (B,H,P,N)

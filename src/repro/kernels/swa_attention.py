@@ -1,0 +1,127 @@
+"""Sliding-window flash attention as a Pallas TPU kernel.
+
+Grid (heads, q_blocks, kv_blocks), kv innermost & sequential.  The output
+block's index map ignores the kv index, so the (bq, hd) accumulator stays
+resident in VMEM across the kv sweep; running max / normalizer live in two
+small side outputs with the same trick.  Out-of-band (window / causal)
+blocks are skipped with @pl.when — on TPU this saves the MXU work for all
+blocks outside the band, which is the point of SWA: O(S*W) not O(S^2).
+
+GQA layout: q heads are flattened to (B*KV*G); the kv index map divides by
+G so grouped queries share one KV block fetch.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, *,
+                  bq, bk, window, causal, scale):
+    iq = pl.program_id(1)
+    ik = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    q_lo = iq * bq
+    k_lo = ik * bk
+
+    @pl.when(ik == 0)
+    def _init():
+        m_ref[0] = jnp.full((bq,), NEG_INF, jnp.float32)
+        l_ref[0] = jnp.zeros((bq,), jnp.float32)
+        o_ref[0] = jnp.zeros(o_ref.shape[1:], jnp.float32)
+
+    # band test: does this kv block intersect the allowed region?
+    needed = jnp.bool_(True)
+    if causal:
+        needed = needed & (k_lo <= q_lo + bq - 1)
+    if window is not None:
+        needed = needed & (k_lo + bk - 1 >= q_lo - window + 1)
+        if not causal:
+            needed = needed & (k_lo <= q_lo + bq - 1 + window)
+
+    @pl.when(needed)
+    def _compute():
+        q = q_ref[0].astype(jnp.float32)              # (bq, hd)
+        k = k_ref[0].astype(jnp.float32)              # (bk, hd)
+        v = v_ref[0].astype(jnp.float32)              # (bk, hd)
+        s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+        qpos = q_lo + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+        kpos = k_lo + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        ok = jnp.ones((bq, bk), jnp.bool_)
+        if causal:
+            ok = ok & (kpos <= qpos)
+        if window is not None:
+            ok = ok & (qpos - kpos < window) & (kpos - qpos < window)
+        s = jnp.where(ok, s, NEG_INF)
+
+        m_prev = m_ref[0]
+        l_prev = l_ref[0]
+        o_prev = o_ref[0]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        corr = jnp.exp(m_prev - m_new)
+        m_ref[0] = m_new
+        l_ref[0] = l_prev * corr + jnp.sum(p, axis=1)
+        o_ref[0] = o_prev * corr[:, None] + \
+            jnp.dot(p, v, preferred_element_type=jnp.float32)
+
+    @pl.when(ik == nk - 1)
+    def _fin():
+        o_ref[0] = o_ref[0] / jnp.maximum(l_ref[0], 1e-30)[:, None]
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "window", "causal", "block_q", "block_k", "interpret"))
+def swa_flash(q, k, v, *, window=None, causal=True, block_q=128,
+              block_k=128, interpret=True):
+    """q: (B,Sq,KV,G,hd); k/v: (B,Sk,KV,hd); window: static int or None.
+    Returns (B,Sq,KV,G,hd) fp32-accumulated, cast back to q.dtype."""
+    B, Sq, KV, G, hd = q.shape
+    Sk = k.shape[1]
+    bq = min(block_q, Sq)
+    while Sq % bq:
+        bq //= 2
+    bk = min(block_k, Sk)
+    while Sk % bk:
+        bk //= 2
+    nq, nk = Sq // bq, Sk // bk
+    BH = B * KV * G
+    BKV = B * KV
+
+    qf = q.reshape(B, Sq, KV * G, hd).transpose(0, 2, 1, 3) \
+        .reshape(BH, Sq, hd)
+    kf = k.transpose(0, 2, 1, 3).reshape(BKV, Sk, hd)
+    vf = v.transpose(0, 2, 1, 3).reshape(BKV, Sk, hd)
+
+    kernel = functools.partial(_flash_kernel, bq=bq, bk=bk, window=window,
+                               causal=causal, scale=hd ** -0.5)
+    o, m, l = pl.pallas_call(
+        kernel,
+        grid=(BH, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, bq, hd), lambda h, i, j: (h, i, 0)),
+            pl.BlockSpec((1, bk, hd), lambda h, i, j: (h // G, j, 0)),
+            pl.BlockSpec((1, bk, hd), lambda h, i, j: (h // G, j, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, bq, hd), lambda h, i, j: (h, i, 0)),
+            pl.BlockSpec((1, bq), lambda h, i, j: (h, i)),
+            pl.BlockSpec((1, bq), lambda h, i, j: (h, i)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((BH, Sq, hd), jnp.float32),
+            jax.ShapeDtypeStruct((BH, nq * bq), jnp.float32),
+            jax.ShapeDtypeStruct((BH, nq * bq), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qf, kf, vf)
+
+    o = o.reshape(B, KV * G, Sq, hd).transpose(0, 2, 1, 3) \
+        .reshape(B, Sq, KV, G, hd)
+    return o.astype(q.dtype)

@@ -1,0 +1,185 @@
+"""Mamba2 (SSD — state-space duality) block, pure JAX.
+
+Training/prefill uses the *chunked* SSD algorithm (matmul-dominated, TPU
+MXU-friendly — this is also the oracle for the Pallas `ssd_scan` kernel);
+decode uses the O(1)-state recurrent step.  All decays are exp of
+non-positive cumulative sums, so no rescaling tricks are needed.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init, pdtype_of, rms_norm, init_rms
+
+DEFAULT_CHUNK = 256
+
+
+def init_ssm(key, cfg):
+    D, di, N, H, W = (cfg.d_model, cfg.d_inner, cfg.ssm_state,
+                      cfg.ssm_heads, cfg.ssm_conv_width)
+    pd = pdtype_of(cfg)
+    ks = jax.random.split(key, 6)
+    ch = di + 2 * N
+    return {
+        "in_proj": dense_init(ks[0], (D, 2 * di + 2 * N + H), pd),
+        "conv_w": dense_init(ks[1], (W, ch), pd, scale=W ** -0.5),
+        "conv_b": jnp.zeros((ch,), pd),
+        "A_log": jnp.zeros((H,), jnp.float32),          # A = -exp(A_log) = -1
+        "dt_bias": jnp.full((H,), 0.5, jnp.float32),
+        "D_skip": jnp.ones((H,), jnp.float32),
+        "gate_norm": init_rms(di, pd),
+        "out_proj": dense_init(ks[5], (di, D), pd),
+    }
+
+
+def _split_proj(p, cfg, x):
+    di, N, H = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    z, xbc_dt = jnp.split(x @ p["in_proj"], [di], axis=-1)
+    xbc, dt = jnp.split(xbc_dt, [di + 2 * N], axis=-1)
+    return z, xbc, dt                                    # dt: (..., H)
+
+
+def _conv_full(p, xbc):
+    """Causal depthwise conv over the sequence. xbc: (B, S, ch)."""
+    W = p["conv_w"].shape[0]
+    pad = jnp.pad(xbc, ((0, 0), (W - 1, 0), (0, 0)))
+    out = sum(pad[:, i:i + xbc.shape[1], :] * p["conv_w"][i] for i in range(W))
+    return jax.nn.silu(out + p["conv_b"])
+
+
+def _conv_step(p, xbc1, conv_state):
+    """xbc1: (B, ch) current input; conv_state: (B, W-1, ch)."""
+    W = p["conv_w"].shape[0]
+    window = jnp.concatenate([conv_state, xbc1[:, None, :]], axis=1)  # (B,W,ch)
+    out = jnp.einsum("bwc,wc->bc", window, p["conv_w"]) + p["conv_b"]
+    new_state = window[:, 1:, :]
+    return jax.nn.silu(out), new_state
+
+
+def _gates(p, cfg, dt, xs):
+    """dt (B,S,H) raw -> (a, u): log-decay and scaled input."""
+    A = -jnp.exp(p["A_log"])                             # (H,) negative
+    dtp = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    a = dtp * A                                          # (B,S,H) <= 0
+    u = xs * dtp[..., None].astype(xs.dtype)             # (B,S,H,P)
+    return a, u
+
+
+# ------------------------------------------------------------- SSD cores
+def ssd_chunked(u, a, Bm, Cm, h0=None, chunk=DEFAULT_CHUNK):
+    """Chunked SSD. u: (B,S,H,P) fp32; a: (B,S,H) log-decay (<=0);
+    Bm/Cm: (B,S,N). Returns (y (B,S,H,P), h_final (B,H,P,N))."""
+    B, S, H, Pd = u.shape
+    N = Bm.shape[-1]
+    Q = min(chunk, S)
+    while S % Q:
+        Q -= 1
+    nc = S // Q
+    uc = u.reshape(B, nc, Q, H, Pd)
+    ac = a.reshape(B, nc, Q, H)
+    Bc = Bm.reshape(B, nc, Q, N)
+    Cc = Cm.reshape(B, nc, Q, N)
+
+    cum = jnp.cumsum(ac, axis=2)                          # (B,nc,Q,H)
+    # intra-chunk: L[t,s] = exp(cum[t]-cum[s]) for s<=t
+    rel = cum[:, :, :, None, :] - cum[:, :, None, :, :]   # (B,nc,Q,Q,H)
+    tri = jnp.tril(jnp.ones((Q, Q), bool))
+    L = jnp.where(tri[None, None, :, :, None], jnp.exp(rel), 0.0)
+    scores = jnp.einsum("bntm,bnsm->bnts", Cc, Bc,
+                        preferred_element_type=jnp.float32)
+    y_intra = jnp.einsum("bnts,bntsh,bnshp->bnthp", scores, L, uc)
+
+    # chunk states: S_n = sum_s exp(cum[-1]-cum[s]) B[s] (x) u[s]
+    dec = jnp.exp(cum[:, :, -1:, :] - cum)                # (B,nc,Q,H)
+    states = jnp.einsum("bnsh,bnsm,bnshp->bnhpm", dec, Bc, uc)
+
+    # inter-chunk recurrence over nc
+    if h0 is None:
+        h0 = jnp.zeros((B, H, Pd, N), u.dtype)
+    chunk_decay = jnp.exp(cum[:, :, -1, :])               # (B,nc,H)
+
+    def body(h, xs):
+        s_n, d_n = xs                                     # (B,H,P,N), (B,H)
+        h_out = h                                         # state BEFORE chunk
+        h_new = h * d_n[:, :, None, None] + s_n
+        return h_new, h_out
+
+    hs = jnp.moveaxis(states, 1, 0)                       # (nc,B,H,P,N)
+    ds = jnp.moveaxis(chunk_decay, 1, 0)                  # (nc,B,H)
+    h_final, h_prevs = jax.lax.scan(body, h0, (hs, ds))
+    h_prevs = jnp.moveaxis(h_prevs, 0, 1)                 # (B,nc,H,P,N)
+
+    y_inter = jnp.einsum("bntm,bnhpm->bnthp", Cc, h_prevs) \
+        * jnp.exp(cum)[..., None]
+    y = (y_intra + y_inter).reshape(B, S, H, Pd)
+    return y, h_final
+
+
+def ssd_scan_ref(u, a, Bm, Cm, h0=None):
+    """Naive per-step recurrence (oracle for ssd_chunked and the kernel)."""
+    B, S, H, Pd = u.shape
+    N = Bm.shape[-1]
+    if h0 is None:
+        h0 = jnp.zeros((B, H, Pd, N), u.dtype)
+
+    def body(h, xs):
+        u_t, a_t, b_t, c_t = xs
+        h = h * jnp.exp(a_t)[:, :, None, None] \
+            + jnp.einsum("bhp,bm->bhpm", u_t, b_t)
+        y_t = jnp.einsum("bhpm,bm->bhp", h, c_t)
+        return h, y_t
+
+    xs = (jnp.moveaxis(u, 1, 0), jnp.moveaxis(a, 1, 0),
+          jnp.moveaxis(Bm, 1, 0), jnp.moveaxis(Cm, 1, 0))
+    h_final, ys = jax.lax.scan(body, h0, xs)
+    return jnp.moveaxis(ys, 0, 1), h_final
+
+
+# ------------------------------------------------------------- block api
+def ssm_block(p, cfg, x, h0=None, chunk=DEFAULT_CHUNK, use_kernel=False):
+    """Full-sequence mamba2 block. x: (B,S,D) -> (y, (conv_state, h_final))."""
+    di, N, H, Pd = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    B, S, D = x.shape
+    z, xbc, dt = _split_proj(p, cfg, x)
+    conv_state = xbc[:, -(cfg.ssm_conv_width - 1):, :]    # for decode handoff
+    xbc = _conv_full(p, xbc)
+    xs, Bm, Cm = jnp.split(xbc, [di, di + N], axis=-1)
+    xs = xs.reshape(B, S, H, Pd)
+    a, u = _gates(p, cfg, dt, xs)
+    if use_kernel:
+        from repro.kernels.ops import ssd_scan as _k
+        y, h_final = _k(u.astype(jnp.float32), a,
+                        Bm.astype(jnp.float32), Cm.astype(jnp.float32),
+                        h0=h0, chunk=chunk)
+    else:
+        y, h_final = ssd_chunked(u.astype(jnp.float32), a,
+                                 Bm.astype(jnp.float32),
+                                 Cm.astype(jnp.float32), h0=h0, chunk=chunk)
+    y = y + p["D_skip"][None, None, :, None] * xs.astype(jnp.float32)
+    y = y.reshape(B, S, di).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z), p["gate_norm"])
+    out = y @ p["out_proj"]
+    return out, (conv_state.astype(x.dtype), h_final)
+
+
+def ssm_decode(p, cfg, x, conv_state, h):
+    """One-token step. x: (B,1,D); conv_state: (B,W-1,ch); h: (B,H,P,N)."""
+    di, N, H, Pd = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    B = x.shape[0]
+    z, xbc, dt = _split_proj(p, cfg, x[:, 0, :])
+    xbc, conv_state = _conv_step(p, xbc, conv_state)
+    xs, Bm, Cm = jnp.split(xbc, [di, di + N], axis=-1)
+    xs = xs.reshape(B, H, Pd)
+    A = -jnp.exp(p["A_log"])
+    dtp = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])   # (B,H)
+    decay = jnp.exp(dtp * A)                                       # (B,H)
+    u = xs.astype(jnp.float32) * dtp[..., None]
+    h = h * decay[:, :, None, None] + jnp.einsum(
+        "bhp,bm->bhpm", u, Bm.astype(jnp.float32))
+    y = jnp.einsum("bhpm,bm->bhp", h, Cm.astype(jnp.float32))
+    y = y + p["D_skip"][None, :, None] * xs.astype(jnp.float32)
+    y = y.reshape(B, di).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z), p["gate_norm"])
+    out = (y @ p["out_proj"])[:, None, :]
+    return out, conv_state, h

@@ -1,0 +1,7 @@
+from repro.train.steps import (
+    TrainState, init_train_state, make_train_step, make_prefill_step,
+    make_decode_step,
+)
+
+__all__ = ["TrainState", "init_train_state", "make_train_step",
+           "make_prefill_step", "make_decode_step"]

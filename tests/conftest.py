@@ -1,0 +1,12 @@
+import os
+import sys
+
+# Tests run on 1 CPU device (the dry-run's 512-device flag is NOT set here
+# on purpose — smoke tests and benches must see the real host).
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from hypothesis import settings
+
+settings.register_profile("ci", deadline=None, max_examples=25,
+                          derandomize=True)
+settings.load_profile("ci")

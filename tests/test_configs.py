@@ -1,0 +1,105 @@
+"""Architecture registry: exact assigned numbers + analytic param counts."""
+import pytest
+
+from repro.configs import (ASSIGNED_ARCHS, INPUT_SHAPES, get_config,
+                           list_configs, shape_supported)
+
+
+def test_all_assigned_registered():
+    for a in ASSIGNED_ARCHS:
+        assert get_config(a).name == a
+    assert len(ASSIGNED_ARCHS) == 10
+
+
+EXACT = {
+    "starcoder2-3b": dict(num_layers=30, d_model=3072, num_heads=24,
+                          num_kv_heads=2, d_ff=12288, vocab_size=49152),
+    "hubert-xlarge": dict(num_layers=48, d_model=1280, num_heads=16,
+                          num_kv_heads=16, d_ff=5120, vocab_size=504),
+    "jamba-v0.1-52b": dict(num_layers=32, d_model=4096, num_heads=32,
+                           num_kv_heads=8, d_ff=14336, vocab_size=65536,
+                           num_experts=16, experts_per_token=2),
+    "phi-3-vision-4.2b": dict(num_layers=32, d_model=3072, num_heads=32,
+                              num_kv_heads=32, d_ff=8192, vocab_size=32064),
+    "dbrx-132b": dict(num_layers=40, d_model=6144, num_heads=48,
+                      num_kv_heads=8, d_ff=10752, vocab_size=100352,
+                      num_experts=16, experts_per_token=4),
+    "kimi-k2-1t-a32b": dict(num_layers=61, d_model=7168, num_heads=64,
+                            num_kv_heads=8, d_ff=2048, vocab_size=163840,
+                            num_experts=384, experts_per_token=8),
+    "qwen3-8b": dict(num_layers=36, d_model=4096, num_heads=32,
+                     num_kv_heads=8, d_ff=12288, vocab_size=151936),
+    "mamba2-130m": dict(num_layers=24, d_model=768, d_ff=0,
+                        vocab_size=50280, ssm_state=128),
+    "deepseek-67b": dict(num_layers=95, d_model=8192, num_heads=64,
+                         num_kv_heads=8, d_ff=22016, vocab_size=102400),
+    "gemma3-4b": dict(num_layers=34, d_model=2560, num_heads=8,
+                      num_kv_heads=4, d_ff=10240, vocab_size=262144),
+}
+
+
+@pytest.mark.parametrize("arch", sorted(EXACT))
+def test_exact_assigned_numbers(arch):
+    cfg = get_config(arch)
+    for k, v in EXACT[arch].items():
+        assert getattr(cfg, k) == v, (arch, k)
+
+
+# Analytic parameter counts should land near the model names' headline sizes
+BALLPARK = {
+    "starcoder2-3b": (2.5e9, 4.5e9),
+    "jamba-v0.1-52b": (40e9, 65e9),
+    "phi-3-vision-4.2b": (3.3e9, 5.5e9),
+    "dbrx-132b": (110e9, 150e9),
+    "kimi-k2-1t-a32b": (0.8e12, 1.3e12),
+    "qwen3-8b": (6.5e9, 9.5e9),
+    "mamba2-130m": (0.1e9, 0.2e9),
+    "deepseek-67b": (58e9, 75e9),
+    "gemma3-4b": (3.0e9, 6.0e9),
+    "hubert-xlarge": (0.8e9, 1.4e9),
+}
+
+
+@pytest.mark.parametrize("arch", sorted(BALLPARK))
+def test_param_count_ballpark(arch):
+    n = get_config(arch).param_count()
+    lo, hi = BALLPARK[arch]
+    assert lo <= n <= hi, f"{arch}: {n:,}"
+
+
+def test_kimi_active_params_32b():
+    cfg = get_config("kimi-k2-1t-a32b")
+    a = cfg.active_param_count()
+    assert 20e9 <= a <= 45e9, a        # "a32b"
+    assert a < cfg.param_count() / 10
+
+
+def test_shape_support_matrix():
+    cfg = get_config("hubert-xlarge")
+    assert not shape_supported(cfg, INPUT_SHAPES["decode_32k"])[0]
+    assert not shape_supported(cfg, INPUT_SHAPES["long_500k"])[0]
+    assert shape_supported(cfg, INPUT_SHAPES["train_4k"])[0]
+    # sub-quadratic archs run long_500k
+    for a in ["mamba2-130m", "jamba-v0.1-52b", "gemma3-4b", "starcoder2-3b"]:
+        assert shape_supported(get_config(a), INPUT_SHAPES["long_500k"])[0], a
+    # pure full-attention archs skip it
+    for a in ["qwen3-8b", "deepseek-67b", "dbrx-132b", "kimi-k2-1t-a32b",
+              "phi-3-vision-4.2b"]:
+        assert not shape_supported(get_config(a),
+                                   INPUT_SHAPES["long_500k"])[0], a
+
+
+def test_reduced_is_small():
+    for a in ASSIGNED_ARCHS:
+        r = get_config(a).reduced()
+        assert r.num_layers == 2 and r.d_model <= 512
+        assert r.num_experts <= 4
+        assert r.param_count() < 20e6
+
+
+def test_input_shapes_exact():
+    s = INPUT_SHAPES
+    assert (s["train_4k"].seq_len, s["train_4k"].global_batch) == (4096, 256)
+    assert (s["prefill_32k"].seq_len, s["prefill_32k"].global_batch) == (32768, 32)
+    assert (s["decode_32k"].seq_len, s["decode_32k"].global_batch) == (32768, 128)
+    assert (s["long_500k"].seq_len, s["long_500k"].global_batch) == (524288, 1)

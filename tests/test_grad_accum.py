@@ -1,0 +1,38 @@
+"""Gradient accumulation: microbatched step == full-batch step."""
+import numpy as np
+import pytest
+
+import jax
+
+from repro.configs import get_config
+from repro.configs.base import InputShape
+from repro.data.pipeline import make_batch
+from repro.train.steps import init_train_state, make_train_step
+
+
+@pytest.mark.parametrize("arch", ["qwen3-8b", "mamba2-130m"])
+def test_microbatch_equals_full(arch):
+    cfg = get_config(arch).reduced()
+    shape = InputShape("t", 32, 4, "train")
+    batch = make_batch(cfg, shape, seed=3)
+    s0 = init_train_state(cfg, 0).tree()
+
+    s_full, m_full = jax.jit(make_train_step(cfg))(s0, batch)
+    s_mb, m_mb = jax.jit(make_train_step(cfg, microbatches=2))(s0, batch)
+
+    np.testing.assert_allclose(float(m_full["loss"]), float(m_mb["loss"]),
+                               rtol=1e-5)
+    for a, b in zip(jax.tree.leaves(s_full["params"]),
+                    jax.tree.leaves(s_mb["params"])):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32),
+                                   atol=2e-5, rtol=2e-4)
+
+
+def test_microbatch_requires_divisible_batch():
+    cfg = get_config("qwen3-8b").reduced()
+    shape = InputShape("t", 16, 3, "train")
+    batch = make_batch(cfg, shape, seed=1)
+    s0 = init_train_state(cfg, 0).tree()
+    with pytest.raises(AssertionError):
+        make_train_step(cfg, microbatches=2)(s0, batch)

@@ -1,0 +1,87 @@
+"""Reliability model (Eqs. 1-11) sanity + Figure 8 reproduction."""
+import math
+
+import pytest
+from hypothesis import given, strategies as st
+
+from repro.core import policy
+
+
+def test_weibull_basic():
+    assert policy.weibull_survival(0.0, 100) == 1.0
+    assert policy.weibull_survival(0.1, 0) == 1.0
+    assert 0 < policy.weibull_survival(0.01, 10, 1.3) < 1
+
+
+@given(t=st.floats(0.1, 100), lam=st.floats(1e-6, 1e-2),
+       c=st.floats(0.5, 2.0))
+def test_survival_monotone_decreasing(t, lam, c):
+    assert policy.weibull_survival(lam, t, c) >= \
+        policy.weibull_survival(lam, t * 2, c) - 1e-12
+
+
+@given(k=st.sampled_from([6, 12, 24, 48]), t=st.floats(0.1, 50),
+       lam=st.floats(1e-6, 1e-3))
+def test_reft_beats_checkpoint_survival(k, t, lam):
+    """Eq. 2 vs Eq. 3: REFT's in-memory parameters always survive with at
+    least checkpoint-only probability (same hw rate; sw failures excluded
+    by SMP decoupling)."""
+    n = 6
+    p_re = policy.reft_survival(k, n, t, lam_hw=lam, lam_smp=0.0)
+    p_ck = policy.ckpt_survival(k, t, lam_hw=lam, lam_sw=lam)
+    assert p_re >= p_ck - 1e-12
+
+
+def test_figure8_shape():
+    """3072-GPU system, 6 DP paths (Fig. 8): with hw/sw rates 1e-4, the
+    safe horizon at threshold 0.9 is dramatically longer with REFT."""
+    k, n = 3072 // 4, 6          # nodes of 4 GPUs, SGs of 6
+    k = (k // n) * n
+    lam = 1e-4
+    c = 1.3
+    t_reft = policy.safe_horizon(
+        lambda t: policy.reft_survival(k, n, t, lam_hw=lam, c=c))
+    t_ck = policy.safe_horizon(
+        lambda t: policy.ckpt_survival(k, t, lam_hw=lam, lam_sw=lam, c=c))
+    assert t_reft > 10 * t_ck     # paper reports 16.22d vs 0.5d (32x)
+
+
+def test_optimal_interval_formula():
+    # Eq. 5: T = sqrt(2 O / lam)
+    assert policy.optimal_interval(2.0, 1e-4) == \
+        pytest.approx(math.sqrt(2 * 2.0 / 1e-4))
+    assert policy.optimal_interval(0.0, 1e-4) == 0.0
+    assert policy.optimal_interval(1.0, 0.0) == math.inf
+
+
+@given(lam=st.floats(1e-8, 0.2), n=st.integers(2, 10))
+def test_reft_fail_rate_much_smaller(lam, n):
+    """Eq. 7: needing >=2 failures per SG is strictly rarer than a single
+    failure."""
+    r = policy.reft_fail_rate(lam, n)
+    assert 0 <= r <= 1
+    assert r <= lam * n           # union bound on pairs is way below this
+
+
+def test_effective_save_overhead_relu():
+    assert policy.effective_save_overhead(3.0, 5.0) == 0.0   # fully hidden
+    assert policy.effective_save_overhead(5.0, 3.0) == 2.0
+
+
+def test_plan_frequencies_orders():
+    """Snapshots must be at least as frequent as checkpoints (Eqs. 9-11)."""
+    plan = policy.plan_frequencies(t_snapshot=0.5, t_checkpoint=30.0,
+                                   t_comp=1.0, lam_node=1e-4, n=4)
+    assert plan.snapshot_interval <= plan.checkpoint_interval
+    assert plan.o_snapshot == 0.0         # hidden behind compute
+    assert plan.lam_unrecoverable < 1e-4
+
+
+def test_total_overhead_tradeoff():
+    """Eq. 4 has an interior optimum: the optimal interval beats both a
+    too-frequent and a too-rare schedule."""
+    o_save, lam, T = 2.0, 1e-4, 1e6
+    t_opt = policy.optimal_interval(o_save, lam)
+    f = lambda ts: policy.total_overhead(T, ts, o_save, lam,
+                                         t_sch=30.0, t_load=10.0)
+    assert f(t_opt) <= f(t_opt / 10) and f(t_opt) <= f(t_opt * 10)

@@ -1,0 +1,52 @@
+"""Mesh -> sharding-group plan invariants."""
+import pytest
+from hypothesis import given, strategies as st
+
+from repro.core.sharding_plan import build_plan, plan_summary
+
+
+def test_production_mesh_plan_shape():
+    plans = build_plan(10 ** 9, data=16, model=16, pods=1, chips_per_host=4)
+    s = plan_summary(plans)
+    assert s["hosts"] == 64 and s["sgs"] == 4 and s["sg_size"] == 16
+    # each host saves ~2 * slice/n bytes (own shard + parity stripe)
+    slice_bytes = 10 ** 9 / 4
+    assert s["max_snapshot_bytes_per_host"] < 2.2 * slice_bytes / 16
+
+
+def test_multi_pod_multiplies_sgs_not_size():
+    p1 = plan_summary(build_plan(10 ** 8, pods=1))
+    p2 = plan_summary(build_plan(10 ** 8, pods=2))
+    assert p2["sgs"] == 2 * p1["sgs"]
+    assert p2["sg_size"] == p1["sg_size"]
+
+
+@given(total=st.integers(1, 10 ** 7),
+       data=st.sampled_from([2, 4, 8, 16]),
+       model=st.sampled_from([4, 8, 16]),
+       pods=st.sampled_from([1, 2]))
+def test_every_byte_protected(total, data, model, pods):
+    """Union of all members' OWN data blocks covers each SG slice exactly;
+    ranges never cross slice boundaries."""
+    from repro.core import raim5
+    plans = build_plan(total, data=data, model=model, pods=pods,
+                       chips_per_host=4)
+    slices = {}
+    for p in plans.values():
+        if p.slice_hi > p.slice_lo:
+            slices.setdefault(p.sg_id, (p.slice_lo, p.slice_hi))
+        for a, b in p.snapshot_ranges:
+            assert p.slice_lo <= a <= b <= p.slice_hi
+    # coverage: own-block ranges (first n-1 ranges) across members tile slice
+    for sg, (lo, hi) in slices.items():
+        if pods > 1 and sg[0] > 0:
+            continue
+        members = sorted((p for p in plans.values() if p.sg_id == sg),
+                         key=lambda p: p.member)
+        covered = set()
+        for p in members:
+            own = p.snapshot_ranges[:p.sg_size - 1] if p.sg_size > 1 \
+                else p.snapshot_ranges
+            for a, b in own:
+                covered.update(range(a - lo, b - lo))
+        assert covered == set(range(hi - lo))

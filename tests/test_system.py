@@ -1,0 +1,30 @@
+"""End-to-end behaviour: the training driver with mid-run fault injection
+(deliverable b's driver, exercised as a test)."""
+import sys
+
+import pytest
+
+
+def test_train_driver_with_failures(tmp_path):
+    from repro.launch.train import main
+    rc = main(["--arch", "opt-125m", "--reduced", "--steps", "16",
+               "--batch", "2", "--seq", "64", "--sg-size", "4",
+               "--snapshot-every", "2", "--ckpt-dir", str(tmp_path),
+               "--inject", "6:software", "--inject", "12:node"])
+    assert rc == 0
+
+
+def test_train_driver_no_reft(tmp_path):
+    from repro.launch.train import main
+    rc = main(["--arch", "opt-125m", "--reduced", "--steps", "6",
+               "--batch", "2", "--seq", "64", "--no-reft"])
+    assert rc == 0
+
+
+def test_quickstart_example_runs():
+    sys.path.insert(0, "examples")
+    try:
+        import quickstart
+        quickstart.main()
+    finally:
+        sys.path.pop(0)

@@ -1,0 +1,87 @@
+"""Flat byte-stream <-> pytree roundtrip properties (hypothesis)."""
+import numpy as np
+from hypothesis import given, strategies as st
+
+import jax
+
+from repro.core.treebytes import (
+    buffer_to_tree, crc32_of, iter_buckets, make_flat_spec, tree_to_buffer,
+    FlatSpec,
+)
+
+_DTYPES = [np.float32, np.float64, np.int32, np.int64, np.uint8,
+           np.float16]
+
+
+@st.composite
+def pytrees(draw):
+    rng = np.random.default_rng(draw(st.integers(0, 2 ** 31)))
+    n_leaves = draw(st.integers(1, 8))
+    out = {}
+    for i in range(n_leaves):
+        dt = _DTYPES[draw(st.integers(0, len(_DTYPES) - 1))]
+        ndim = draw(st.integers(0, 3))
+        shape = tuple(draw(st.integers(1, 7)) for _ in range(ndim))
+        arr = (rng.standard_normal(shape) * 100).astype(dt) \
+            if np.issubdtype(dt, np.floating) else \
+            rng.integers(0, 100, size=shape).astype(dt)
+        key = f"leaf{i}"
+        if draw(st.booleans()):
+            out.setdefault("nested", {})[key] = arr
+        else:
+            out[key] = arr
+    return out
+
+
+@given(tree=pytrees())
+def test_roundtrip_bitexact(tree):
+    spec = make_flat_spec(tree)
+    buf = np.zeros(spec.total_bytes, np.uint8)
+    tree_to_buffer(tree, spec, buf)
+    rec = buffer_to_tree(tree, spec, buf)
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(rec)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        assert np.asarray(a).dtype == b.dtype
+
+
+@given(tree=pytrees(), lo_frac=st.floats(0, 1), hi_frac=st.floats(0, 1))
+def test_partial_ranges_compose(tree, lo_frac, hi_frac):
+    spec = make_flat_spec(tree)
+    t = spec.total_bytes
+    full = np.zeros(t, np.uint8)
+    tree_to_buffer(tree, spec, full)
+    cut = int(min(lo_frac, hi_frac) * t)
+    a = np.zeros(cut, np.uint8)
+    b = np.zeros(t - cut, np.uint8)
+    tree_to_buffer(tree, spec, a, 0, cut)
+    tree_to_buffer(tree, spec, b, cut, t)
+    np.testing.assert_array_equal(np.concatenate([a, b]), full)
+
+
+@given(total=st.integers(1, 10000), bucket=st.integers(1, 4096))
+def test_iter_buckets_cover_exactly(total, bucket):
+    ranges = list(iter_buckets(0, total, bucket))
+    assert ranges[0][0] == 0 and ranges[-1][1] == total
+    for (a1, b1), (a2, b2) in zip(ranges, ranges[1:]):
+        assert b1 == a2
+    assert all(b - a <= bucket for a, b in ranges)
+
+
+def test_spec_json_roundtrip():
+    tree = {"a": np.ones((3, 4), np.float32), "b": np.int64(7)}
+    spec = make_flat_spec(tree)
+    spec2 = FlatSpec.from_json(spec.to_json())
+    assert spec2 == spec
+
+
+def test_jax_and_numpy_leaves_equivalent():
+    import jax.numpy as jnp
+    t_np = {"w": np.arange(12, dtype=np.float32).reshape(3, 4)}
+    t_jx = {"w": jnp.arange(12, dtype=jnp.float32).reshape(3, 4)}
+    s1, s2 = make_flat_spec(t_np), make_flat_spec(t_jx)
+    b1 = np.zeros(s1.total_bytes, np.uint8)
+    b2 = np.zeros(s2.total_bytes, np.uint8)
+    tree_to_buffer(t_np, s1, b1)
+    tree_to_buffer(t_jx, s2, b2)
+    np.testing.assert_array_equal(b1, b2)
+    assert crc32_of(b1) == crc32_of(b2)
