@@ -17,6 +17,7 @@ import tempfile
 
 import numpy as np
 
+from repro.api import CheckpointSpec
 from repro.core.cluster import LocalCluster
 from repro.core.policy import reft_fail_rate
 
@@ -32,8 +33,10 @@ def run(episodes: int = EPISODES, seed: int = 0) -> list:
     exact = 0
     for ep in range(episodes):
         with tempfile.TemporaryDirectory() as d:
-            c = LocalCluster(N, seed=100 + ep, nbytes=1 << 14,
-                             snapshot_every=1, ckpt_dir=d)
+            spec = CheckpointSpec(backend="reft", ckpt_dir=d,
+                                  snapshot_every_steps=1,
+                                  bucket_bytes=1 << 20)
+            c = LocalCluster(N, seed=100 + ep, nbytes=1 << 14, spec=spec)
             try:
                 c.run_rounds(ROUNDS)
                 c.checkpoint()

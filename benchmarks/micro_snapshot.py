@@ -1,73 +1,90 @@
-"""Figure 9: single-node micro-benchmark.
+"""Figure 9: single-node micro-benchmark, driven through the facade.
 
-Four simulated GPUs snapshot a synthetic parameter set; we measure (per
-method) the phase speeds actually achievable on this host:
-  d2h        — device->host copy (jax array -> numpy)
-  sha-mem    — staging-ring write + SMP copy (REFT-Sn's extra hop)
-  serialize  — byte-stream framing (CheckFreq/TorchSnapshot phase 2)
-  persist    — disk write
-and the end-to-end 'perf' GB/s of REFT-Sn / REFT-Ckpt / CheckFreq /
-TorchSnapshot, reproducing the figure's ordering.
+Every backend is timed through the SAME `Checkpointer` calls, so the
+comparison is apples-to-apples by construction:
+  reft        — async sharded snapshot to SMP shared memory (REFT-Sn),
+                plus the SMP-side persist (REFT-Ckpt, no trainer time)
+  sync_disk   — blocking full-state disk save
+  async_disk  — CheckFreq-style overlapped full save; with shard=True the
+                TorchSnapshot-style 1/m-per-rank variant (parallel I/O)
+Phase rows (d2h / persist) reproduce the figure's decomposition for the
+disk paths.
+
+    PYTHONPATH=src python benchmarks/micro_snapshot.py [--smoke]
 """
 from __future__ import annotations
 
+import argparse
+import os
+import sys
 import tempfile
 import time
 
-import numpy as np
+if __package__ in (None, ""):                    # `python benchmarks/x.py`
+    sys.path.insert(0, os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))))
 
 from benchmarks.common import make_param_state, tree_bytes
-from repro.ckpt import CheckFreqCheckpointer, TorchSnapshotCheckpointer
-from repro.core.snapshot import ReftConfig, SnapshotEngine
+from repro.api import CheckpointSpec
 
 SIZE = 256 << 20          # 256 MB synthetic state (paper used 20 GB/4 GPUs)
+SMOKE_SIZE = 8 << 20
+
+VARIANTS = [
+    ("reft_sn", "reft", {}),
+    ("sync_disk", "sync_disk", {}),
+    ("checkfreq", "async_disk", {}),
+    ("torchsnapshot", "async_disk", {"shard": True}),
+]
+
+
+def _time_snapshot(ck, state) -> float:
+    ck.snapshot(state, 1, wait=True)                    # warm
+    t0 = time.perf_counter()
+    ck.snapshot(state, 2, wait=True)
+    return time.perf_counter() - t0
 
 
 def run(size: int = SIZE) -> list:
     state = make_param_state(size)
-    nbytes = tree_bytes(state)
-    gb = nbytes / 2 ** 30
+    gb = tree_bytes(state) / 2 ** 30
     rows = []
-
-    # --- REFT-Sn: async sharded snapshot to SMP shared memory
-    eng = SnapshotEngine(0, 1, state, ReftConfig(bucket_bytes=16 << 20))
-    try:
-        eng.snapshot_sync(state, 1)                     # warm
-        t0 = time.perf_counter()
-        eng.snapshot_sync(state, 2)
-        t_sn = time.perf_counter() - t0
-        rows.append(("fig9_reft_sn", t_sn, gb / t_sn))
-
-        # --- REFT-Ckpt: SMP persists its clean buffer (no trainer time)
-        with tempfile.NamedTemporaryFile(suffix=".reft") as f:
-            t0 = time.perf_counter()
-            eng.persist(f.name)
-            t_ck = time.perf_counter() - t0
-        rows.append(("fig9_reft_ckpt", t_ck, gb / t_ck))
-    finally:
-        eng.close()
-
-    # --- CheckFreq (full async ckpt) / TorchSnapshot (sharded async ckpt)
-    for cls, kw, name in [
-            (CheckFreqCheckpointer, {}, "fig9_checkfreq"),
-            (TorchSnapshotCheckpointer, {"n_ranks": 4},
-             "fig9_torchsnapshot")]:
+    for label, backend, opts in VARIANTS:
         with tempfile.TemporaryDirectory() as d:
-            ck = cls(d, state, **kw)
-            ck.save_sync(state, 1)                      # warm
-            t = ck.save_sync(state, 2)
-            rows.append((name, t.total, gb / t.total))
-            rows.append((name + "_d2h", t.d2h, gb / max(t.d2h, 1e-9)))
-            rows.append((name + "_persist", t.persist,
-                         gb / max(t.persist, 1e-9)))
+            spec = CheckpointSpec(backend=backend, ckpt_dir=d, sg_size=4,
+                                  resume=False, options=opts)
+            with spec.build(state) as ck:
+                t = _time_snapshot(ck, state)
+                rows.append((f"fig9_{label}", t, gb / t))
+
+                if backend == "reft":
+                    # REFT-Ckpt: persist runs inside the SMP — the trainer
+                    # only pays the RPC round trip
+                    t0 = time.perf_counter()
+                    ck.persist()
+                    t_ck = time.perf_counter() - t0
+                    rows.append(("fig9_reft_ckpt", t_ck, gb / t_ck))
+                else:
+                    pt = ck.writer.last_times
+                    rows.append((f"fig9_{label}_d2h", pt.d2h,
+                                 gb / max(pt.d2h, 1e-9)))
+                    rows.append((f"fig9_{label}_persist", pt.persist,
+                                 gb / max(pt.persist, 1e-9)))
     return rows
 
 
-def main():
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="small state for CI (seconds, not minutes)")
+    ap.add_argument("--size", type=int, default=None)
+    args = ap.parse_args(argv)
+    size = args.size or (SMOKE_SIZE if args.smoke else SIZE)
     print("bench,seconds,GB_per_s")
-    for name, s, gbps in run():
+    for name, s, gbps in run(size):
         print(f"{name},{s:.4f},{gbps:.2f}")
+    return 0
 
 
 if __name__ == "__main__":
-    main()
+    raise SystemExit(main())

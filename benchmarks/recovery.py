@@ -1,16 +1,30 @@
 """§6.2 restarting & recomputation overhead.
 
-A 4-node lockstep cluster with a fixed per-step compute time is killed
-mid-run; we measure (a) in-memory/RAIM5 recovery wall time, (b) checkpoint
-load wall time, and derive the recomputation each would pay given the
-snapshot vs checkpoint intervals — the paper's '58 s load vs 10 min saved
-recompute' trade.
+Part 1 (the paper's trade): a 4-node lockstep cluster with a fixed
+per-step compute time is killed mid-run; we measure (a) in-memory/RAIM5
+recovery wall time, (b) checkpoint load wall time, and derive the
+recomputation each would pay given the snapshot vs checkpoint intervals —
+the '58 s load vs 10 min saved recompute' trade.
+
+Part 2 (facade sweep): every registered backend saves the same state and
+is timed through the SAME `Checkpointer.restore()` call, so restore-path
+costs are directly comparable across REFT and the disk baselines.
+
+    PYTHONPATH=src python benchmarks/recovery.py [--backend B ...]
 """
 from __future__ import annotations
 
+import argparse
+import os
+import sys
 import tempfile
 import time
 
+if __package__ in (None, ""):                    # `python benchmarks/x.py`
+    sys.path.insert(0, os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))))
+
+from repro.api import CheckpointSpec
 from repro.core.cluster import LocalCluster
 
 STEP_TIME = 0.05
@@ -18,12 +32,18 @@ SNAP_EVERY = 1
 CKPT_AT = 4          # checkpoint taken at this step
 KILL_AT = 12
 
+SWEEP_BYTES = 8 << 20
+SWEEP_BACKENDS = ("reft", "sync_disk", "async_disk")
 
-def run() -> list:
+
+def run_cluster_trade() -> list:
     rows = []
     with tempfile.TemporaryDirectory() as d:
-        c = LocalCluster(4, seed=3, nbytes=8 << 20, snapshot_every=SNAP_EVERY,
-                         step_time=STEP_TIME, ckpt_dir=d)
+        spec = CheckpointSpec(backend="reft", ckpt_dir=d,
+                              snapshot_every_steps=SNAP_EVERY,
+                              bucket_bytes=1 << 20)
+        c = LocalCluster(4, seed=3, nbytes=8 << 20, step_time=STEP_TIME,
+                         spec=spec)
         try:
             c.run_rounds(CKPT_AT)
             c.checkpoint()
@@ -60,11 +80,42 @@ def run() -> list:
     return rows
 
 
-def main():
+def run_backend_sweep(backends=SWEEP_BACKENDS, nbytes=SWEEP_BYTES) -> list:
+    from benchmarks.common import make_param_state
+    rows = []
+    state = make_param_state(nbytes)
+    for backend in backends:
+        with tempfile.TemporaryDirectory() as d:
+            spec = CheckpointSpec(backend=backend, ckpt_dir=d, sg_size=4,
+                                  resume=False)
+            with spec.build(state) as ck:
+                ck.snapshot(state, 1, wait=True)
+                ck.persist()
+                t0 = time.perf_counter()
+                res = ck.restore()
+                t = time.perf_counter() - t0
+                rows.append((f"recover_{backend}_restore", t,
+                             f"tier={res.tier}"))
+    return rows
+
+
+def run() -> list:
+    return run_cluster_trade() + run_backend_sweep()
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--backend", action="append", default=None,
+                    help="restrict the facade sweep (repeatable)")
+    args = ap.parse_args(argv)
+    rows = run_cluster_trade()
+    rows += run_backend_sweep(tuple(args.backend) if args.backend
+                              else SWEEP_BACKENDS)
     print("bench,seconds,derived")
-    for name, s, d in run():
+    for name, s, d in rows:
         print(f"{name},{s:.4f},{d}")
+    return 0
 
 
 if __name__ == "__main__":
-    main()
+    raise SystemExit(main())

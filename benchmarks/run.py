@@ -37,7 +37,11 @@ def main(argv=None):
         t0 = time.time()
         try:
             mod = __import__(mod_name, fromlist=["main"])
-            mod.main()
+            import inspect
+            if inspect.signature(mod.main).parameters:
+                mod.main([])          # don't leak our argv into theirs
+            else:
+                mod.main()
             print(f"--- ok ({time.time()-t0:.1f}s)", flush=True)
         except Exception:
             failures += 1

@@ -3,12 +3,15 @@
 Demonstrates the paper's elastic workflow (Figure 2): healthy lockstep
 training -> software failure (trainer dies, SMP survives) -> in-memory
 resume -> node failure -> RAIM5 decode -> elastic replacement -> a
-double-failure falling back to REFT-Ckpt.
+double-failure falling back to REFT-Ckpt.  The cluster is configured by
+the same `CheckpointSpec` the facade uses, and every recovery goes through
+the shared three-tier ladder.
 
     PYTHONPATH=src python examples/failure_recovery.py
 """
 import numpy as np
 
+from repro.api import CheckpointSpec
 from repro.core.cluster import LocalCluster
 
 
@@ -19,8 +22,10 @@ def bitexact(a, b):
 
 
 def main():
-    c = LocalCluster(4, seed=1, nbytes=1 << 18, snapshot_every=1,
-                     ckpt_dir="/tmp/reft-drill")
+    spec = CheckpointSpec(backend="reft", ckpt_dir="/tmp/reft-drill",
+                          sg_size=4, snapshot_every_steps=1,
+                          bucket_bytes=1 << 20)
+    c = LocalCluster(4, seed=1, nbytes=1 << 18, spec=spec)
     try:
         c.run_rounds(5)
         print("== software failure: SIGKILL trainer on node 1")

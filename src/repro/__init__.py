@@ -1,8 +1,9 @@
 """REFT-JAX: reliable & efficient in-memory fault tolerance for
 hybrid-parallel training — production-grade JAX reproduction.
 
-Subpackages: core (the paper), models, configs, optim, data, dist, ckpt,
-kernels (Pallas TPU), launch, plus tests/ benchmarks/ examples/ at the
-repo root. See README.md / DESIGN.md / EXPERIMENTS.md.
+Subpackages: api (unified checkpointing facade), core (the paper), models,
+configs, optim, data, dist, ckpt, kernels (Pallas TPU), launch, plus
+tests/ benchmarks/ examples/ at the repo root. See README.md / DESIGN.md /
+EXPERIMENTS.md and docs/API.md.
 """
 __version__ = "1.0.0"

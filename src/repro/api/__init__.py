@@ -1,0 +1,24 @@
+"""repro.api — the unified checkpointing facade.
+
+    from repro.api import CheckpointSpec, CheckpointSession
+
+    spec = CheckpointSpec(backend="reft", ckpt_dir="/tmp/run", sg_size=4)
+    with CheckpointSession(spec, state_template) as sess:
+        ...
+        sess.after_step(state, step, extra_meta=ds.state())
+
+Backends: reft | sync_disk | async_disk | null (see docs/API.md).
+"""
+from repro.api.registry import (
+    available_backends, create_checkpointer, register_backend,
+)
+from repro.api.session import CheckpointSession
+from repro.api.types import (
+    Checkpointer, CheckpointSpec, CkptEvent, RestoreResult,
+)
+
+__all__ = [
+    "Checkpointer", "CheckpointSpec", "CheckpointSession", "CkptEvent",
+    "RestoreResult", "available_backends", "create_checkpointer",
+    "register_backend",
+]

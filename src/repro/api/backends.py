@@ -1,0 +1,203 @@
+"""Built-in memory-tier backends: `reft` and `null`.
+
+`reft` wraps the paper's full stack behind the uniform `Checkpointer`
+protocol: a `ReftGroup` of SnapshotEngines (one real SMP process per SG
+member), the three-tier recovery ladder, and `CheckpointManager` retention
+(manifest + keep-latest-k GC) for the persisted REFT-Ckpt tier.
+
+`reft_recovery_ladder` is the single implementation of the tier policy —
+`ReftGroup.recover`, `LocalCluster.recover`, and the facade all route
+through it.
+"""
+from __future__ import annotations
+
+import time
+from typing import Any, List, Optional
+
+from repro.api.registry import register_backend
+from repro.api.types import Checkpointer, CheckpointSpec, RestoreResult
+from repro.core.recovery import (
+    RecoveryError, restore_from_checkpoint, restore_state,
+)
+
+
+def reft_recovery_ladder(run: str, n: int, total_bytes: int, template: Any,
+                         alive_nodes: List[int],
+                         ckpt_dir: str) -> RestoreResult:
+    """Three-tier recovery (paper §3 step 5):
+      in-memory  — every member's SMP segments reachable, plain reassembly;
+      raim5      — exactly one member missing, decode it from parity;
+      checkpoint — >1 member gone, reload the last persisted REFT-Ckpt.
+    """
+    try:
+        info: dict = {}
+        state, step, extra = restore_state(run, n, total_bytes, template,
+                                           alive_nodes, info=info)
+        # tier reflects what the restore actually did: any member that had
+        # to be decoded from parity (gone OR corrupt) makes it raim5
+        repaired = info.get("missing", []) or info.get("corrupt", [])
+        tier = "raim5" if repaired else "in-memory"
+        return RestoreResult(state=state, step=step, extra_meta=extra,
+                             tier=tier)
+    except RecoveryError:
+        state, step, extra = restore_from_checkpoint(ckpt_dir, n, template)
+        return RestoreResult(state=state, step=step, extra_meta=extra,
+                             tier="checkpoint")
+
+
+class ReftCheckpointer(Checkpointer):
+    """REFT behind the facade: async sharded in-memory snapshots (REFT-Sn),
+    SMP-side persistence (REFT-Ckpt) with managed retention, ladder
+    recovery, real fault injection, and elastic healing."""
+
+    name = "reft"
+
+    def __init__(self, spec: CheckpointSpec, state_template: Any):
+        super().__init__(spec)
+        from repro.ckpt.manager import CheckpointManager
+        from repro.core.coordinator import ReftGroup
+        from repro.core.snapshot import ReftConfig
+
+        run_id = spec.run_id or CheckpointSpec.alloc_run_id()
+        rcfg = ReftConfig(
+            bucket_bytes=spec.bucket_bytes,
+            ckpt_dir=spec.ckpt_dir,
+            snapshot_every_steps=spec.snapshot_every_steps,
+            # the session owns persist cadence; disable the group's own
+            checkpoint_every_snapshots=10 ** 9,
+            run_id=run_id,
+            stage_slots=spec.options.get("stage_slots", 8),
+        )
+        self.group = ReftGroup(spec.sg_size, state_template, rcfg)
+        self.manager = CheckpointManager(spec.ckpt_dir, spec.sg_size,
+                                         keep=spec.keep)
+        self._degraded_emitted: set = set()
+
+    # ------------------------------------------------------------- save
+    def snapshot(self, state, step, extra_meta=None, wait=False):
+        t0 = time.perf_counter()
+        started = self.group.snapshot(state, step, extra_meta, wait=wait)
+        if started:
+            self.emit("snapshot", step, seconds=time.perf_counter() - t0,
+                      nbytes=self.group.total_bytes,
+                      detail="" if wait else "async-launch")
+        self._check_degraded(step)
+        return started
+
+    def persist(self, step=None):
+        t0 = time.perf_counter()
+        self.group.wait()
+        s = self.group.checkpoint()
+        manifest = self.manager.commit()
+        if s is not None:
+            self.emit("persist", s, seconds=time.perf_counter() - t0,
+                      detail=f"manifest={manifest['complete_steps']}")
+        return s
+
+    # ---------------------------------------------------------- restore
+    def restore(self, step=None):
+        from repro.core.coordinator import NodeState
+        t0 = time.perf_counter()
+        self.group.wait()                       # drain healthy members
+        # a degraded member's SMP is gone: its segments (if any survive)
+        # hold STALE steps that would drag the common step backwards —
+        # treat it like a failed node and let RAIM5 repair it instead
+        alive = [i for i in range(self.group.n)
+                 if self.group.states[i] != NodeState.OFFLINE
+                 and not self.group.engines[i].degraded]
+        res = reft_recovery_ladder(
+            self.group.run, self.group.n, self.group.total_bytes,
+            self.group.template, alive, self.spec.ckpt_dir)
+        self.emit("restore", res.step, seconds=time.perf_counter() - t0,
+                  tier=res.tier)
+        return res
+
+    # ----------------------------------------------------------- health
+    def _check_degraded(self, step):
+        for e in self.group.engines:
+            if e.degraded and e.node not in self._degraded_emitted:
+                self._degraded_emitted.add(e.node)
+                self.emit("degraded", step, detail=f"node{e.node}:smp-lost")
+
+    def health(self):
+        from repro.core.coordinator import NodeState
+        members = {}
+        degraded = []
+        for e in self.group.engines:
+            st = self.group.states[e.node]
+            bad = e.degraded or st != NodeState.HEALTHY
+            members[e.node] = {
+                "state": st.value,
+                "degraded": e.degraded,
+                "smp_alive": e.smp.alive(),
+                "last_clean_step": e.last_clean_step,
+            }
+            if bad:
+                degraded.append(e.node)
+        return {"healthy": not degraded, "degraded": degraded,
+                "members": members}
+
+    def stats(self):
+        out = super().stats()
+        eng = [e.stats for e in self.group.engines]
+        out["engine_snapshots"] = sum(s["snapshots"] for s in eng)
+        out["engine_bytes_sent"] = sum(s["bytes_sent"] for s in eng)
+        out["engine_seconds"] = sum(s["seconds"] for s in eng)
+        return out
+
+    # ----------------------------------------------------------- faults
+    def inject_failure(self, node=0, kind="software"):
+        if kind == "software":
+            self.group.inject_software_failure(node)
+        elif kind == "node":
+            self.group.inject_node_failure(node)
+        else:
+            raise ValueError(f"unknown failure kind {kind!r}")
+        self.emit("inject", -1, detail=f"{kind}:node{node}")
+
+    def heal(self):
+        for i in range(self.group.n):
+            self.group.heal(i)
+        self._degraded_emitted.clear()        # healed members report anew
+        self.emit("heal", -1)
+
+    def wait(self):
+        self.group.wait()
+
+    def close(self):
+        self.group.close()
+
+
+@register_backend("reft")
+def _make_reft(spec: CheckpointSpec, template: Any) -> Checkpointer:
+    return ReftCheckpointer(spec, template)
+
+
+class NullCheckpointer(Checkpointer):
+    """No fault tolerance at all — the paper's 'no checkpointing' baseline
+    and the overhead floor every other backend is measured against."""
+
+    name = "null"
+
+    def __init__(self, spec: CheckpointSpec, state_template: Any):
+        super().__init__(spec)
+
+    def snapshot(self, state, step, extra_meta=None, wait=False):
+        return True
+
+    def persist(self, step=None):
+        return None
+
+    def restore(self, step=None):
+        raise RecoveryError("null backend keeps nothing to restore")
+
+    def health(self):
+        return {"healthy": True, "degraded": [], "members": {}}
+
+    def close(self):
+        pass
+
+
+@register_backend("null")
+def _make_null(spec: CheckpointSpec, template: Any) -> Checkpointer:
+    return NullCheckpointer(spec, template)

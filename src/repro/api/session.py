@@ -1,0 +1,186 @@
+"""CheckpointSession — the lifecycle object training loops actually hold.
+
+Owns everything the drivers used to hand-wire individually:
+  * run-id allocation (one id per session unless the spec pins one);
+  * snapshot / checkpoint cadence in steps, including the Appendix-A
+    adaptive policy (`auto_tune=True` re-derives the optimal snapshot
+    interval from measured per-step compute and per-snapshot saving time,
+    subsuming the old inline `FrequencyPlan` wiring);
+  * degraded-mode handling — a lost fault-tolerance sidecar must never
+    kill training: degradation is surfaced as events + `health()`, and the
+    loop keeps running;
+  * restore-on-entry — `with CheckpointSession(...) as sess:` resumes from
+    whatever the backend can reconstruct (`sess.restored`), so a relaunched
+    job continues instead of restarting;
+  * a final drain + persist on clean exit.
+
+Typical loop:
+
+    spec = CheckpointSpec(backend="reft", ckpt_dir=..., sg_size=4)
+    with CheckpointSession(spec, state_template) as sess:
+        if sess.restored:
+            state, step = sess.restored.state, sess.restored.step
+        while step < total:
+            state, metrics = train_step(state, batch)
+            sess.after_step(state, step, extra_meta=ds.state())
+"""
+from __future__ import annotations
+
+import time
+from typing import Any, Callable, List, Optional, Sequence
+
+from repro.api.types import (
+    Checkpointer, CheckpointSpec, CkptEvent, RestoreResult,
+)
+from repro.core.recovery import RecoveryError
+
+
+class CheckpointSession:
+    def __init__(self, spec: CheckpointSpec, state_template: Any, *,
+                 on_event: Optional[Callable[[CkptEvent], None]] = None):
+        if spec.run_id is None:
+            spec = spec.with_run_id(CheckpointSpec.alloc_run_id())
+        self.spec = spec
+        self.run_id = spec.run_id
+        self.checkpointer: Checkpointer = spec.build(state_template)
+        self.checkpointer.on_event = on_event
+        self.restored: Optional[RestoreResult] = None
+        self.snapshot_every = max(1, spec.snapshot_every_steps)
+        self.checkpoint_every = max(1, spec.checkpoint_every_steps)
+        self._last_snapshot = -1
+        self._last_persist = -1
+        self._last_call_t: Optional[float] = None
+        self._step_times: List[float] = []
+        self._degraded_seen: set = set()
+
+    # ----------------------------------------------------------- entry
+    def __enter__(self) -> "CheckpointSession":
+        if self.spec.resume:
+            try:
+                self.restored = self.checkpointer.restore()
+            except (RecoveryError, FileNotFoundError):
+                self.restored = None
+        return self
+
+    def __exit__(self, exc_type, exc, tb) -> bool:
+        self.close(final_persist=exc_type is None)
+        return False
+
+    def close(self, final_persist: bool = True):
+        try:
+            if final_persist:
+                try:
+                    self.checkpointer.wait()
+                    if self._last_snapshot >= 0:
+                        self.checkpointer.persist()
+                except Exception as e:
+                    # fault tolerance must not crash a finished run, but a
+                    # failed FINAL persist means the newest durable state
+                    # is stale — say so loudly instead of exiting silent
+                    import sys
+                    print(f"[repro.api] WARNING: final persist failed: "
+                          f"{type(e).__name__}: {e}", file=sys.stderr)
+        finally:
+            self.checkpointer.close()
+
+    # --------------------------------------------------------- cadence
+    def after_step(self, state: Any, step: int,
+                   extra_meta: dict = None) -> dict:
+        """Call once per training step; runs whatever is due.  Returns
+        {"snapshot": bool, "persist": Optional[int]}."""
+        now = time.time()
+        if self._last_call_t is not None:
+            self._step_times.append(now - self._last_call_t)
+        self._last_call_t = now
+        if self.spec.auto_tune:
+            self._retune()
+
+        did = {"snapshot": False, "persist": None}
+        if step - self._last_snapshot >= self.snapshot_every:
+            if self.checkpointer.snapshot(state, step, extra_meta):
+                self._last_snapshot = step
+                did["snapshot"] = True
+        if step - self._last_persist >= self.checkpoint_every:
+            did["persist"] = self.checkpointer.persist()
+            self._last_persist = step
+        self._watch_degraded(step)
+        return did
+
+    def _retune(self):
+        """Appendix A (Eqs. 8-11): effective overhead -> optimal intervals,
+        converted to steps with the measured compute time."""
+        from repro.core.policy import plan_frequencies
+        warmup = 4
+        if len(self._step_times) < warmup:
+            return
+        st = self.checkpointer.stats()
+        # prefer engine-side timing: with async launches the trainer-side
+        # snapshot_seconds is just the (near-zero) thread-start cost, which
+        # would make the tuner conclude snapshots are free
+        n_snap = st.get("engine_snapshots") or st.get("snapshot", 0)
+        if not n_snap:
+            return
+        t_comp = sum(self._step_times[-warmup:]) / warmup
+        t_sn = st.get("engine_seconds",
+                      st.get("snapshot_seconds", 0.0)) / n_snap
+        t_ck = (st.get("persist_seconds", 0.0) / st["persist"]
+                if st.get("persist") else t_sn)
+        plan = plan_frequencies(t_snapshot=t_sn, t_checkpoint=t_ck,
+                                t_comp=t_comp, lam_node=self.spec.lam_node,
+                                n=self.spec.sg_size)
+        self.snapshot_every = max(
+            1, int(plan.snapshot_interval / max(t_comp, 1e-9)))
+        if plan.checkpoint_interval != float("inf"):
+            self.checkpoint_every = max(
+                self.snapshot_every,
+                int(plan.checkpoint_interval / max(t_comp, 1e-9)))
+
+    def _watch_degraded(self, step):
+        h = self.checkpointer.health()
+        for node in h["degraded"]:
+            if node not in self._degraded_seen:
+                self._degraded_seen.add(node)
+
+    # ------------------------------------------------ recovery surface
+    def restore(self, step: Optional[int] = None) -> RestoreResult:
+        """Run the backend's recovery ladder and heal failed members so
+        training can continue with full protection."""
+        res = self.checkpointer.restore(step)
+        self.checkpointer.heal()
+        self._degraded_seen.clear()
+        return res
+
+    def inject(self, kind: str, node: int = 0):
+        """Drain in-flight saves, then simulate a failure."""
+        self.checkpointer.wait()
+        self.checkpointer.inject_failure(node, kind)
+
+    # ------------------------------------------------------ passthrough
+    def snapshot(self, state, step, extra_meta=None, wait=False):
+        ok = self.checkpointer.snapshot(state, step, extra_meta, wait=wait)
+        if ok:
+            self._last_snapshot = step
+        return ok
+
+    def persist(self, step=None):
+        # a manual persist resets the cadence clock too (a persist right
+        # before a cadence boundary should not be repeated at it)
+        self._last_persist = step if step is not None else self._last_snapshot
+        return self.checkpointer.persist(step)
+
+    def wait(self):
+        self.checkpointer.wait()
+
+    def health(self) -> dict:
+        return self.checkpointer.health()
+
+    def stats(self) -> dict:
+        return self.checkpointer.stats()
+
+    @property
+    def events(self) -> Sequence[CkptEvent]:
+        return self.checkpointer.events
+
+    @property
+    def degraded(self) -> bool:
+        return bool(self._degraded_seen)

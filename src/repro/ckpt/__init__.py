@@ -1,7 +1,37 @@
-from repro.ckpt.baselines import (
-    AsyncCheckpointer, CheckFreqCheckpointer, TorchSnapshotCheckpointer,
-    load_checkpoint,
-)
+"""Disk checkpointing: retention manager + legacy baseline names.
 
-__all__ = ["AsyncCheckpointer", "CheckFreqCheckpointer",
-           "TorchSnapshotCheckpointer", "load_checkpoint"]
+The ad-hoc baseline drivers that used to live in `repro.ckpt.baselines`
+were absorbed into the unified facade (`repro.api.disk`); the historical
+class names remain importable here for existing tests and scripts.
+"""
+from repro.api.disk import (
+    DiskWriter, PhaseTimes, latest_complete_step, load_checkpoint,
+)
+from repro.ckpt.manager import CheckpointManager, scan_shards
+
+# legacy aliases (paper §6.1 naming)
+AsyncCheckpointer = DiskWriter
+
+
+class CheckFreqCheckpointer(DiskWriter):
+    """Fully asynchronous, unsharded (CheckFreq [15])."""
+    name = "checkfreq"
+
+    def __init__(self, out_dir, state_template, **kw):
+        kw.pop("shard", None)
+        super().__init__(out_dir, state_template, shard=False, **kw)
+
+
+class TorchSnapshotCheckpointer(DiskWriter):
+    """Sharded along DP paths with parallel I/O (TorchSnapshot [16])."""
+    name = "torchsnapshot"
+
+    def __init__(self, out_dir, state_template, *, n_ranks, **kw):
+        kw.pop("shard", None)
+        super().__init__(out_dir, state_template, n_ranks=n_ranks,
+                         shard=True, **kw)
+
+
+__all__ = ["AsyncCheckpointer", "CheckFreqCheckpointer", "CheckpointManager",
+           "DiskWriter", "PhaseTimes", "TorchSnapshotCheckpointer",
+           "latest_complete_step", "load_checkpoint", "scan_shards"]

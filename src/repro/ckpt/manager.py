@@ -27,6 +27,24 @@ def scan_shards(ckpt_dir: str) -> Dict[int, List[int]]:
     return {s: sorted(ns) for s, ns in out.items()}
 
 
+def plan_gc(families: Dict[int, list], complete: set, keep_steps: set,
+            spare_newest_torn: bool = False) -> List[int]:
+    """Steps to delete under keep-k-complete retention.
+
+    One retention policy for every checkpoint layout (REFT shard families
+    and disk ckpt families): complete families survive iff in
+    `keep_steps`; torn families are garbage, except — when
+    `spare_newest_torn` — the single newest torn family above the newest
+    kept step, which may be a persist currently in flight."""
+    spare = None
+    if spare_newest_torn:
+        newest_kept = max(keep_steps) if keep_steps else -1
+        spare = max((s for s in families
+                     if s not in complete and s > newest_kept), default=None)
+    return [s for s in families
+            if s != spare and not (s in complete and s in keep_steps)]
+
+
 class CheckpointManager:
     def __init__(self, ckpt_dir: str, n_members: int, *, keep: int = 3):
         self.dir = ckpt_dir
@@ -67,18 +85,23 @@ class CheckpointManager:
             return None
 
     def _gc(self, keep_steps: set) -> int:
+        """Drop superseded complete steps AND torn (incomplete) families.
+
+        Torn families used to survive whenever their step was >= the newest
+        kept step, so every crashed partial checkpoint leaked forever; see
+        `plan_gc` for the policy (a possibly in-flight newest torn family
+        is spared)."""
         removed = 0
-        for s, nodes in scan_shards(self.dir).items():
-            complete = nodes == list(range(self.n))
-            if s in keep_steps and complete:
-                continue
-            # drop superseded steps AND incomplete (torn) step families
-            if complete or s < (max(keep_steps) if keep_steps else 0):
-                for node in nodes:
-                    try:
-                        os.remove(os.path.join(
-                            self.dir, f"step-{s}-node-{node}.reft"))
-                        removed += 1
-                    except FileNotFoundError:
-                        pass
+        shards = scan_shards(self.dir)
+        complete = {s for s, nodes in shards.items()
+                    if nodes == list(range(self.n))}
+        for s in plan_gc(shards, complete, set(keep_steps),
+                         spare_newest_torn=True):
+            for node in shards[s]:
+                try:
+                    os.remove(os.path.join(
+                        self.dir, f"step-{s}-node-{node}.reft"))
+                    removed += 1
+                except FileNotFoundError:
+                    pass
         return removed

@@ -20,9 +20,6 @@ from typing import Dict, List, Optional
 
 import numpy as np
 
-from repro.core.recovery import (
-    RecoveryError, restore_from_checkpoint, restore_state,
-)
 from repro.core.smp import ReadOnlyNode
 from repro.core.snapshot import ReftConfig, SnapshotEngine
 from repro.core.treebytes import make_flat_spec
@@ -122,8 +119,18 @@ class LocalCluster:
     def __init__(self, n: int, *, seed: int = 0, nbytes: int = 1 << 16,
                  max_steps: int = 10 ** 6, snapshot_every: int = 1,
                  step_time: float = 0.0, ckpt_dir: str = "/tmp/reft-ckpt",
-                 bucket_bytes: int = 1 << 20, run_id: str = None):
+                 bucket_bytes: int = 1 << 20, run_id: str = None,
+                 spec=None):
         import uuid
+        if spec is not None:                  # repro.api.CheckpointSpec
+            if spec.backend != "reft":
+                raise ValueError(
+                    f"LocalCluster simulates the REFT stack (SMP processes "
+                    f"+ RAIM5); got spec.backend={spec.backend!r}")
+            ckpt_dir = spec.ckpt_dir
+            bucket_bytes = spec.bucket_bytes
+            snapshot_every = spec.snapshot_every_steps
+            run_id = run_id or spec.run_id
         self.n, self.seed, self.nbytes = n, seed, nbytes
         self.run = run_id or uuid.uuid4().hex[:8]
         self.ckpt_dir = ckpt_dir
@@ -232,28 +239,12 @@ class LocalCluster:
 
     # --------------------------------------------------------- recovery
     def recover(self):
-        """3-tier recovery. Returns (state, step, tier)."""
-        alive_views = list(range(self.n))
-        try:
-            state, step, _ = restore_state(self.run, self.n,
-                                           self.total_bytes, self.template,
-                                           alive_views)
-            offline = [i for i in range(self.n)
-                       if not self._segments_exist(i)]
-            tier = "raim5" if offline else "in-memory"
-            return state, step, tier
-        except RecoveryError:
-            state, step, _ = restore_from_checkpoint(
-                self.ckpt_dir, self.n, self.template)
-            return state, step, "checkpoint"
-
-    def _segments_exist(self, node: int) -> bool:
-        try:
-            v = ReadOnlyNode(self.run, node, self.n, self.total_bytes)
-            v.close()
-            return True
-        except (FileNotFoundError, RuntimeError):
-            return False
+        """3-tier recovery via the shared ladder. (state, step, tier)."""
+        from repro.api.backends import reft_recovery_ladder
+        res = reft_recovery_ladder(self.run, self.n, self.total_bytes,
+                                   self.template, list(range(self.n)),
+                                   self.ckpt_dir)
+        return res.state, res.step, res.tier
 
     def restart_node(self, node: int, state: dict):
         """Elastic replacement node resumes from the recovered state."""

@@ -34,7 +34,11 @@ class ReftGroup:
     """REFT for one sharding group of `n` members."""
 
     def __init__(self, n: int, state_template: Any,
-                 cfg: ReftConfig = ReftConfig()):
+                 cfg: Optional[ReftConfig] = None):
+        # NB: a `cfg=ReftConfig()` default would be evaluated once at class
+        # definition, making every default-constructed group share one
+        # run_id (and thus one set of shm segments) — construct per call.
+        cfg = cfg if cfg is not None else ReftConfig()
         self.n, self.cfg = n, cfg
         self.run = cfg.run_id
         self.engines = [SnapshotEngine(i, n, state_template, cfg,
@@ -48,10 +52,14 @@ class ReftGroup:
     # ------------------------------------------------------------- save
     def snapshot(self, state: Any, step: int, extra_meta: dict = None,
                  wait: bool = True) -> bool:
-        """All members snapshot iteration `step` in parallel (async)."""
-        started = all(e.snapshot_async(state, step, extra_meta)
-                      for e in self.engines
-                      if self.states[e.node] == NodeState.HEALTHY)
+        """All members snapshot iteration `step` in parallel (async).
+
+        The list comprehension is deliberate: a short-circuiting all(gen)
+        would stop asking members after the first refusal, leaving the SG
+        with a partially-initiated snapshot round."""
+        started = all([e.snapshot_async(state, step, extra_meta)
+                       for e in self.engines
+                       if self.states[e.node] == NodeState.HEALTHY])
         if wait:
             self.wait()
         return started
@@ -66,17 +74,34 @@ class ReftGroup:
 
     def checkpoint(self) -> Optional[int]:
         """REFT-Ckpt: every healthy SMP persists its shard (no trainer
-        involvement)."""
-        step = None
-        for e in self.engines:
-            if self.states[e.node] != NodeState.HEALTHY:
-                continue
-            s = e.last_clean_step
-            path = os.path.join(self.cfg.ckpt_dir,
-                                f"step-{s}-node-{e.node}.reft")
-            e.persist(path)
-            step = s
+        involvement).  All members persist the SAME step — the newest one
+        every healthy member holds clean — so the on-disk family is
+        SG-consistent and restorable."""
+        from repro.core.recovery import attach_survivors, common_step
+        healthy = [e for e in self.engines
+                   if self.states[e.node] == NodeState.HEALTHY
+                   and not e.degraded]
         self._snapshots_since_ckpt = 0
+        if not healthy:
+            return None
+        # newest step clean on EVERY healthy member (the 3-buffer rotation
+        # means members that skipped a round still hold older clean steps)
+        views = attach_survivors(self.run, [e.node for e in healthy],
+                                 self.n, self.total_bytes)
+        try:
+            step = common_step(views)
+        finally:
+            for v in views.values():
+                v.close()
+        if step is None or step < 0:
+            return None
+        # fan out: every SMP writes its shard concurrently, then collect
+        for e in healthy:
+            e.smp.persist_send(os.path.join(
+                self.cfg.ckpt_dir, f"step-{step}-node-{e.node}.reft"),
+                step=step)
+        for e in healthy:
+            e.smp.persist_wait()
         return step
 
     # ---------------------------------------------------------- failure
@@ -95,21 +120,22 @@ class ReftGroup:
     # ---------------------------------------------------------- recover
     def recover(self) -> Tuple[Any, int, dict, str]:
         """Returns (state, step, extra_meta, tier) per the 3-tier policy."""
+        from repro.api.backends import reft_recovery_ladder
         alive = [i for i in range(self.n)
                  if self.states[i] != NodeState.OFFLINE]
-        try:
-            state, step, extra = restore_state(
-                self.run, self.n, self.total_bytes, self.template, alive)
-            tier = "in-memory" if len(alive) == self.n else "raim5"
-            return state, step, extra, tier
-        except RecoveryError:
-            state, step, extra = restore_from_checkpoint(
-                self.cfg.ckpt_dir, self.n, self.template)
-            return state, step, extra, "checkpoint"
+        res = reft_recovery_ladder(self.run, self.n, self.total_bytes,
+                                   self.template, alive, self.cfg.ckpt_dir)
+        return res.state, res.step, res.extra_meta, res.tier
 
     def heal(self, node: int):
-        """Elastic replacement node rejoins (new SMP)."""
-        if self.states[node] == NodeState.OFFLINE:
+        """Elastic replacement node rejoins (new SMP).  A degraded member
+        (its SMP died under it) needs a respawn just like an offline one."""
+        e = self.engines[node]
+        if self.states[node] == NodeState.OFFLINE or e.degraded:
+            try:
+                e.close()                     # drop stale segments/handles
+            except Exception:
+                pass
             self.engines[node] = SnapshotEngine(
                 node, self.n, self.template, self.cfg, run_id=self.run)
         self.states[node] = NodeState.HEALTHY

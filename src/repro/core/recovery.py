@@ -88,14 +88,19 @@ def restore_bytes(views: Dict[int, ReadOnlyNode], n: int, total_bytes: int,
 
 
 def restore_state(run: str, n: int, total_bytes: int, template: Any,
-                  alive_nodes: List[int]) -> Tuple[Any, int, dict]:
+                  alive_nodes: List[int],
+                  info: Optional[dict] = None) -> Tuple[Any, int, dict]:
     """End-to-end in-memory restore. Returns (state_tree, step, extra_meta).
 
     Raises RecoveryError when more than one node per SG is gone (tier 3
-    must take over).
+    must take over).  When `info` (a dict) is passed it is filled with
+    what actually happened: {"attached", "corrupt", "missing"} — callers
+    derive the recovery tier from it instead of re-probing segments.
     """
     views = attach_survivors(run, alive_nodes, n, total_bytes)
     try:
+        if info is not None:
+            info["attached"] = sorted(views)
         step = common_step(views)
         if step is None:
             raise RecoveryError("no common clean snapshot across survivors")
@@ -105,6 +110,9 @@ def restore_state(run: str, n: int, total_bytes: int, template: Any,
         for node in corrupt:
             views.pop(node).close()
         missing = sorted(set(range(n)) - set(views))
+        if info is not None:
+            info["corrupt"] = corrupt
+            info["missing"] = missing
         if len(missing) > 1:
             raise RecoveryError(
                 f"{len(missing)} members unusable in one SG (dead: "
@@ -123,10 +131,16 @@ def restore_state(run: str, n: int, total_bytes: int, template: Any,
 
 
 # --------------------------------------------------------------- tier 3
-def latest_checkpoint_step(ckpt_dir: str) -> Optional[int]:
-    steps = set()
+def latest_checkpoint_step(ckpt_dir: str,
+                           n: Optional[int] = None) -> Optional[int]:
+    """Newest persisted step; with `n`, newest COMPLETE family (all n
+    member shards on disk) — torn families are not restorable."""
+    families: Dict[int, set] = {}
     for p in glob.glob(os.path.join(ckpt_dir, "step-*-node-*.reft")):
-        steps.add(int(os.path.basename(p).split("-")[1]))
+        parts = os.path.basename(p).split("-")
+        families.setdefault(int(parts[1]), set()).add(int(parts[3].split(".")[0]))
+    steps = [s for s, nodes in families.items()
+             if n is None or nodes == set(range(n))]
     return max(steps) if steps else None
 
 
@@ -134,16 +148,20 @@ def restore_from_checkpoint(ckpt_dir: str, n: int, template: Any,
                             step: Optional[int] = None
                             ) -> Tuple[Any, int, dict]:
     """Rebuild from REFT-Ckpt files (each node persisted shard+parity)."""
-    step = latest_checkpoint_step(ckpt_dir) if step is None else step
+    step = latest_checkpoint_step(ckpt_dir, n) if step is None else step
     if step is None:
-        raise RecoveryError("no checkpoints available")
+        raise RecoveryError("no complete checkpoint available")
     shards = {}
     head = None
     for node in range(n):
         path = os.path.join(ckpt_dir, f"step-{step}-node-{node}.reft")
-        with open(path, "rb") as f:
-            head = pickle.load(f)
-            shards[node] = np.frombuffer(f.read(), np.uint8)
+        try:
+            with open(path, "rb") as f:
+                head = pickle.load(f)
+                shards[node] = np.frombuffer(f.read(), np.uint8)
+        except FileNotFoundError:
+            raise RecoveryError(f"checkpoint family step {step} is torn: "
+                                f"missing {os.path.basename(path)}")
     total = head["total_bytes"]
     lay = NodeLayout(n, total)
     if n == 1:

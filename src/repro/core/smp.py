@@ -43,10 +43,45 @@ def _seg(run: str, node: int, what: str) -> str:
     return f"reft-{run}-n{node}-{what}"
 
 
+import inspect as _inspect
+
+_HAS_TRACK = "track" in _inspect.signature(SharedMemory.__init__).parameters
+
+if not _HAS_TRACK:
+    # Python < 3.13 has no SharedMemory(track=False): every process that
+    # maps a segment registers it with the resource tracker, which then
+    # unlinks it behind our back (and races other processes' messages into
+    # noisy KeyErrors).  REFT segments must outlive any single process —
+    # that is the whole point of the SMP design — and their lifetime is
+    # managed explicitly via unlink_node(), so exempt exactly our
+    # namespace from tracking in every process that imports this module.
+    from multiprocessing import resource_tracker as _rt
+
+    def _exempt(fn):
+        def wrapped(name, rtype):
+            if rtype == "shared_memory" and str(name).lstrip("/") \
+                    .startswith("reft-"):
+                return
+            return fn(name, rtype)
+        return wrapped
+
+    if not getattr(_rt, "_reft_exempt", False):
+        _rt.register = _exempt(_rt.register)
+        _rt.unregister = _exempt(_rt.unregister)
+        _rt._reft_exempt = True
+
+
 class _Shm(SharedMemory):
-    """SharedMemory whose destructor tolerates numpy views that are still
-    alive at interpreter exit (close is always attempted explicitly first;
-    this only silences the cosmetic late-GC BufferError)."""
+    """SharedMemory that never registers with the resource tracker (see
+    above / `track=False` on modern Pythons) and tolerates numpy views
+    still alive at interpreter exit (close is always attempted explicitly
+    first; this only silences the cosmetic late-GC BufferError)."""
+
+    def __init__(self, name=None, create=False, size=0, track=False):
+        if _HAS_TRACK:
+            super().__init__(name=name, create=create, size=size, track=track)
+        else:
+            super().__init__(name=name, create=create, size=size)
 
     def __del__(self):
         try:
@@ -148,9 +183,13 @@ def _smp_main(conn, run: str, node: int, n: int, total_bytes: int,
                 dirty = -1
                 conn.send(("clean", step))
             elif op == "persist":
-                _, path = msg
-                _persist(path, run, node, lay, ctl, buf_np, meta_shm)
-                conn.send(("persisted", path))
+                _, path, want_step = msg
+                try:
+                    _persist(path, run, node, lay, ctl, buf_np, meta_shm,
+                             want_step)
+                    conn.send(("persisted", path))
+                except Exception as e:   # keep serving snapshots regardless
+                    conn.send(("persist-error", repr(e)))
             elif op == "ping":
                 conn.send(("pong", time.time()))
             elif op == "stop":
@@ -177,10 +216,20 @@ def _smp_main(conn, run: str, node: int, n: int, total_bytes: int,
                 pass
 
 
-def _persist(path, run, node, lay, ctl, buf_np, meta_shm):
+def _persist(path, run, node, lay, ctl, buf_np, meta_shm, want_step=None):
     latest = int(ctl[1])
     if latest < 0:
         raise RuntimeError("no clean snapshot to persist")
+    if want_step is not None:
+        # SG-consistent checkpoint: every member persists the SAME step
+        for i in range(NBUF):
+            if (int(ctl[3 + 2 * i]) == ST_CLEAN
+                    and int(ctl[2 + 2 * i]) == want_step):
+                latest = i
+                break
+        else:
+            raise RuntimeError(
+                f"step {want_step} no longer clean on node {node}")
     step = int(ctl[2 + 2 * latest])
     base = latest * META_SLOT
     mlen = struct.unpack("<q", bytes(meta_shm.buf[base:base + 8]))[0]
@@ -256,13 +305,24 @@ class SMPHandle:
         assert tag == "clean", tag
         return step
 
-    def persist(self, path: str, timeout=120.0) -> str:
-        self._conn.send(("persist", path))
+    def persist_send(self, path: str, step: Optional[int] = None) -> None:
+        """Fire the persist request without waiting (SMPs of an SG can
+        then write their shards concurrently)."""
+        self._conn.send(("persist", path, step))
+
+    def persist_wait(self, timeout=120.0) -> str:
         if not self._conn.poll(timeout):
             raise TimeoutError("persist timeout")
         tag, p = self._conn.recv()
+        if tag == "persist-error":
+            raise RuntimeError(f"SMP persist failed: {p}")
         assert tag == "persisted", tag
         return p
+
+    def persist(self, path: str, timeout=120.0, step: Optional[int] = None
+                ) -> str:
+        self.persist_send(path, step)
+        return self.persist_wait(timeout)
 
     def alive(self) -> bool:
         return self.proc.is_alive()
@@ -372,7 +432,7 @@ class ReadOnlyNode:
         for what in (["stage", "ctl", "meta"] +
                      [f"buf{i}" for i in range(NBUF)]):
             try:
-                s = SharedMemory(name=_seg(run, node, what), track=False)
+                s = _Shm(name=_seg(run, node, what), track=False)
                 s.close()
                 s.unlink()
             except FileNotFoundError:

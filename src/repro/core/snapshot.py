@@ -74,7 +74,11 @@ class SnapshotEngine:
     """REFT-Sn for one node of an SG of n members."""
 
     def __init__(self, node: int, n: int, state_template: Any,
-                 cfg: ReftConfig = ReftConfig(), run_id: str = None):
+                 cfg: Optional[ReftConfig] = None, run_id: str = None):
+        # NB: a `cfg=ReftConfig()` default would be evaluated once at import,
+        # so every default-constructed engine would share one run_id (one
+        # shm namespace) — construct a fresh config per instance instead.
+        cfg = cfg if cfg is not None else ReftConfig()
         self.node, self.n, self.cfg = node, n, cfg
         self.run = run_id or cfg.run_id
         self.spec = make_flat_spec(state_template)
@@ -189,10 +193,10 @@ class SnapshotEngine:
             self._err = e
 
     # ------------------------------------------------------------ ckpt
-    def persist(self, path: str) -> str:
+    def persist(self, path: str, step: Optional[int] = None) -> str:
         """REFT-Ckpt: SMP writes its clean shard+parity to disk without
-        touching the training process."""
-        return self.smp.persist(path)
+        touching the training process (a specific clean step if given)."""
+        return self.smp.persist(path, step=step)
 
     def close(self):
         if self._thread is not None and self._thread.is_alive():

@@ -1,0 +1,4 @@
+"""Distributed-sharding layer: mesh-aware spec adaptation + rule tables."""
+from repro.dist.api import adapt_spec, shard, use_mesh
+
+__all__ = ["adapt_spec", "shard", "use_mesh"]

@@ -1,0 +1,102 @@
+"""Sharding rule tables: PartitionSpecs for params / state / batch / cache.
+
+Rules are name-based over the last key of each leaf path, expressed as a
+*tail* spec over the leaf's trailing dims — the scanned layer stack adds a
+leading periods dim that is always replicated, and `_pad` aligns the tail
+to the leaf's rank.  `adapt_spec` later drops anything the concrete mesh
+cannot honour (missing axes, non-dividing dims), so the table can be
+written against the ideal production mesh.
+
+Megatron-style tensor parallelism over "model": column-parallel input
+projections shard their fan-out dim, row-parallel output projections their
+fan-in dim.  Batch dims shard over ("pod", "data").
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.dist.api import adapt_spec
+
+# name -> spec over the leaf's trailing dims (rank-2/3 tails)
+_PARAM_TAILS: Dict[str, tuple] = {
+    # attention: qkv column-parallel, output row-parallel
+    "wq": (None, "model"), "wk": (None, "model"), "wv": (None, "model"),
+    "wo": ("model", None),
+    # dense / MoE FFN (moe adds a leading experts dim via _pad)
+    "wi_gate": (None, "model"), "wi_up": (None, "model"),
+    # SSM: fused in_proj is row-sharded on d_model, out_proj on d_inner
+    "in_proj": ("model", None), "out_proj": ("model", None),
+    "conv_w": (None, "model"),
+    # embeddings / heads: shard the d_model dim (always 16-divisible)
+    "embed": (None, "model"), "lm_head": ("model", None),
+    "proj_in": (None, "model"),
+}
+
+_BATCH_AXES = ("pod", "data")
+
+
+def _leaf_name(path) -> str:
+    for entry in reversed(path):
+        key = getattr(entry, "key", None)
+        if isinstance(key, str):
+            return key
+    return ""
+
+
+def _pad(tail: tuple, ndim: int) -> P:
+    """Right-align a tail spec inside an ndim-rank leaf (leading dims —
+    scan periods, expert stacks — stay replicated)."""
+    if ndim < len(tail):
+        return P(*tail[len(tail) - ndim:])
+    return P(*((None,) * (ndim - len(tail)) + tail))
+
+
+def param_specs(cfg, shapes) -> Any:
+    """PartitionSpec pytree matching the params pytree (leaf-for-leaf)."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(shapes)
+    specs = []
+    for path, leaf in flat:
+        tail = _PARAM_TAILS.get(_leaf_name(path))
+        nd = len(leaf.shape)
+        specs.append(_pad(tail, nd) if tail and nd else P())
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+def state_specs(cfg, state) -> dict:
+    """Specs for the full train state; optimizer moments mirror params."""
+    p = param_specs(cfg, state["params"])
+    return {
+        "params": p,
+        "opt_state": {"mu": p, "nu": p, "step": P()},
+        "step": P(),
+        "rng": P(),
+    }
+
+
+def batch_specs(cfg, batch) -> dict:
+    """Inputs shard their leading (global batch) dim over ("pod","data")."""
+    return {k: P(_BATCH_AXES, *((None,) * (len(v.shape) - 1)))
+            if len(v.shape) else P()
+            for k, v in batch.items()}
+
+
+def cache_specs(cfg, cache, global_batch: int, mesh) -> Any:
+    """Decode caches shard their batch dim; everything else replicates."""
+    def spec(leaf):
+        sh = leaf.shape
+        if len(sh) >= 2 and sh[1] == global_batch:      # (periods, B, ...)
+            return P(None, _BATCH_AXES, *((None,) * (len(sh) - 2)))
+        if len(sh) >= 1 and sh[0] == global_batch:
+            return P(_BATCH_AXES, *((None,) * (len(sh) - 1)))
+        return P()
+    return jax.tree.map(spec, cache)
+
+
+def named(specs, shapes, mesh) -> Any:
+    """Spec pytree -> NamedSharding pytree, adapted to `mesh`."""
+    return jax.tree.map(
+        lambda sp, sh: NamedSharding(mesh, adapt_spec(sp, sh.shape, mesh)),
+        specs, shapes, is_leaf=lambda x: isinstance(x, P))

@@ -26,6 +26,7 @@ from repro.configs import (ASSIGNED_ARCHS, INPUT_SHAPES, get_config,
                            shape_supported)
 from repro.data.pipeline import input_specs
 from repro.dist import shardings as SH
+from repro.dist.api import use_mesh
 from repro.launch.mesh import (HBM_BW, ICI_BW, PEAK_FLOPS_BF16,
                                make_production_mesh)
 from repro.models import model as M
@@ -56,6 +57,15 @@ def collective_bytes(hlo_text: str) -> dict:
     return out
 
 
+def cost_dict(compiled) -> dict:
+    """compiled.cost_analysis() returns a dict on modern jax, a one-element
+    list of dicts on 0.4.x — normalize to the dict."""
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
+    return cost
+
+
 def _abstract_state(cfg):
     return jax.eval_shape(lambda: init_train_state(cfg, 0).tree())
 
@@ -74,7 +84,7 @@ def build_lowered(arch: str, shape_name: str, mesh, verbose=False,
     if not ok:
         raise SkipPair(why)
 
-    with jax.set_mesh(mesh):
+    with use_mesh(mesh):
         if shape.kind == "decode":
             params_sh = jax.eval_shape(
                 lambda: M.init_params(cfg, jax.random.PRNGKey(0)))
@@ -144,7 +154,7 @@ def analyse(lowered, compiled, meta, cfg) -> dict:
     program, so cost_analysis flops/bytes and HLO operand shapes are already
     per-chip — terms divide by per-chip peaks, not (chips x peak)."""
     chips = meta["chips"]
-    cost = compiled.cost_analysis()
+    cost = cost_dict(compiled)
     flops = float(cost.get("flops", 0.0))          # per chip
     bytes_acc = float(cost.get("bytes accessed", 0.0))
     coll = collective_bytes(compiled.as_text())    # per chip

@@ -8,21 +8,25 @@ from __future__ import annotations
 import jax
 
 
-def _auto(n):
-    return (jax.sharding.AxisType.Auto,) * n
+def _mesh(shape, axes):
+    # axis_types only exists on newer jax; older versions default to Auto
+    at = getattr(jax.sharding, "AxisType", None)
+    if at is not None:
+        return jax.make_mesh(shape, axes, axis_types=(at.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes)
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     """16x16 = 256 chips per pod; 2 pods = 512 chips multi-pod."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes, axis_types=_auto(len(axes)))
+    return _mesh(shape, axes)
 
 
 def make_smoke_mesh():
     """Whatever this host offers (1 CPU device in the container)."""
     n = len(jax.devices())
-    return jax.make_mesh((n, 1), ("data", "model"), axis_types=_auto(2))
+    return _mesh((n, 1), ("data", "model"))
 
 
 # v5e hardware constants for the roofline (DESIGN.md §6)

@@ -1,12 +1,14 @@
-"""End-to-end training driver with REFT fault tolerance.
+"""End-to-end training driver with pluggable fault tolerance.
 
 Trains a real model (JAX CPU here; the same code path jit-lowers onto the
-production mesh) while an SG of SMP processes snapshots the train state
-asynchronously.  Optional fault injection exercises the three recovery
-tiers mid-run and verifies training resumes from the recovered state.
+production mesh) under any registered `Checkpointer` backend — the paper's
+REFT stack or a disk baseline — selected by one flag, so overhead and
+recovery comparisons are apples-to-apples.  Optional fault injection
+exercises the recovery ladder mid-run and verifies training resumes from
+the recovered state.
 
   PYTHONPATH=src python -m repro.launch.train --arch opt-125m --steps 50 \\
-      --batch 2 --seq 256 --sg-size 4 --snapshot-every 2 \\
+      --batch 2 --seq 256 --backend reft --sg-size 4 --snapshot-every 2 \\
       --inject 20:software --inject 35:node
 """
 from __future__ import annotations
@@ -27,18 +29,28 @@ def main(argv=None):
     ap.add_argument("--steps", type=int, default=50)
     ap.add_argument("--batch", type=int, default=2)
     ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--backend", default="reft",
+                    choices=["reft", "sync_disk", "async_disk", "null"])
     ap.add_argument("--sg-size", type=int, default=4)
     ap.add_argument("--snapshot-every", type=int, default=2)
     ap.add_argument("--ckpt-every", type=int, default=25)
     ap.add_argument("--ckpt-dir", default="/tmp/reft-train-ckpt")
+    ap.add_argument("--resume", action="store_true",
+                    help="restore-on-entry from ckpt-dir if possible")
+    ap.add_argument("--auto-tune", action="store_true",
+                    help="Appendix-A adaptive snapshot cadence")
     ap.add_argument("--inject", action="append", default=[],
                     help="step:kind  (kind: software|node)")
-    ap.add_argument("--no-reft", action="store_true")
+    ap.add_argument("--no-reft", action="store_true",
+                    help="legacy alias for --backend null")
     args = ap.parse_args(argv)
+    if args.no_reft:
+        args.backend = "null"
 
+    from repro.api import CheckpointSession, CheckpointSpec
+    from repro.core.recovery import RecoveryError
     from repro.configs import get_config
     from repro.configs.base import InputShape
-    from repro.core import ReftConfig, ReftGroup
     from repro.data.pipeline import SyntheticDataset
     from repro.train.steps import init_train_state, make_train_step
 
@@ -46,65 +58,85 @@ def main(argv=None):
     if args.reduced:
         cfg = cfg.reduced()
     shape = InputShape("cli", args.seq, args.batch, "train")
-    injections = dict(tuple(x.split(":")) for x in args.inject)
-    injections = {int(k): v for k, v in injections.items()}
+    injections = {}
+    for item in args.inject:
+        try:
+            at, kind = item.split(":")
+            injections[int(at)] = kind
+        except ValueError:
+            ap.error(f"--inject wants STEP:KIND (software|node), got {item!r}")
+        if kind not in ("software", "node"):
+            ap.error(f"--inject kind must be software|node, got {kind!r}")
+    if injections and args.backend == "null":
+        ap.error("--inject needs a backend that can restore (not null)")
 
     print(f"[train] arch={cfg.name} params={cfg.param_count():,} "
-          f"batch={args.batch}x{args.seq}")
+          f"batch={args.batch}x{args.seq} backend={args.backend}")
     state = init_train_state(cfg, 0).tree()
     ds = SyntheticDataset(cfg, shape, seed=0)
     step_fn = jax.jit(make_train_step(cfg))
 
-    group = None
-    if not args.no_reft:
-        rcfg = ReftConfig(ckpt_dir=args.ckpt_dir,
-                          checkpoint_every_snapshots=max(
-                              1, args.ckpt_every // args.snapshot_every))
-        group = ReftGroup(args.sg_size, state, rcfg)
+    spec = CheckpointSpec(
+        backend=args.backend,
+        ckpt_dir=args.ckpt_dir,
+        sg_size=args.sg_size,
+        snapshot_every_steps=args.snapshot_every,
+        checkpoint_every_steps=args.ckpt_every,
+        resume=args.resume,
+        auto_tune=args.auto_tune,
+    )
 
     losses = []
     t0 = time.time()
     step = int(state["step"])
-    try:
+    with CheckpointSession(spec, state) as sess:
+        if sess.restored is not None:
+            res = sess.restored
+            print(f"[resume] tier={res.tier} step={res.step}")
+            state = jax.tree.map(jnp.asarray, res.state)
+            ds.restore(res.extra_meta)
+            step = res.step
         while step < args.steps:
             batch = next(ds)
             state, metrics = step_fn(state, batch)
             step = int(state["step"])
             losses.append(float(metrics["loss"]))
-            if group and step % args.snapshot_every == 0:
-                group.snapshot(state, step, extra_meta=ds.state(),
-                               wait=False)
+            sess.after_step(state, step, extra_meta=ds.state())
 
-            if step in injections and group is not None:
+            if step in injections:
                 kind = injections.pop(step)
-                group.wait()
                 print(f"[inject] {kind} failure at step {step}")
-                if kind == "software":
-                    group.inject_software_failure(0)
-                else:
-                    group.inject_node_failure(1)
-                rec, rstep, extra, tier = group.recover()
-                print(f"[recover] tier={tier} step={rstep}")
-                state = jax.tree.map(jnp.asarray, rec)
-                ds.restore(extra)
-                step = rstep
-                for i in range(args.sg_size):
-                    group.heal(i)
+                sess.inject(kind, node=0 if kind == "software" else 1)
+                try:
+                    res = sess.restore()
+                except RecoveryError as e:
+                    ap.error(f"injected {kind} failure at step {step} is "
+                             f"unrecoverable: {e} (no completed save yet — "
+                             f"lower --snapshot-every or inject later)")
+                print(f"[recover] tier={res.tier} step={res.step}")
+                state = jax.tree.map(jnp.asarray, res.state)
+                ds.restore(res.extra_meta)
+                step = res.step
 
             if step % 10 == 0 or step == args.steps:
                 print(f"  step {step:5d} loss {losses[-1]:.4f} "
                       f"({(time.time()-t0)/max(step,1):.2f}s/step)",
                       flush=True)
-        if group:
-            group.wait()
-            group.checkpoint()
-            st = group.engines[0].stats
-            print(f"[reft] snapshots={st['snapshots']} "
-                  f"bytes={st['bytes_sent']:,} "
-                  f"avg_snapshot_s={st['seconds']/max(st['snapshots'],1):.3f}")
-    finally:
-        if group:
-            group.close()
+        sess.wait()
+        st = sess.stats()
+        # engine-side timing when the backend exposes it (async launches
+        # make the trainer-side snapshot_seconds near-zero by design)
+        snaps = st.get("engine_snapshots") or st.get("snapshot", 0)
+        secs = st.get("engine_seconds", st.get("snapshot_seconds", 0.0))
+        print(f"[{args.backend}] snapshots={snaps} "
+              f"persists={st.get('persist', 0)} "
+              f"restores={st.get('restore', 0)} "
+              f"avg_snapshot_s={secs/max(snaps, 1):.3f} "
+              f"degraded={sess.degraded}")
+    if not losses:
+        print(f"[done] steps={step} (resumed past --steps; nothing to run) "
+              f"wall={time.time()-t0:.1f}s")
+        return 0
     print(f"[done] steps={step} final_loss={losses[-1]:.4f} "
           f"first_loss={losses[0]:.4f} wall={time.time()-t0:.1f}s")
     assert np.isfinite(losses).all(), "loss diverged"

@@ -5,8 +5,13 @@ import sys
 # on purpose — smoke tests and benches must see the real host).
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
-from hypothesis import settings
-
-settings.register_profile("ci", deadline=None, max_examples=25,
-                          derandomize=True)
-settings.load_profile("ci")
+try:
+    from hypothesis import settings
+except ModuleNotFoundError:
+    # hypothesis is optional: property tests are skipped without it
+    collect_ignore = ["test_treebytes.py", "test_policy.py",
+                      "test_sharding_plan.py", "test_raim5.py"]
+else:
+    settings.register_profile("ci", deadline=None, max_examples=25,
+                              derandomize=True)
+    settings.load_profile("ci")

@@ -45,6 +45,24 @@ def test_torn_old_checkpoints_are_gced(tmp_path):
     assert set(scan_shards(d)) == {5}
 
 
+def test_torn_new_families_no_longer_leak(tmp_path):
+    """Regression: torn families at steps >= the newest kept step used to
+    survive GC forever.  Only the single newest torn family (possibly an
+    in-flight persist) may remain."""
+    d = str(tmp_path)
+    m = CheckpointManager(d, 2, keep=2)
+    for s in (4, 5):
+        for n in range(2):
+            _touch(d, s, n)
+    _touch(d, 6, 0)                  # crashed partial checkpoint
+    _touch(d, 7, 1)                  # torn family that may be in flight
+    m.commit()
+    # complete 4,5 kept; torn 6 GC'd; only the newest torn (7) spared
+    assert set(scan_shards(d)) == {4, 5, 7}
+    m.commit()                       # idempotent: 7 still newest torn
+    assert set(scan_shards(d)) == {4, 5, 7}
+
+
 def test_integration_with_reft_group(tmp_path):
     import jax.numpy as jnp
     from repro.core import ReftConfig, ReftGroup

@@ -15,13 +15,16 @@ SCRIPT = textwrap.dedent("""
     from repro.configs import get_config
     from repro.models.moe import init_moe, moe_ffn_gspmd, moe_ffn_ep
 
+    from repro.dist.api import use_mesh
+
     cfg = get_config("dbrx-132b").reduced()
     p = init_moe(jax.random.PRNGKey(0), cfg)
     x = jax.random.normal(jax.random.PRNGKey(1), (4, 8, cfg.d_model))
-    mesh = jax.make_mesh((2, 4), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    at = getattr(jax.sharding, "AxisType", None)
+    kw = {"axis_types": (at.Auto,) * 2} if at is not None else {}
+    mesh = jax.make_mesh((2, 4), ("data", "model"), **kw)
     y_ref, _ = moe_ffn_gspmd(p, cfg, x)
-    with jax.set_mesh(mesh):
+    with use_mesh(mesh):
         y_ep, _ = jax.jit(lambda p, x: moe_ffn_ep(p, cfg, x))(p, x)
         cfg2 = dataclasses.replace(cfg, fsdp=True)
         y_fs, _ = jax.jit(lambda p, x: moe_ffn_ep(p, cfg2, x))(p, x)
