@@ -2,20 +2,31 @@
 
 Every backend is timed through the SAME `Checkpointer` calls, so the
 comparison is apples-to-apples by construction:
-  reft        — async sharded snapshot to SMP shared memory (REFT-Sn),
-                plus the SMP-side persist (REFT-Ckpt, no trainer time)
+  reft        — HASC async pipeline snapshot to SMP shared memory
+                (REFT-Sn), plus the SMP-side persist (REFT-Ckpt, no
+                trainer time); reported with the per-level decomposition
+                (L1 device reads / L2 ring staging / L3 SMP signal+ack)
   sync_disk   — blocking full-state disk save
   async_disk  — CheckFreq-style overlapped full save; with shard=True the
                 TorchSnapshot-style 1/m-per-rank variant (parallel I/O)
 Phase rows (d2h / persist) reproduce the figure's decomposition for the
 disk paths.
 
-    PYTHONPATH=src python benchmarks/micro_snapshot.py [--smoke]
+The run ends with a training-interference probe: median step time of a
+small jitted compute loop with snapshotting off, then with a snapshot
+permanently in flight — once against the pre-refactor serial thread
+(`pipeline=False`) and once against the HASC pipeline.  The pipelined
+engine's step-time delta must be no worse than the serial thread's.
+
+    PYTHONPATH=src python benchmarks/micro_snapshot.py [--smoke] \\
+        [--json BENCH_micro_snapshot.json]
 """
 from __future__ import annotations
 
 import argparse
+import json
 import os
+import statistics
 import sys
 import tempfile
 import time
@@ -37,6 +48,8 @@ VARIANTS = [
     ("torchsnapshot", "async_disk", {"shard": True}),
 ]
 
+LEVELS = ("l1", "l1_stall", "l2", "l3")
+
 
 def _time_snapshot(ck, state) -> float:
     ck.snapshot(state, 1, wait=True)                    # warm
@@ -54,10 +67,24 @@ def run(size: int = SIZE) -> list:
             spec = CheckpointSpec(backend=backend, ckpt_dir=d, sg_size=4,
                                   resume=False, options=opts)
             with spec.build(state) as ck:
-                t = _time_snapshot(ck, state)
+                if backend == "reft":
+                    ck.snapshot(state, 1, wait=True)    # warm outside delta
+                    lv0 = ck.stats()
+                    t0 = time.perf_counter()
+                    ck.snapshot(state, 2, wait=True)
+                    t = time.perf_counter() - t0
+                else:
+                    t = _time_snapshot(ck, state)
                 rows.append((f"fig9_{label}", t, gb / t))
 
                 if backend == "reft":
+                    # HASC per-level decomposition of the timed snapshot
+                    lv1 = ck.stats()
+                    for k in LEVELS:
+                        key = f"engine_{k}_seconds"
+                        dt = lv1.get(key, 0.0) - lv0.get(key, 0.0)
+                        rows.append((f"fig9_reft_sn_{k}", dt,
+                                     gb / dt if dt > 1e-6 else 0.0))
                     # REFT-Ckpt: persist runs inside the SMP — the trainer
                     # only pays the RPC round trip
                     t0 = time.perf_counter()
@@ -73,16 +100,120 @@ def run(size: int = SIZE) -> list:
     return rows
 
 
+def interference(size: int, steps: int = 50, rounds: int = 3) -> dict:
+    """Training-interference probe: step-time delta with a snapshot
+    permanently in flight, serial thread vs HASC pipeline on the same
+    state and bucket geometry.  Rounds interleave baseline/serial/
+    pipelined so machine drift cancels; deltas are medians over rounds."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core.pipeline import step_boundary
+    from repro.core.snapshot import ReftConfig, SnapshotEngine
+
+    state = make_param_state(size)
+    w = jax.random.normal(jax.random.PRNGKey(0), (512, 512), jnp.float32)
+    f = jax.jit(lambda m: m @ m)
+    f(w).block_until_ready()                              # compile
+
+    def median_step(engine=None) -> float:
+        times = []
+        snap_step = 10
+        for _ in range(steps):
+            if engine is not None and not engine.in_flight():
+                engine.snapshot_async(state, snap_step)
+                snap_step += 1
+            t0 = time.perf_counter()
+            f(w).block_until_ready()
+            step_boundary()                               # the yield hook
+            times.append(time.perf_counter() - t0)
+        return statistics.median(times)
+
+    # small buckets keep a snapshot in flight across many steps, so the
+    # probe measures contention, not the idle tail
+    bb = max(64 << 10, size // 256)
+    engines = {}
+    deltas = {"serial": [], "pipelined": []}
+    bases = []
+    try:
+        for mode, pipelined in (("serial", False), ("pipelined", True)):
+            engines[mode] = SnapshotEngine(
+                0, 1, state, ReftConfig(pipeline=pipelined, bucket_bytes=bb))
+            engines[mode].snapshot_sync(state, 1)         # warm
+        order = list(engines.items())
+        for r in range(rounds):
+            base = median_step(None)
+            bases.append(base)
+            # alternate measurement order so monotone machine drift (CI
+            # warm-up, turbo decay) does not systematically favor the
+            # mode measured closer to its round's baseline
+            for mode, eng in (order if r % 2 == 0 else order[::-1]):
+                n0 = eng.stats["snapshots"]
+                deltas[mode].append(median_step(eng) - base)
+                eng.wait()
+                # a degraded/idle engine would measure baseline-vs-baseline
+                # and report vacuous ~zero interference into the artifact
+                if eng.degraded or eng.stats["snapshots"] == n0:
+                    raise RuntimeError(
+                        f"interference probe invalid: {mode} engine made "
+                        f"no snapshot progress (degraded={eng.degraded})")
+    finally:
+        for eng in engines.values():
+            eng.close()
+    out = {"baseline_s": statistics.median(bases)}
+    for mode in ("serial", "pipelined"):
+        out[f"{mode}_delta_s"] = statistics.median(deltas[mode])
+        out[f"{mode}_s"] = out["baseline_s"] + out[f"{mode}_delta_s"]
+    out["pipeline_no_worse"] = (
+        out["pipelined_delta_s"] <= max(out["serial_delta_s"], 0.0)
+        + 0.25 * out["baseline_s"])       # noise guard band
+    return out
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
                     help="small state for CI (seconds, not minutes)")
     ap.add_argument("--size", type=int, default=None)
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also write rows + interference as JSON "
+                         "(CI uploads this as the perf-trajectory artifact)")
+    ap.add_argument("--no-interference", action="store_true")
+    ap.add_argument("--enforce-interference", action="store_true",
+                    help="exit non-zero when the pipelined engine's "
+                         "interference exceeds the serial baseline's "
+                         "(plus the noise guard band)")
     args = ap.parse_args(argv)
     size = args.size or (SMOKE_SIZE if args.smoke else SIZE)
+    rows = run(size)
     print("bench,seconds,GB_per_s")
-    for name, s, gbps in run(size):
+    for name, s, gbps in rows:
         print(f"{name},{s:.4f},{gbps:.2f}")
+    inter = None
+    if not args.no_interference:
+        inter = interference(size)
+        print(f"interference_baseline_step_s,{inter['baseline_s']:.5f},")
+        for mode in ("serial", "pipelined"):
+            print(f"interference_{mode}_delta_s,"
+                  f"{inter[f'{mode}_delta_s']:.5f},")
+        print(f"interference_pipeline_no_worse,"
+              f"{int(inter['pipeline_no_worse'])},")
+    if args.json:
+        payload = {
+            "bench": "micro_snapshot",
+            "size_bytes": size,
+            "rows": [{"name": n, "seconds": s, "gb_per_s": g}
+                     for n, s, g in rows],
+            "interference": inter,
+        }
+        with open(args.json, "w") as fh:
+            json.dump(payload, fh, indent=2)
+        print(f"[json] wrote {args.json}", file=sys.stderr)
+    if args.enforce_interference and inter is not None \
+            and not inter["pipeline_no_worse"]:
+        print("[fail] pipelined interference exceeds the serial baseline",
+              file=sys.stderr)
+        return 2
     return 0
 
 

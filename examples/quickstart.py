@@ -15,7 +15,8 @@ from repro.api import CheckpointSession, CheckpointSpec
 from repro.configs import get_config
 from repro.configs.base import InputShape
 from repro.data.pipeline import SyntheticDataset
-from repro.train.steps import init_train_state, make_train_step
+from repro.train.steps import (init_train_state, make_train_step,
+                               with_step_boundary)
 
 
 def main(backend: str = "reft"):
@@ -23,7 +24,9 @@ def main(backend: str = "reft"):
     shape = InputShape("demo", 64, 2, "train")
     state = init_train_state(cfg, 0).tree()
     ds = SyntheticDataset(cfg, shape)
-    step_fn = jax.jit(make_train_step(cfg))
+    # this loop never calls sess.after_step, so the wrapper is what ticks
+    # the HASC gate: in-flight snapshot pipelines yield at step boundaries
+    step_fn = with_step_boundary(jax.jit(make_train_step(cfg)))
 
     # one sharding group of 4 simulated nodes (for reft: one real SMP
     # process per member)

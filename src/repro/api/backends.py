@@ -34,8 +34,10 @@ def reft_recovery_ladder(run: str, n: int, total_bytes: int, template: Any,
         state, step, extra = restore_state(run, n, total_bytes, template,
                                            alive_nodes, info=info)
         # tier reflects what the restore actually did: any member that had
-        # to be decoded from parity (gone OR corrupt) makes it raim5
-        repaired = info.get("missing", []) or info.get("corrupt", [])
+        # to be decoded from parity (gone, corrupt, OR a laggard whose
+        # buffers rotated past the chosen step) makes it raim5
+        repaired = (info.get("missing", []) or info.get("corrupt", [])
+                    or info.get("stale", []))
         tier = "raim5" if repaired else "in-memory"
         return RestoreResult(state=state, step=step, extra_meta=extra,
                              tier=tier)
@@ -59,6 +61,7 @@ class ReftCheckpointer(Checkpointer):
         from repro.core.snapshot import ReftConfig
 
         run_id = spec.run_id or CheckpointSpec.alloc_run_id()
+        opt = spec.options
         rcfg = ReftConfig(
             bucket_bytes=spec.bucket_bytes,
             ckpt_dir=spec.ckpt_dir,
@@ -66,7 +69,16 @@ class ReftCheckpointer(Checkpointer):
             # the session owns persist cadence; disable the group's own
             checkpoint_every_snapshots=10 ** 9,
             run_id=run_id,
-            stage_slots=spec.options.get("stage_slots", 8),
+            stage_slots=opt.get("stage_slots", 8),
+            # HASC saving-pipeline knobs (docs/API.md "Saving pipeline");
+            # pipeline=False keeps the serial pre-refactor thread as the
+            # measurable interference baseline
+            pipeline=opt.get("pipeline", True),
+            prefetch_window=opt.get("prefetch_window", 4),
+            scratch_buffers=opt.get("scratch_buffers", 2),
+            opt_first=opt.get("opt_first", True),
+            yield_every_buckets=opt.get("yield_every_buckets", 4),
+            boundary_timeout_s=opt.get("boundary_timeout_s", 0.005),
         )
         self.group = ReftGroup(spec.sg_size, state_template, rcfg)
         self.manager = CheckpointManager(spec.ckpt_dir, spec.sg_size,
@@ -76,10 +88,15 @@ class ReftCheckpointer(Checkpointer):
     # ------------------------------------------------------------- save
     def snapshot(self, state, step, extra_meta=None, wait=False):
         t0 = time.perf_counter()
+        lv0 = self.group.level_seconds() if wait else None
         started = self.group.snapshot(state, step, extra_meta, wait=wait)
         if started:
+            levels = None
+            if wait:
+                lv1 = self.group.level_seconds()
+                levels = {k: lv1[k] - lv0[k] for k in lv1}
             self.emit("snapshot", step, seconds=time.perf_counter() - t0,
-                      nbytes=self.group.total_bytes,
+                      nbytes=self.group.total_bytes, levels=levels,
                       detail="" if wait else "async-launch")
         self._check_degraded(step)
         return started
@@ -143,6 +160,8 @@ class ReftCheckpointer(Checkpointer):
         out["engine_snapshots"] = sum(s["snapshots"] for s in eng)
         out["engine_bytes_sent"] = sum(s["bytes_sent"] for s in eng)
         out["engine_seconds"] = sum(s["seconds"] for s in eng)
+        for k, v in self.group.level_seconds().items():
+            out[f"engine_{k}_seconds"] = v
         return out
 
     # ----------------------------------------------------------- faults

@@ -32,6 +32,7 @@ from typing import Any, Callable, List, Optional, Sequence
 from repro.api.types import (
     Checkpointer, CheckpointSpec, CkptEvent, RestoreResult,
 )
+from repro.core.pipeline import step_boundary
 from repro.core.recovery import RecoveryError
 
 
@@ -88,6 +89,9 @@ class CheckpointSession:
                    extra_meta: dict = None) -> dict:
         """Call once per training step; runs whatever is due.  Returns
         {"snapshot": bool, "persist": Optional[int]}."""
+        # tick the HASC gate: in-flight L1 pumps burst at step boundaries
+        # instead of racing the forward/backward pass for host bandwidth
+        step_boundary()
         now = time.time()
         if self._last_call_t is not None:
             self._step_times.append(now - self._last_call_t)

@@ -38,6 +38,10 @@ class CkptEvent:
     nbytes: int = 0
     tier: Optional[str] = None    # restore only: in-memory | raim5 | ...
     detail: str = ""
+    # saving-pipeline decomposition for this operation (seconds spent per
+    # HASC level: l1 device reads / l1_stall credit waits / l2 ring writes
+    # / l3 SMP signaling+ack); None for backends without a pipeline
+    levels: Optional[Dict[str, float]] = None
     wall: float = field(default_factory=time.time)
 
 

@@ -64,13 +64,32 @@ class ReftGroup:
             self.wait()
         return started
 
-    def wait(self) -> int:
-        steps = [e.wait() for e in self.engines
-                 if self.states[e.node] == NodeState.HEALTHY]
+    def wait(self, timeout: float = 300.0) -> int:
+        """Drive every member's pipeline to completion under one shared
+        deadline (the members' flights run concurrently, so the budget is
+        for the whole SG, not per member)."""
+        deadline = time.monotonic() + timeout
+        steps = []
+        for e in self.engines:
+            if self.states[e.node] != NodeState.HEALTHY:
+                continue
+            steps.append(e.wait(max(0.001, deadline - time.monotonic())))
         self._snapshots_since_ckpt += 1
         if self._snapshots_since_ckpt >= self.cfg.checkpoint_every_snapshots:
             self.checkpoint()
         return min(steps) if steps else -1
+
+    def level_seconds(self) -> Dict[str, float]:
+        """Aggregate per-level pipeline timing across members (HASC):
+        l1 = device reads (+stall = scratch-credit waits), l2 = staging
+        ring writes, l3 = SMP signaling + clean-ack."""
+        out = {"l1": 0.0, "l1_stall": 0.0, "l2": 0.0, "l3": 0.0}
+        for e in self.engines:
+            out["l1"] += e.stats.get("l1_seconds", 0.0)
+            out["l1_stall"] += e.stats.get("l1_stall_seconds", 0.0)
+            out["l2"] += e.stats.get("l2_seconds", 0.0)
+            out["l3"] += e.stats.get("l3_seconds", 0.0)
+        return out
 
     def checkpoint(self) -> Optional[int]:
         """REFT-Ckpt: every healthy SMP persists its shard (no trainer

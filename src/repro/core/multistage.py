@@ -14,7 +14,8 @@ blocks to stages.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, List, Tuple
+import time
+from typing import Any, Dict, List, Optional, Tuple
 
 import numpy as np
 
@@ -60,7 +61,11 @@ class MultiStageGroup:
     """REFT over an n_pp x dp grid of simulated nodes (one SG per stage)."""
 
     def __init__(self, n_pp: int, dp: int, state_template: Any,
-                 cfg: ReftConfig = ReftConfig()):
+                 cfg: Optional[ReftConfig] = None):
+        # NB: a `cfg=ReftConfig()` default would be evaluated once at class
+        # definition — every default-constructed grid would share one
+        # run_id (one shm namespace); construct a fresh config per call.
+        cfg = cfg if cfg is not None else ReftConfig()
         self.n_pp, self.dp = n_pp, dp
         self.template = state_template
         self.stage_templates = split_state_by_stage(state_template, n_pp)
@@ -73,14 +78,31 @@ class MultiStageGroup:
 
     def snapshot(self, state: Any, step: int, extra_meta: dict = None,
                  wait: bool = True) -> bool:
+        """Launch every stage's per-member pipelines first (all SGs' L1
+        pumps overlap), then optionally drain them under one deadline."""
         stage_states = split_state_by_stage(state, self.n_pp)
         ok = True
         for g, st in zip(self.groups, stage_states):
             ok &= g.snapshot(st, step, extra_meta, wait=False)
         if wait:
-            for g in self.groups:
-                g.wait()
+            self.wait()
         return ok
+
+    def wait(self, timeout: float = 300.0) -> int:
+        """Drain all stages' in-flight pipelines; the shared deadline spans
+        the whole grid since the flights run concurrently.  Returns the min
+        consistent step across stages (-1 when nothing completed)."""
+        deadline = time.monotonic() + timeout
+        steps = [g.wait(max(0.001, deadline - time.monotonic()))
+                 for g in self.groups]
+        return min(steps) if steps else -1
+
+    def level_seconds(self) -> Dict[str, float]:
+        out = {"l1": 0.0, "l1_stall": 0.0, "l2": 0.0, "l3": 0.0}
+        for g in self.groups:
+            for k, v in g.level_seconds().items():
+                out[k] += v
+        return out
 
     def checkpoint(self):
         for g in self.groups:

@@ -1,0 +1,405 @@
+"""Hierarchical asynchronous snapshot pipeline (HASC, paper §4.1's
+"three-level asynchronous on-device scheduling").
+
+The monolithic snapshot thread (read -> CRC -> blocking ring-send per
+bucket) is replaced by three cooperating levels, each with its own
+backpressure signal, so saving and training contend as little as the
+hardware allows:
+
+  L1 device pump    windowed ``copy_to_host_async`` prefetch over the
+                    upcoming buckets, double-buffered scratch fills, a
+                    bucket schedule that drains optimizer-moment leaves
+                    first, and cooperative yields at training step
+                    boundaries (`StepBoundaryGate`).
+  L2 host stager    moves ready buckets into the SMP staging ring under
+                    credit-based flow control: scratch-buffer credits
+                    upstream (to L1), ring-slot semaphore credits
+                    downstream (from the SMP's bucket consumption).
+  L3 SMP            event-driven begin/bucket/end over the pipe; the
+                    own-region CRC is computed inside the SMP at ``end``
+                    (off every trainer-side critical path); the clean-ack
+                    completes the flight.
+
+The flight keeps `snapshot_async`/`snapshot_sync`/`wait` semantics and the
+dirty-never-visible invariant: an aborted flight never sends ``end``, so
+the dirty buffer is never published.
+"""
+from __future__ import annotations
+
+import bisect
+import pickle
+import queue
+import threading
+import time
+from dataclasses import dataclass
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.treebytes import FlatSpec, iter_buckets
+
+__all__ = [
+    "StepBoundaryGate", "step_boundary", "BucketTask", "build_schedule",
+    "leaf_budget", "LeafReader", "PipelineResult", "PipelineFlight",
+    "SnapshotPipeline",
+]
+
+
+# ------------------------------------------------------------ L1 yield gate
+class StepBoundaryGate:
+    """Condition-variable gate the training loop ticks once per step.
+
+    The L1 pump periodically waits for the *next* tick so its bucket bursts
+    align with step boundaries instead of racing the forward/backward pass
+    for host bandwidth.  The gate only throttles while a trainer is
+    actually ticking (`ACTIVE_WINDOW`); a standalone snapshot (benchmarks,
+    tests, recovery drills) runs unthrottled.
+    """
+
+    ACTIVE_WINDOW = 2.0          # seconds since last tick that count as live
+
+    def __init__(self):
+        self._cond = threading.Condition()
+        self._tick = 0
+        self._last = float("-inf")
+
+    def notify(self) -> None:
+        with self._cond:
+            self._tick += 1
+            self._last = time.monotonic()
+            self._cond.notify_all()
+
+    def active(self) -> bool:
+        return (time.monotonic() - self._last) < self.ACTIVE_WINDOW
+
+    def wait_boundary(self, timeout: float) -> bool:
+        """Wait for the next step boundary; no-op when no trainer is live.
+        Returns True if a boundary arrived within `timeout`."""
+        if timeout <= 0 or not self.active():
+            return False
+        with self._cond:
+            t = self._tick
+            return self._cond.wait_for(lambda: self._tick > t,
+                                       timeout=timeout)
+
+
+GATE = StepBoundaryGate()
+
+
+def step_boundary() -> None:
+    """Signal a training step boundary to every in-flight snapshot pipeline
+    (the hook `train.steps.with_step_boundary` and
+    `CheckpointSession.after_step` call)."""
+    GATE.notify()
+
+
+# ------------------------------------------------------------- scheduling
+_OPT_MARKERS = ("opt", "mu", "nu", "moment", "adam", "exp_avg")
+
+
+def _is_opt_path(path: str) -> bool:
+    p = path.lower()
+    return any(m in p for m in _OPT_MARKERS)
+
+
+@dataclass(frozen=True)
+class BucketTask:
+    """One staging-ring bucket: bytes [lo, hi) of the flat stream, written
+    at `dst` of the own region (kind 0) or XORed into parity (kind 1)."""
+    kind: int                    # 0 = own data block bytes, 1 = parity
+    dst: int                     # destination offset within the region
+    lo: int                      # global flat-stream byte range
+    hi: int
+    leaf_lo: int                 # first/last+1 spec-leaf index overlapped
+    leaf_hi: int
+    opt: bool                    # bucket starts inside an optimizer leaf
+
+
+def _leaf_span(offsets: Sequence[int], spec: FlatSpec,
+               lo: int, hi: int) -> Tuple[int, int]:
+    l0 = max(0, bisect.bisect_right(offsets, lo) - 1)
+    l1 = bisect.bisect_left(offsets, hi)
+    return l0, min(l1, len(spec.leaves))
+
+
+def build_schedule(spec: FlatSpec,
+                   own_plan: Sequence[Tuple[int, int, int]],
+                   stripe_plan: Sequence[Tuple[int, int]],
+                   bucket_bytes: int, *,
+                   opt_first: bool = True) -> List[BucketTask]:
+    """Bucket-split both plans into `BucketTask`s.  With `opt_first`, the
+    buckets that start inside optimizer-moment leaves drain first: the
+    moments are dead weights until the next optimizer update, so saving
+    them first maximises the window in which training may already mutate
+    (rebind) the parameter leaves it is about to need."""
+    offsets = [l.offset for l in spec.leaves]
+    tasks: List[BucketTask] = []
+    for dst0, lo, hi in own_plan:
+        for a, b in iter_buckets(lo, hi, bucket_bytes):
+            l0, l1 = _leaf_span(offsets, spec, a, b)
+            opt = l0 < len(spec.leaves) and _is_opt_path(spec.leaves[l0].path)
+            tasks.append(BucketTask(0, dst0 + (a - lo), a, b, l0, l1, opt))
+    for lo, hi in stripe_plan:
+        for a, b in iter_buckets(lo, hi, bucket_bytes):
+            l0, l1 = _leaf_span(offsets, spec, a, b)
+            opt = l0 < len(spec.leaves) and _is_opt_path(spec.leaves[l0].path)
+            tasks.append(BucketTask(1, a - lo, a, b, l0, l1, opt))
+    if opt_first:
+        tasks.sort(key=lambda t: 0 if t.opt else 1)      # stable
+    return tasks
+
+
+def leaf_budget(spec: FlatSpec,
+                ranges: Sequence[Tuple[int, int]]) -> Dict[int, int]:
+    """Bytes of each leaf this node will ever read, over all plan ranges —
+    the eviction budget for `LeafReader` (drop a leaf's host copy the
+    moment its last byte is consumed, instead of caching the whole state
+    per snapshot)."""
+    offsets = [l.offset for l in spec.leaves]
+    out: Dict[int, int] = {}
+    for lo, hi in ranges:
+        l0, l1 = _leaf_span(offsets, spec, lo, min(hi, spec.total_bytes))
+        for i in range(l0, l1):
+            ls = spec.leaves[i]
+            a, b = max(lo, ls.offset), min(hi, ls.offset + ls.nbytes)
+            if b > a:
+                out[i] = out.get(i, 0) + (b - a)
+    return out
+
+
+class LeafReader:
+    """Random byte-range access over the flat stream with per-snapshot host
+    caching (each leaf is device_get at most once per snapshot).  With a
+    `budget` ({leaf_idx: bytes that will be read}), a leaf's host copy is
+    evicted as soon as its byte ranges are fully consumed, bounding the
+    host-cache footprint to the live working set instead of the entire
+    state."""
+
+    def __init__(self, spec: FlatSpec, leaves: List[Any],
+                 budget: Optional[Dict[int, int]] = None):
+        self.spec = spec
+        self.leaves = leaves
+        self.offsets = [l.offset for l in spec.leaves]
+        self._host: Dict[int, np.ndarray] = {}
+        self._budget = budget
+        self._consumed: Dict[int, int] = {}
+
+    def _leaf_bytes(self, i: int) -> np.ndarray:
+        if i not in self._host:
+            arr = np.asarray(self.leaves[i])          # d2h happens here
+            self._host[i] = np.ascontiguousarray(arr).reshape(-1) \
+                .view(np.uint8)
+        return self._host[i]
+
+    def read(self, lo: int, hi: int, out: np.ndarray) -> None:
+        i = bisect.bisect_right(self.offsets, lo) - 1
+        pos = lo
+        while pos < hi and i < len(self.spec.leaves):
+            ls = self.spec.leaves[i]
+            a = max(pos, ls.offset)
+            b = min(hi, ls.offset + ls.nbytes)
+            if b > a:
+                out[a - lo:b - lo] = self._leaf_bytes(i)[a - ls.offset:
+                                                         b - ls.offset]
+                if self._budget is not None:
+                    got = self._consumed.get(i, 0) + (b - a)
+                    self._consumed[i] = got
+                    if got >= self._budget.get(i, float("inf")):
+                        self._host.pop(i, None)
+            pos = b
+            i += 1
+        if pos < hi:                                   # zero-pad past end
+            out[pos - lo:hi - lo] = 0
+
+    def cached_leaves(self) -> int:
+        return len(self._host)
+
+
+# --------------------------------------------------------------- flights
+@dataclass(frozen=True)
+class PipelineResult:
+    """Per-flight outcome with the per-level timing decomposition."""
+    step: int
+    clean_step: int
+    bytes_sent: int
+    l1_seconds: float            # device->host reads (+ prefetch issue)
+    l1_stall_seconds: float      # waiting for a scratch-buffer credit
+    l2_seconds: float            # staging-ring writes incl. slot waits
+    l3_seconds: float            # begin/end signaling + SMP clean-ack
+    wall_seconds: float
+
+
+_STOP = object()
+
+
+class PipelineFlight:
+    """One in-flight snapshot: an L1 pump thread and an L2 stager thread
+    joined by credit queues.  `wait` never drops a live flight (a timeout
+    raises and the flight stays current), and an aborted flight never
+    sends `end`, so a half-written dirty buffer is never published."""
+
+    def __init__(self, smp, spec: FlatSpec, cfg, schedule: List[BucketTask],
+                 budget: Dict[int, int], leaves: List[Any], step: int,
+                 extra_meta: dict):
+        self.smp, self.spec, self.cfg = smp, spec, cfg
+        self.schedule, self.budget = schedule, budget
+        self.leaves, self.step, self.extra_meta = leaves, step, extra_meta
+        self.result: Optional[PipelineResult] = None
+        self.error: Optional[BaseException] = None
+        self.done = threading.Event()
+        self._abort = threading.Event()
+        # set while a caller is blocked in wait(): the trainer cannot tick
+        # step boundaries then, so the pump must not wait for them
+        self._draining = threading.Event()
+        self._free: "queue.Queue" = queue.Queue()
+        self._ready: "queue.Queue" = queue.Queue()
+        # honor the knob down to 1 (a single credit fully serializes L1/L2,
+        # useful for debugging and minimal host footprint)
+        for _ in range(max(1, getattr(cfg, "scratch_buffers", 2))):
+            self._free.put(np.empty(cfg.bucket_bytes, np.uint8))
+        self._l1_read = 0.0
+        self._l1_stall = 0.0
+        self._t0 = time.perf_counter()
+        self._pump_t = threading.Thread(target=self._pump, daemon=True,
+                                        name=f"hasc-l1-s{step}")
+        self._stage_t = threading.Thread(target=self._stage, daemon=True,
+                                         name=f"hasc-l2-s{step}")
+
+    def launch(self) -> "PipelineFlight":
+        self._stage_t.start()
+        self._pump_t.start()
+        return self
+
+    # ------------------------------------------------------------- L1
+    def _get_credit(self) -> np.ndarray:
+        while True:
+            try:
+                t0 = time.perf_counter()
+                buf = self._free.get(timeout=0.5)
+                self._l1_stall += time.perf_counter() - t0
+                return buf
+            except queue.Empty:
+                self._l1_stall += 0.5
+                if self._abort.is_set():
+                    raise RuntimeError("snapshot pipeline aborted") from None
+
+    def _pump(self):
+        try:
+            reader = LeafReader(self.spec, self.leaves, self.budget)
+            issued: set = set()
+            window = max(1, getattr(self.cfg, "prefetch_window", 4))
+            yield_every = max(0, getattr(self.cfg, "yield_every_buckets", 4))
+            yield_timeout = getattr(self.cfg, "boundary_timeout_s", 0.005)
+            sched = self.schedule
+            for i, task in enumerate(sched):
+                if self._abort.is_set():
+                    raise RuntimeError("snapshot pipeline aborted")
+                t0 = time.perf_counter()
+                for nxt in sched[i:i + window]:        # windowed prefetch
+                    for li in range(nxt.leaf_lo, nxt.leaf_hi):
+                        if li not in issued:
+                            issued.add(li)
+                            try:
+                                self.leaves[li].copy_to_host_async()
+                            except AttributeError:
+                                pass
+                self._l1_read += time.perf_counter() - t0
+                if yield_every and i and i % yield_every == 0 \
+                        and not self._draining.is_set():
+                    GATE.wait_boundary(yield_timeout)  # yield to training
+                buf = self._get_credit()
+                nb = task.hi - task.lo
+                t0 = time.perf_counter()
+                reader.read(task.lo, task.hi, buf[:nb])
+                self._l1_read += time.perf_counter() - t0
+                self._ready.put((task, buf, nb))
+        except BaseException as e:
+            if self.error is None:
+                self.error = e
+            self._abort.set()
+        finally:
+            self._ready.put(_STOP)
+
+    # ------------------------------------------------------------- L2
+    def _stage(self):
+        try:
+            t_l2 = 0.0
+            sent = 0
+            t0 = time.perf_counter()
+            self.smp.begin(self.step)
+            t_l3 = time.perf_counter() - t0
+            while True:
+                item = self._ready.get()
+                if item is _STOP:
+                    break
+                task, buf, nb = item
+                t0 = time.perf_counter()
+                self.smp.send_bucket(task.kind, task.dst, buf[:nb])
+                t_l2 += time.perf_counter() - t0
+                sent += nb
+                self._free.put(buf)                    # return the credit
+            if self._abort.is_set():                   # no `end`: dirty
+                return                                 # buffer stays unseen
+            meta = {"spec": self.spec.to_json(), "step": self.step,
+                    "extra": self.extra_meta}
+            t0 = time.perf_counter()
+            self.smp.end(self.step, pickle.dumps(meta), want_crc=True)
+            clean = self.smp.wait_clean()
+            t_l3 += time.perf_counter() - t0
+            self.result = PipelineResult(
+                step=self.step, clean_step=clean, bytes_sent=sent,
+                l1_seconds=self._l1_read, l1_stall_seconds=self._l1_stall,
+                l2_seconds=t_l2, l3_seconds=t_l3,
+                wall_seconds=time.perf_counter() - self._t0)
+        except BaseException as e:
+            if self.error is None:
+                self.error = e
+            self._abort.set()
+        finally:
+            self.done.set()
+
+    # ----------------------------------------------------------- public
+    def in_flight(self) -> bool:
+        return not self.done.is_set()
+
+    def wait(self, timeout: float = 300.0) -> PipelineResult:
+        """Idempotent: a finished flight re-raises its stored error (or
+        returns its result) on every call, so callers can distinguish
+        'still live' (the wait-timeout below) from 'failed with an internal
+        TimeoutError like an SMP ack timeout' by re-collecting after
+        checking `in_flight()`."""
+        self._draining.set()
+        try:
+            if not self.done.wait(timeout):
+                raise TimeoutError(
+                    f"snapshot pipeline for step {self.step} still in "
+                    f"flight after {timeout:.1f}s")
+        finally:
+            if not self.done.is_set():     # timed out: trainer resumes,
+                self._draining.clear()     # boundary yields matter again
+        self._pump_t.join(timeout=5.0)
+        self._stage_t.join(timeout=5.0)
+        if self.error is not None:
+            raise self.error
+        assert self.result is not None
+        return self.result
+
+
+class SnapshotPipeline:
+    """Per-engine HASC driver: owns the (static) bucket schedule and leaf
+    budget; `start` launches one `PipelineFlight` at a time."""
+
+    def __init__(self, smp, spec: FlatSpec, cfg,
+                 own_plan: Sequence[Tuple[int, int, int]],
+                 stripe_plan: Sequence[Tuple[int, int]]):
+        self.smp, self.spec, self.cfg = smp, spec, cfg
+        self.schedule = build_schedule(
+            spec, own_plan, stripe_plan, cfg.bucket_bytes,
+            opt_first=getattr(cfg, "opt_first", True))
+        self.budget = leaf_budget(
+            spec, [(lo, hi) for _, lo, hi in own_plan] + list(stripe_plan))
+
+    def start(self, leaves: List[Any], step: int,
+              extra_meta: dict) -> PipelineFlight:
+        return PipelineFlight(self.smp, self.spec, self.cfg, self.schedule,
+                              self.budget, leaves, step, extra_meta).launch()

@@ -101,26 +101,49 @@ def restore_state(run: str, n: int, total_bytes: int, template: Any,
     try:
         if info is not None:
             info["attached"] = sorted(views)
-        step = common_step(views)
-        if step is None:
-            raise RecoveryError("no common clean snapshot across survivors")
-        # integrity: corrupt members are demoted to "failed" and repaired
-        corrupt = [node for node, v in views.items()
-                   if not verify_crc(v, step, n, total_bytes)]
-        for node in corrupt:
-            views.pop(node).close()
-        missing = sorted(set(range(n)) - set(views))
+        # Newest usable step: clean on every member, or clean on all but
+        # ONE — a member whose async round lagged behind (its buffers
+        # rotated past the step) is byte-for-byte equivalent to a failed
+        # node at that step, and RAIM5 decodes its shard from the others'
+        # parity.  Corrupt members (CRC mismatch) are demoted the same way.
+        clean = {node: set(v.clean_steps()) for node, v in views.items()}
+        candidates = sorted(set().union(*clean.values()), reverse=True) \
+            if clean else []
+        chosen = None
+        crc_ok: Dict[Tuple[int, int], bool] = {}   # (node, step) -> verdict
+        for step in candidates:
+            holders = [nd for nd, steps in clean.items() if step in steps]
+            if n - len(holders) > 1:
+                continue
+            for nd in holders:                     # CRC once per (node,step)
+                if (nd, step) not in crc_ok:
+                    crc_ok[nd, step] = verify_crc(views[nd], step, n,
+                                                  total_bytes)
+            corrupt = [nd for nd in holders if not crc_ok[nd, step]]
+            usable = [nd for nd in holders if nd not in corrupt]
+            # need every member but at most one (RAIM5's budget), and at
+            # least one actual source to read from (n==1 + corrupt would
+            # otherwise slip through as usable=[])
+            if usable and len(usable) >= n - 1:
+                chosen = (step, usable, corrupt)
+                break
+        if chosen is None:
+            raise RecoveryError(
+                f"no usable snapshot step across survivors (dead: "
+                f"{sorted(set(range(n)) - set(views))}, clean steps: "
+                f"{ {nd: sorted(s) for nd, s in clean.items()} }); "
+                f"RAIM5 protects exactly one member")
+        step, usable, corrupt = chosen
+        missing = sorted(set(range(n)) - set(usable))
         if info is not None:
             info["corrupt"] = corrupt
             info["missing"] = missing
-        if len(missing) > 1:
-            raise RecoveryError(
-                f"{len(missing)} members unusable in one SG (dead: "
-                f"{sorted(set(range(n)) - set(alive_nodes))}, corrupt: "
-                f"{corrupt}); RAIM5 protects exactly one")
+            info["stale"] = [nd for nd in views
+                             if nd not in usable and nd not in corrupt]
+        use_views = {nd: views[nd] for nd in usable}
         failed = missing[0] if missing else None
-        buf = restore_bytes(views, n, total_bytes, step, failed)
-        any_view = next(iter(views.values()))
+        buf = restore_bytes(use_views, n, total_bytes, step, failed)
+        any_view = next(iter(use_views.values()))
         meta = pickle.loads(any_view.meta(step))
         spec = FlatSpec.from_json(meta["spec"])
         tree = buffer_to_tree(template, spec, buf)

@@ -20,7 +20,9 @@ from __future__ import annotations
 import os
 import pickle
 import struct
+import threading
 import time
+import zlib
 from dataclasses import dataclass
 from multiprocessing import get_context
 from multiprocessing.shared_memory import SharedMemory
@@ -145,6 +147,10 @@ def _smp_main(conn, run: str, node: int, n: int, total_bytes: int,
     stage_np = np.ndarray((stage_slots, bucket_bytes), np.uint8, stage.buf)
     buf_np = [np.ndarray((lay.buf_bytes,), np.uint8, b.buf) for b in bufs]
 
+    # L3 readiness event: the trainer-side handle blocks on this message
+    # instead of sleep-polling shm_open until the segments appear
+    conn.send(("ready",))
+
     dirty = -1
     try:
         while True:
@@ -172,7 +178,17 @@ def _smp_main(conn, run: str, node: int, n: int, total_bytes: int,
                     np.bitwise_xor(dview, src, out=dview)
                 sem.release()
             elif op == "end":
-                _, step, meta_blob = msg
+                _, step, meta_blob = msg[:3]
+                want_crc = bool(msg[3]) if len(msg) > 3 else False
+                if want_crc:
+                    # HASC L3: the own-region CRC is computed here, inside
+                    # the SMP, off every trainer-side critical path.  One
+                    # contiguous pass matches what recovery's verify_crc
+                    # recomputes (and what the serial engine streamed).
+                    meta = pickle.loads(meta_blob)
+                    meta["crc_own"] = zlib.crc32(
+                        buf_np[dirty][:lay.own_bytes])
+                    meta_blob = pickle.dumps(meta)
                 base = dirty * META_SLOT
                 mb = memoryview(meta_shm.buf)
                 mb[base:base + 8] = struct.pack("<q", len(meta_blob))
@@ -196,13 +212,11 @@ def _smp_main(conn, run: str, node: int, n: int, total_bytes: int,
                 break
     except (EOFError, KeyboardInterrupt):
         # Training side vanished (software failure). The paper's SMP keeps
-        # the clean snapshot alive; we simply keep segments and exit our
-        # loop when told, but here we *stay alive* awaiting a reconnect
-        # signal is not possible over a broken pipe -> idle-hold the
-        # segments until killed.
+        # the clean snapshot alive; a reconnect signal is not possible over
+        # a broken pipe, so park on a never-set event (interruptible, no
+        # polling) holding the segments until killed.
         try:
-            while True:
-                time.sleep(0.2)
+            threading.Event().wait()
         except KeyboardInterrupt:
             pass
     finally:
@@ -266,37 +280,57 @@ class SMPHandle:
         child.close()
         self._stage = None
         self._slot = 0
-        self._wait_segments()
+        self._wait_ready()
 
-    def _wait_segments(self, timeout=20.0):
-        t0 = time.time()
-        while time.time() - t0 < timeout:
-            try:
-                self._stage = _attach(_seg(self.run, self.node, "stage"))
-                self._stage_np = np.ndarray(
-                    (self.stage_slots, self.bucket_bytes), np.uint8,
-                    self._stage.buf)
-                return
-            except (FileNotFoundError, ValueError):
-                # ValueError: segment exists but isn't ftruncate'd yet
-                # (attach raced the SMP's shm_open) — retry
-                time.sleep(0.01)
-        raise TimeoutError("SMP did not come up")
+    def _wait_ready(self, timeout=90.0):
+        """Event-driven come-up: block on the SMP's `ready` message (sent
+        after every segment is created and sized) instead of sleep-polling
+        shm_open.  After `ready`, attach cannot race the SMP.  The budget
+        is a liveness bound only — spawn + numpy import for several SMPs
+        can take tens of seconds on a CPU-throttled host."""
+        if not self._conn.poll(timeout):
+            raise TimeoutError("SMP did not come up")
+        try:
+            msg = self._conn.recv()
+        except EOFError:
+            # child died before sending ready (e.g. shm creation failed);
+            # keep the historical, diagnosable come-up error
+            raise TimeoutError(
+                f"SMP for node {self.node} died during startup") from None
+        if msg[0] != "ready":
+            raise RuntimeError(f"unexpected SMP hello {msg!r}")
+        self._stage = _attach(_seg(self.run, self.node, "stage"))
+        self._stage_np = np.ndarray(
+            (self.stage_slots, self.bucket_bytes), np.uint8,
+            self._stage.buf)
 
     # -- snapshot protocol -------------------------------------------------
     def begin(self, step: int):
         self._conn.send(("begin", int(step)))
 
     def send_bucket(self, kind: int, dst: int, payload: np.ndarray):
-        self._sem.acquire()
+        # ring-slot credit: the cross-process BoundedSemaphore the SMP
+        # releases per consumed bucket — the L2 stager blocks here (no
+        # busy-wait) when the staging ring is full, which is exactly the
+        # backpressure that stalls L1 through the scratch-credit queue.
+        # A dead SMP can never release a credit, so poll liveness instead
+        # of blocking forever: the raise routes the engine to degraded.
+        while not self._sem.acquire(timeout=0.5):
+            if not self.proc.is_alive():
+                raise BrokenPipeError(
+                    f"SMP for node {self.node} died mid-snapshot "
+                    f"(ring credits lost)")
         slot = self._slot
         self._slot = (self._slot + 1) % self.stage_slots
         nb = payload.nbytes
         self._stage_np[slot, :nb] = payload.reshape(-1).view(np.uint8)
         self._conn.send(("bucket", slot, kind, int(dst), nb))
 
-    def end(self, step: int, meta_blob: bytes) -> None:
-        self._conn.send(("end", int(step), meta_blob))
+    def end(self, step: int, meta_blob: bytes, want_crc: bool = False
+            ) -> None:
+        """`want_crc=True` asks the SMP to compute the own-region CRC into
+        the snapshot meta at publish time (off the trainer's hot path)."""
+        self._conn.send(("end", int(step), meta_blob, bool(want_crc)))
 
     def wait_clean(self, timeout=60.0) -> int:
         if not self._conn.poll(timeout):

@@ -7,24 +7,34 @@ buckets, asynchronously with training.
 JAX adaptation note (DESIGN.md §2): jax.Arrays are immutable, so holding a
 reference to the step-t state pins a consistent snapshot for free — no
 GPU-side tensor duplication is needed before the async d2h copy, unlike the
-PyTorch original.  The async thread transfers leaf-by-leaf (device_get),
-stages into shared memory, and the SMP owns everything after that.
+PyTorch original.
+
+`SnapshotEngine` is a thin facade: the saving hot path is the hierarchical
+async pipeline in `repro.core.pipeline` (L1 device pump / L2 host stager /
+L3 event-driven SMP — HASC).  ``ReftConfig(pipeline=False)`` keeps the
+pre-refactor single serial thread (read -> CRC -> blocking ring send per
+bucket) as a measurable baseline for the pipeline's interference win.
 """
 from __future__ import annotations
 
-import bisect
 import pickle
 import threading
 import time
 import uuid
 from dataclasses import dataclass, field
-from typing import Any, Callable, Dict, List, Optional, Tuple
+from typing import Any, Dict, List, Optional, Tuple
 
 import numpy as np
 
 from repro.core import raim5
+from repro.core.pipeline import (LeafReader, PipelineFlight, SnapshotPipeline,
+                                 leaf_budget)
 from repro.core.smp import NodeLayout, SMPHandle
 from repro.core.treebytes import FlatSpec, leaf_arrays, make_flat_spec
+
+# Back-compat alias: the reader grew eviction budgets and moved into the
+# pipeline module where both the pipelined and serial paths share it.
+_LeafReader = LeafReader
 
 
 @dataclass(frozen=True)
@@ -35,43 +45,18 @@ class ReftConfig:
     checkpoint_every_snapshots: int = 50       # REFT-Ckpt tier
     ckpt_dir: str = "/tmp/reft-ckpt"
     run_id: str = field(default_factory=lambda: uuid.uuid4().hex[:8])
-
-
-class _LeafReader:
-    """Random byte-range access over the flat stream with per-snapshot
-    host caching (each leaf is device_get at most once per snapshot)."""
-
-    def __init__(self, spec: FlatSpec, leaves: List[Any]):
-        self.spec = spec
-        self.leaves = leaves
-        self.offsets = [l.offset for l in spec.leaves]
-        self._host: Dict[int, np.ndarray] = {}
-
-    def _leaf_bytes(self, i: int) -> np.ndarray:
-        if i not in self._host:
-            arr = np.asarray(self.leaves[i])          # d2h happens here
-            self._host[i] = np.ascontiguousarray(arr).reshape(-1) \
-                .view(np.uint8)
-        return self._host[i]
-
-    def read(self, lo: int, hi: int, out: np.ndarray) -> None:
-        i = bisect.bisect_right(self.offsets, lo) - 1
-        pos = lo
-        while pos < hi and i < len(self.spec.leaves):
-            ls = self.spec.leaves[i]
-            a = max(pos, ls.offset)
-            b = min(hi, ls.offset + ls.nbytes)
-            if b > a:
-                out[a - lo:b - lo] = self._leaf_bytes(i)[a - ls.offset:
-                                                         b - ls.offset]
-            pos = b
-            i += 1
-        if pos < hi:                                   # zero-pad past end
-            out[pos - lo:hi - lo] = 0
+    # --- HASC pipeline knobs (repro.core.pipeline) ---
+    pipeline: bool = True            # False = pre-refactor serial thread
+    prefetch_window: int = 4         # buckets of copy_to_host_async ahead
+    scratch_buffers: int = 2         # double-buffered L1 scratch fills
+    opt_first: bool = True           # drain optimizer-moment leaves first
+    yield_every_buckets: int = 4     # L1 yields to training this often
+    boundary_timeout_s: float = 0.005  # max wait for a step boundary
 
 
 class SnapshotEngine:
-    """REFT-Sn for one node of an SG of n members."""
+    """REFT-Sn for one node of an SG of n members (facade over the HASC
+    pipeline; one snapshot in flight at a time)."""
 
     def __init__(self, node: int, n: int, state_template: Any,
                  cfg: Optional[ReftConfig] = None, run_id: str = None):
@@ -86,11 +71,20 @@ class SnapshotEngine:
         self.smp = SMPHandle(self.run, node, n, self.spec.total_bytes,
                              stage_slots=cfg.stage_slots,
                              bucket_bytes=cfg.bucket_bytes)
-        self._thread: Optional[threading.Thread] = None
+        self._own = self._own_plan()
+        self._stripe = self._stripe_plan()
+        self._pipeline: Optional[SnapshotPipeline] = None
+        if cfg.pipeline:
+            self._pipeline = SnapshotPipeline(self.smp, self.spec, cfg,
+                                              self._own, self._stripe)
+        self._flight: Optional[PipelineFlight] = None
+        self._thread: Optional[threading.Thread] = None    # serial mode
         self._err: Optional[BaseException] = None
         self.degraded = False      # SMP unreachable: snapshots paused, not fatal
         self.last_clean_step = -1
-        self.stats = {"snapshots": 0, "bytes_sent": 0, "seconds": 0.0}
+        self.stats = {"snapshots": 0, "bytes_sent": 0, "seconds": 0.0,
+                      "l1_seconds": 0.0, "l1_stall_seconds": 0.0,
+                      "l2_seconds": 0.0, "l3_seconds": 0.0}
 
     # ------------------------------------------------------------- plan
     def _own_plan(self) -> List[Tuple[int, int, int]]:
@@ -112,17 +106,29 @@ class SnapshotEngine:
                 for ref in raim5.parity_stripe_of_node(self.node, self.n)]
 
     # -------------------------------------------------------- snapshot
+    def in_flight(self) -> bool:
+        if self._flight is not None and self._flight.in_flight():
+            return True
+        return self._thread is not None and self._thread.is_alive()
+
     def snapshot_async(self, state: Any, step: int,
                        extra_meta: dict = None) -> bool:
         """Fire-and-forget; returns False if the previous one is running
         (frequency self-limits to the achievable rate, Figure 4)."""
-        if self.degraded or (self._thread is not None
-                             and self._thread.is_alive()):
+        if self.degraded or self.in_flight():
             return False
+        self._collect_flight(0.0)
         self._raise_pending()
+        if self.degraded:                  # the drain just found a dead SMP
+            return False
         leaves = leaf_arrays(state)                    # pin the references
+        if self._pipeline is not None:
+            self._flight = self._pipeline.start(leaves, int(step),
+                                                extra_meta or {})
+            return True
         self._thread = threading.Thread(
-            target=self._run, args=(leaves, int(step), extra_meta or {}),
+            target=self._run_serial, args=(leaves, int(step),
+                                           extra_meta or {}),
             daemon=True, name=f"snap-n{self.node}")
         self._thread.start()
         return True
@@ -134,11 +140,55 @@ class SnapshotEngine:
         return self.wait()
 
     def wait(self, timeout: float = 300.0) -> int:
-        if self._thread is not None:
+        """Drain the in-flight snapshot.  On timeout the flight handle is
+        KEPT (a second snapshot can never overlap a live one) and a
+        `TimeoutError` is raised instead."""
+        if self._flight is not None:
+            self._collect_flight(timeout)      # raises TimeoutError if live
+        elif self._thread is not None:
             self._thread.join(timeout)
+            if self._thread.is_alive():
+                raise TimeoutError(
+                    f"serial snapshot thread still running after "
+                    f"{timeout:.1f}s; still in flight")
             self._thread = None
         self._raise_pending()
         return self.last_clean_step
+
+    def _collect_flight(self, timeout: float):
+        """Fold a finished flight into stats.  A TimeoutError from a flight
+        that is genuinely still LIVE propagates (the flight stays owned);
+        a flight that FAILED with an internal TimeoutError (e.g. the SMP
+        ack timed out) is a dead flight and is routed through _err so the
+        engine degrades exactly like the serial path."""
+        if self._flight is None:
+            return
+        flight = self._flight
+        try:
+            res = flight.wait(timeout)
+        except TimeoutError:
+            if flight.in_flight():
+                raise                          # flight stays current
+            try:                               # finished during the wait:
+                res = flight.wait(0.0)         # collect its real outcome
+            except BaseException as e:
+                self._flight = None
+                self._err = e
+                return                         # surfaced by _raise_pending
+        except BaseException as e:
+            self._flight = None
+            self._err = e
+            return                             # surfaced by _raise_pending
+        self._flight = None
+        self.last_clean_step = res.clean_step
+        st = self.stats
+        st["snapshots"] += 1
+        st["bytes_sent"] += res.bytes_sent
+        st["seconds"] += res.wall_seconds
+        st["l1_seconds"] += res.l1_seconds
+        st["l1_stall_seconds"] += res.l1_stall_seconds
+        st["l2_seconds"] += res.l2_seconds
+        st["l3_seconds"] += res.l3_seconds
 
     def _raise_pending(self):
         if self._err is not None:
@@ -151,44 +201,64 @@ class SnapshotEngine:
                 return
             raise err
 
-    def _run(self, leaves, step, extra_meta):
+    # ------------------------------------------------- serial baseline
+    def _run_serial(self, leaves, step, extra_meta):
+        """Pre-refactor monolithic path (read -> CRC -> blocking ring send
+        per bucket), kept as the interference baseline the HASC pipeline
+        is measured against (`ReftConfig(pipeline=False)`)."""
         try:
             import zlib
             t0 = time.time()
-            # prefetch: start async device->host copies for every leaf this
-            # node will touch (on TPU this overlaps DMA with the staging
-            # writes; on CPU it's a no-op)
             for leaf in leaves:
                 try:
                     leaf.copy_to_host_async()
                 except AttributeError:
                     pass
-            reader = _LeafReader(self.spec, leaves)
+            budget = leaf_budget(
+                self.spec, [(lo, hi) for _, lo, hi in self._own]
+                + list(self._stripe))
+            reader = LeafReader(self.spec, leaves, budget)
             bb = self.cfg.bucket_bytes
             scratch = np.empty(bb, np.uint8)
             sent = 0
             crc = 0
+            l1 = l2 = l3 = 0.0
+            t = time.perf_counter()
             self.smp.begin(step)
-            for dst0, lo, hi in self._own_plan():
+            l3 += time.perf_counter() - t
+            for dst0, lo, hi in self._own:
                 for a in range(lo, hi, bb):
                     b = min(a + bb, hi)
+                    t = time.perf_counter()
                     reader.read(a, b, scratch[:b - a])
                     crc = zlib.crc32(scratch[:b - a], crc)
+                    l1 += time.perf_counter() - t
+                    t = time.perf_counter()
                     self.smp.send_bucket(0, dst0 + (a - lo), scratch[:b - a])
+                    l2 += time.perf_counter() - t
                     sent += b - a
-            for lo, hi in self._stripe_plan():
+            for lo, hi in self._stripe:
                 for a in range(lo, hi, bb):
                     b = min(a + bb, hi)
+                    t = time.perf_counter()
                     reader.read(a, b, scratch[:b - a])
+                    l1 += time.perf_counter() - t
+                    t = time.perf_counter()
                     self.smp.send_bucket(1, a - lo, scratch[:b - a])
+                    l2 += time.perf_counter() - t
                     sent += b - a
             meta = {"spec": self.spec.to_json(), "step": step,
                     "extra": extra_meta, "crc_own": crc}
+            t = time.perf_counter()
             self.smp.end(step, pickle.dumps(meta))
             self.last_clean_step = self.smp.wait_clean()
+            l3 += time.perf_counter() - t
             self.stats["snapshots"] += 1
             self.stats["bytes_sent"] += sent
             self.stats["seconds"] += time.time() - t0
+            self.stats["l1_seconds"] += l1
+            self.stats["l2_seconds"] += l2
+            self.stats["l3_seconds"] += l3
         except BaseException as e:                      # surfaced on wait()
             self._err = e
 
@@ -199,6 +269,9 @@ class SnapshotEngine:
         return self.smp.persist(path, step=step)
 
     def close(self):
-        if self._thread is not None and self._thread.is_alive():
-            self._thread.join(timeout=30)
+        try:
+            if self.in_flight():
+                self.wait(timeout=30)
+        except Exception:
+            pass
         self.smp.stop()

@@ -74,6 +74,8 @@ def main(argv=None):
           f"batch={args.batch}x{args.seq} backend={args.backend}")
     state = init_train_state(cfg, 0).tree()
     ds = SyntheticDataset(cfg, shape, seed=0)
+    # no with_step_boundary wrapper here: sess.after_step runs every step
+    # and already ticks the HASC gate (one boundary signal per step)
     step_fn = jax.jit(make_train_step(cfg))
 
     spec = CheckpointSpec(

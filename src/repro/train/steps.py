@@ -6,8 +6,9 @@ states, and RNG states").
 """
 from __future__ import annotations
 
+import functools
 from dataclasses import dataclass
-from typing import Any
+from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp
@@ -91,6 +92,28 @@ def make_train_step(cfg: ModelConfig, opt: AdamConfig = AdamConfig(),
         return new_state, {"loss": loss, "grad_norm": gnorm}
 
     return train_step
+
+
+def with_step_boundary(step_fn: Callable,
+                       notify: Callable[[], None] = None) -> Callable:
+    """Yield hook for the HASC saving pipeline: wrap an (already-jitted)
+    step function so every invocation ticks the snapshot pipeline's
+    step-boundary gate — in-flight L1 device pumps then schedule their
+    bucket bursts at step boundaries instead of racing the step for host
+    bandwidth.  Wrap OUTSIDE `jax.jit` (the tick is a Python-side effect;
+    under a trace it would fire once at trace time and never again):
+
+        step_fn = with_step_boundary(jax.jit(make_train_step(cfg)))
+    """
+    if notify is None:
+        from repro.core.pipeline import step_boundary as notify
+
+    @functools.wraps(step_fn)
+    def stepped(*args, **kw):
+        out = step_fn(*args, **kw)
+        notify()
+        return out
+    return stepped
 
 
 def make_eval_step(cfg: ModelConfig):

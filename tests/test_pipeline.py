@@ -1,0 +1,349 @@
+"""HASC saving pipeline: schedule ordering, interference, backpressure,
+wait-timeout semantics, leaf-cache eviction, per-level accounting."""
+import time
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.pipeline import (
+    LeafReader, StepBoundaryGate, build_schedule, leaf_budget, step_boundary,
+)
+from repro.core.snapshot import ReftConfig, SnapshotEngine
+from repro.core.treebytes import make_flat_spec
+
+
+def opt_state(n=1 << 14, seed=0):
+    """params + adam moments, moments deliberately NOT first in flatten
+    order (dict order: mu/nu sort after params? flatten order is key-sorted
+    -> 'mu' < 'nu' < 'params'; use explicit names to pin params first)."""
+    k = jax.random.PRNGKey(seed)
+    return {
+        "a_params": {"w": jax.random.normal(k, (n,), jnp.float32),
+                     "b": jnp.ones((257,), jnp.bfloat16)},
+        "opt": {"mu": jnp.zeros((n,), jnp.float32),
+                "nu": jnp.zeros((n,), jnp.float32)},
+        "rng": jax.random.PRNGKey(seed + 1),
+    }
+
+
+def trees_equal(a, b):
+    return all(np.array_equal(np.asarray(x), np.asarray(y))
+               for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)))
+
+
+# ------------------------------------------------------------- scheduling
+def test_bucket_schedule_opt_first():
+    state = opt_state()
+    spec = make_flat_spec(state)
+    own = [(0, 0, spec.total_bytes)]
+    sched = build_schedule(spec, own, [], 4096, opt_first=True)
+    # all bytes covered exactly once
+    covered = sorted((t.lo, t.hi) for t in sched)
+    assert covered[0][0] == 0 and covered[-1][1] == spec.total_bytes
+    assert all(a2 == b1 for (_, b1), (a2, _) in zip(covered, covered[1:]))
+    # optimizer-moment buckets drain first
+    flags = [t.opt for t in sched]
+    assert any(flags), "schedule found no optimizer leaves"
+    assert not any(flags[flags.index(False):]), \
+        "a non-opt bucket precedes an opt bucket"
+    # and the opt buckets really point at moment leaves
+    first = sched[0]
+    assert "opt" in spec.leaves[first.leaf_lo].path.lower()
+
+
+def test_bucket_schedule_unordered_matches_plan_order():
+    state = opt_state()
+    spec = make_flat_spec(state)
+    own = [(0, 0, spec.total_bytes)]
+    sched = build_schedule(spec, own, [], 4096, opt_first=False)
+    los = [t.lo for t in sched]
+    assert los == sorted(los)
+
+
+def test_leaf_budget_counts_all_plan_bytes():
+    state = opt_state()
+    spec = make_flat_spec(state)
+    budget = leaf_budget(spec, [(0, spec.total_bytes)])
+    assert sum(budget.values()) == spec.total_bytes
+    half = spec.total_bytes // 2
+    budget2 = leaf_budget(spec, [(0, half)])
+    assert sum(budget2.values()) == half
+
+
+# --------------------------------------------------------------- reader
+def test_leaf_reader_evicts_consumed_leaves():
+    state = opt_state()
+    spec = make_flat_spec(state)
+    budget = leaf_budget(spec, [(0, spec.total_bytes)])
+    r = LeafReader(spec, jax.tree_util.tree_leaves(state), budget)
+    out = np.empty(4096, np.uint8)
+    for lo in range(0, spec.total_bytes, 4096):
+        hi = min(lo + 4096, spec.total_bytes)
+        r.read(lo, hi, out[:hi - lo])
+    assert r.cached_leaves() == 0, "host cache not evicted after consumption"
+
+
+def test_leaf_reader_unbudgeted_keeps_cache():
+    state = opt_state()
+    spec = make_flat_spec(state)
+    r = LeafReader(spec, jax.tree_util.tree_leaves(state))
+    out = np.empty(spec.total_bytes, np.uint8)
+    r.read(0, spec.total_bytes, out)
+    assert r.cached_leaves() == len(spec.leaves)
+
+
+# ------------------------------------------------------------ interference
+@pytest.mark.parametrize("pipelined", [True, False])
+def test_training_steps_proceed_while_snapshot_in_flight(pipelined):
+    state = {"opt_mu": jnp.zeros((1 << 18,), jnp.float32),
+             "w": jnp.ones((1 << 18,), jnp.float32)}
+    eng = SnapshotEngine(0, 1, state,
+                         ReftConfig(pipeline=pipelined, bucket_bytes=1 << 12,
+                                    stage_slots=4))
+    try:
+        assert eng.snapshot_async(state, 1)
+        steps_during_flight = 0
+        deadline = time.monotonic() + 30
+        while eng.in_flight() and time.monotonic() < deadline:
+            # a "training step": touch the accelerator state, tick the gate
+            _ = float(jnp.sum(state["w"][:16]))
+            step_boundary()
+            steps_during_flight += 1
+        assert steps_during_flight > 0, \
+            "no training step completed while the snapshot was in flight"
+        assert eng.wait() == 1
+        from repro.core.recovery import restore_state
+        rec, step, _ = restore_state(eng.run, 1, eng.spec.total_bytes,
+                                     state, [0])
+        assert step == 1 and trees_equal(rec, state)
+    finally:
+        eng.close()
+
+
+# ------------------------------------------------------------ backpressure
+def test_backpressure_ring_full_stalls_without_data_loss():
+    """stage ring of 1 slot + tiny buckets: L1 must stall on credits while
+    the SMP drains; the snapshot still completes bit-identically."""
+    state = opt_state(1 << 12)
+    cfg = ReftConfig(bucket_bytes=512, stage_slots=1, scratch_buffers=2)
+    eng = SnapshotEngine(0, 1, state, cfg)
+    try:
+        assert eng.snapshot_async(state, 7)
+        assert eng.wait() == 7
+        assert eng.stats["l1_stall_seconds"] >= 0.0
+        assert eng.stats["bytes_sent"] >= eng.spec.total_bytes
+        from repro.core.recovery import restore_state
+        rec, step, _ = restore_state(eng.run, 1, eng.spec.total_bytes,
+                                     state, [0])
+        assert step == 7 and trees_equal(rec, state)
+    finally:
+        eng.close()
+
+
+def test_sg4_pipelined_snapshot_raim5_roundtrip():
+    """Full SG with parity stripes through the pipeline: single-node loss
+    still decodes bit-identically (recovery contract unchanged)."""
+    from repro.core import ReftGroup
+    import tempfile
+    state = opt_state(1 << 12)
+    cfg = ReftConfig(bucket_bytes=512, stage_slots=4,
+                     ckpt_dir=tempfile.mkdtemp(),
+                     checkpoint_every_snapshots=10 ** 6)
+    g = ReftGroup(4, state, cfg)
+    try:
+        g.snapshot(state, 3, extra_meta={"k": 3})
+        g.inject_node_failure(2)
+        rec, step, extra, tier = g.recover()
+        assert tier == "raim5" and step == 3 and extra == {"k": 3}
+        assert trees_equal(rec, state)
+        lv = g.level_seconds()
+        assert lv["l1"] > 0 and lv["l2"] > 0 and lv["l3"] > 0
+    finally:
+        g.close()
+
+
+# ------------------------------------------------------- wait() semantics
+@pytest.mark.parametrize("pipelined", [True, False])
+def test_wait_timeout_keeps_flight_live(pipelined):
+    """Satellite fix: a timed-out wait() must NOT drop the handle — a
+    second snapshot can never overlap a live one."""
+    state = {"opt_mu": jnp.zeros((1 << 19,), jnp.float32)}
+    eng = SnapshotEngine(0, 1, state,
+                         ReftConfig(pipeline=pipelined, bucket_bytes=1 << 11,
+                                    stage_slots=2))
+    try:
+        assert eng.snapshot_async(state, 1)
+        with pytest.raises(TimeoutError):
+            eng.wait(timeout=0.001)
+        # the flight is still owned: a second snapshot is refused, and a
+        # patient wait() drains the ORIGINAL flight
+        assert not eng.snapshot_async(state, 2)
+        assert eng.wait() == 1
+        assert eng.stats["snapshots"] == 1
+    finally:
+        eng.close()
+
+
+def test_recovery_decodes_single_laggard_member():
+    """A member whose async rounds lag (buffer rotation evicted the steps
+    its peers still hold) is equivalent to one failed node at the newest
+    step: recovery must RAIM5-decode its shard, not fall through to the
+    (possibly empty) checkpoint tier."""
+    from repro.core import ReftGroup
+    import tempfile
+    state = opt_state(1 << 12)
+    cfg = ReftConfig(bucket_bytes=1024, stage_slots=4,
+                     ckpt_dir=tempfile.mkdtemp(),
+                     checkpoint_every_snapshots=10 ** 6)
+    g = ReftGroup(4, state, cfg)
+    try:
+        g.snapshot(state, 2, extra_meta={"k": 2})       # all members
+        # member 0 lags: only the others complete rounds 4, 6, 8, so their
+        # 3-buffer rotation evicts step 2 — no step is clean on ALL four
+        for s in (4, 6, 8):
+            st = jax.tree.map(
+                lambda x, s=s: x + s if x.dtype != jnp.uint32 else x, state)
+            for e in g.engines[1:]:
+                assert e.snapshot_async(st, s, {"k": s})
+            for e in g.engines[1:]:
+                e.wait()
+        last = jax.tree.map(lambda x: x + 8 if x.dtype != jnp.uint32 else x,
+                            state)
+        rec, step, extra, tier = g.recover()
+        assert step == 8 and tier == "raim5" and extra == {"k": 8}
+        assert trees_equal(rec, last)
+    finally:
+        g.close()
+
+
+def test_single_node_corrupt_newest_falls_back_to_older_step():
+    """n==1 with a CRC-corrupt newest snapshot must fall back to the older
+    clean step (never pick a step with zero usable sources), and raise
+    RecoveryError — not crash — when every step is corrupt."""
+    from repro.core.recovery import RecoveryError, restore_state
+    from tests.test_integrity_and_policy import _corrupt_clean_buffer
+    state = opt_state(1 << 10)
+    eng = SnapshotEngine(0, 1, state, ReftConfig(bucket_bytes=2048))
+    try:
+        eng.snapshot_sync(state, 1)
+        st2 = jax.tree.map(lambda x: x + 1 if x.dtype != jnp.uint32 else x,
+                           state)
+        eng.snapshot_sync(st2, 2)
+        assert _corrupt_clean_buffer(eng.run, 0, 1, eng.spec.total_bytes) == 2
+        rec, step, _ = restore_state(eng.run, 1, eng.spec.total_bytes,
+                                     state, [0])
+        assert step == 1 and trees_equal(rec, state)
+        # corrupt the older step too -> every candidate has zero usable
+        # sources -> clean RecoveryError (tier 3 takes over), not a crash
+        _corrupt_clean_buffer_at(eng.run, 0, 1, eng.spec.total_bytes)
+        with pytest.raises(RecoveryError):
+            restore_state(eng.run, 1, eng.spec.total_bytes, state, [0])
+    finally:
+        eng.close()
+
+
+def _corrupt_clean_buffer_at(run, node, step, total_bytes):
+    from repro.core.smp import ReadOnlyNode, _attach, _seg
+    view = ReadOnlyNode(run, node, 1, total_bytes)
+    idx = view.clean_steps()[step]
+    view.close()
+    shm = _attach(_seg(run, node, f"buf{idx}"))
+    shm.buf[100] = (shm.buf[100] + 1) % 256
+    shm.close()
+
+
+def test_smp_death_mid_flight_degrades_not_wedges():
+    """SMP killed mid-flight with a tiny ring: the stager must not block
+    forever on ring credits the dead SMP can never release — the engine
+    degrades and training-side calls keep returning."""
+    state = {"opt_mu": jnp.zeros((1 << 18,), jnp.float32)}
+    eng = SnapshotEngine(0, 1, state,
+                         ReftConfig(bucket_bytes=1 << 11, stage_slots=1))
+    try:
+        assert eng.snapshot_async(state, 1)
+        eng.smp.proc.kill()                   # not via inject: state stays
+        step = eng.wait(timeout=60)           # returns, does NOT wedge
+        assert eng.degraded
+        assert step == -1                     # nothing ever became clean
+        assert not eng.snapshot_async(state, 2)
+    finally:
+        eng.close()
+
+
+def test_flight_internal_timeout_degrades_not_wedges():
+    """A flight that FAILS with an internal TimeoutError (SMP ack timeout)
+    is a dead flight: the engine must degrade — like the serial path —
+    not keep the corpse as 'still live' and wedge every later call."""
+    state = opt_state(1 << 10)
+    eng = SnapshotEngine(0, 1, state, ReftConfig(bucket_bytes=1 << 12))
+    try:
+        def _ack_timeout(timeout=60.0):
+            raise TimeoutError("SMP ack timeout (simulated)")
+        eng.smp.wait_clean = _ack_timeout
+        assert eng.snapshot_async(state, 1)
+        assert eng.wait() == -1          # no clean step; no exception
+        assert eng.degraded
+        assert eng._flight is None       # corpse collected, not kept live
+        assert not eng.snapshot_async(state, 2)      # degraded: refused
+    finally:
+        eng.close()
+
+
+# ------------------------------------------------------------- yield gate
+def test_boundary_gate_inactive_without_trainer():
+    g = StepBoundaryGate()
+    assert not g.active()
+    t0 = time.perf_counter()
+    assert g.wait_boundary(0.5) is False        # returns immediately
+    assert time.perf_counter() - t0 < 0.25
+    g.notify()
+    assert g.active()
+
+
+def test_boundary_gate_releases_on_tick():
+    import threading
+    g = StepBoundaryGate()
+    g.notify()                                  # mark active
+    got = []
+    t = threading.Thread(target=lambda: got.append(g.wait_boundary(5.0)))
+    t.start()
+    time.sleep(0.05)
+    g.notify()
+    t.join(timeout=5)
+    assert got == [True]
+
+
+# ---------------------------------------------------------- facade events
+def test_reft_backend_reports_levels():
+    from repro.api import CheckpointSpec
+    import tempfile
+    state = opt_state(1 << 12)
+    with tempfile.TemporaryDirectory() as d:
+        spec = CheckpointSpec(backend="reft", ckpt_dir=d, sg_size=2,
+                              resume=False, bucket_bytes=1 << 12)
+        with spec.build(state) as ck:
+            assert ck.snapshot(state, 1, wait=True)
+            st = ck.stats()
+            assert st["engine_l1_seconds"] > 0
+            assert st["engine_l2_seconds"] > 0
+            assert st["engine_l3_seconds"] > 0
+            ev = [e for e in ck.events if e.kind == "snapshot"][-1]
+            assert ev.levels is not None and ev.levels["l1"] > 0
+
+
+def test_serial_fallback_via_options():
+    from repro.api import CheckpointSpec
+    import tempfile
+    state = opt_state(1 << 12)
+    with tempfile.TemporaryDirectory() as d:
+        spec = CheckpointSpec(backend="reft", ckpt_dir=d, sg_size=2,
+                              resume=False, bucket_bytes=1 << 12,
+                              options={"pipeline": False})
+        with spec.build(state) as ck:
+            assert ck.group.engines[0]._pipeline is None
+            assert ck.snapshot(state, 1, wait=True)
+            res = ck.restore()
+            assert res.step == 1 and trees_equal(res.state, state)
