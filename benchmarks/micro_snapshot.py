@@ -10,7 +10,10 @@ comparison is apples-to-apples by construction:
   async_disk  — CheckFreq-style overlapped full save; with shard=True the
                 TorchSnapshot-style 1/m-per-rank variant (parallel I/O)
 Phase rows (d2h / persist) reproduce the figure's decomposition for the
-disk paths.
+disk paths.  `fig9_reft_sn_encode_{host,device}` time the same snapshot
+through the host encode path and the device-side fused Pallas
+gather+XOR+CRC path (interpret-mode on CPU), with a byte-identity check
+between the two (`encode_*` rows / the JSON `encode` field).
 
 The run ends with a training-interference probe: median step time of a
 small jitted compute loop with snapshotting off, then with a snapshot
@@ -100,6 +103,53 @@ def run(size: int = SIZE) -> list:
     return rows
 
 
+def encode_paths(size: int):
+    """Device-vs-host snapshot encode on the same state (sg_size=4, so
+    parity stripes are exercised): one timed snapshot per path
+    (`fig9_reft_sn_encode_{host,device}`) plus a byte-identity check —
+    the device path (fused Pallas gather+XOR+CRC, interpret-mode on CPU
+    CI) must publish bit-identical own bytes, parity bytes, and
+    own-region CRC, or the rows are meaningless."""
+    import pickle
+
+    from repro.core.smp import ReadOnlyNode
+
+    state = make_param_state(size)
+    gb = tree_bytes(state) / 2 ** 30
+    rows, probes = [], {}
+    for mode in ("host", "device"):
+        opts = {"device_encode": "off" if mode == "host" else "on"}
+        with tempfile.TemporaryDirectory() as d:
+            spec = CheckpointSpec(backend="reft", ckpt_dir=d, sg_size=4,
+                                  resume=False, options=opts)
+            with spec.build(state) as ck:
+                ck.snapshot(state, 1, wait=True)            # warm/compile
+                t0 = time.perf_counter()
+                ck.snapshot(state, 2, wait=True)
+                t = time.perf_counter() - t0
+                rows.append((f"fig9_reft_sn_encode_{mode}", t, gb / t))
+                e0 = ck.group.engines[0]
+                view = ReadOnlyNode(e0.run, 0, 4, e0.spec.total_bytes)
+                try:
+                    probes[mode] = {
+                        "own": view.read_own(2).tobytes(),
+                        "parity": view.read_parity(2).tobytes(),
+                        "crc": pickle.loads(view.meta(2)).get("crc_own"),
+                    }
+                finally:
+                    view.close()
+    checks = {
+        "own_identical": probes["host"]["own"] == probes["device"]["own"],
+        "parity_identical":
+            probes["host"]["parity"] == probes["device"]["parity"],
+        "crc_identical": probes["host"]["crc"] is not None
+            and probes["host"]["crc"] == probes["device"]["crc"],
+    }
+    if not all(checks.values()):
+        raise RuntimeError(f"device/host encode mismatch: {checks}")
+    return rows, checks
+
+
 def interference(size: int, steps: int = 50, rounds: int = 3) -> dict:
     """Training-interference probe: step-time delta with a snapshot
     permanently in flight, serial thread vs HASC pipeline on the same
@@ -186,9 +236,13 @@ def main(argv=None):
     args = ap.parse_args(argv)
     size = args.size or (SMOKE_SIZE if args.smoke else SIZE)
     rows = run(size)
+    enc_rows, enc_checks = encode_paths(size)
+    rows += enc_rows
     print("bench,seconds,GB_per_s")
     for name, s, gbps in rows:
         print(f"{name},{s:.4f},{gbps:.2f}")
+    for k, v in enc_checks.items():
+        print(f"encode_{k},{int(v)},")
     inter = None
     if not args.no_interference:
         inter = interference(size)
@@ -204,6 +258,7 @@ def main(argv=None):
             "size_bytes": size,
             "rows": [{"name": n, "seconds": s, "gb_per_s": g}
                      for n, s, g in rows],
+            "encode": enc_checks,
             "interference": inter,
         }
         with open(args.json, "w") as fh:

@@ -79,6 +79,13 @@ class ReftCheckpointer(Checkpointer):
             opt_first=opt.get("opt_first", True),
             yield_every_buckets=opt.get("yield_every_buckets", 4),
             boundary_timeout_s=opt.get("boundary_timeout_s", 0.005),
+            # device-side encode + multi-flight (docs/API.md
+            # "Device-side encode"): fused Pallas gather+XOR+CRC before
+            # d2h, overlapped flights, saving-path CPU pinning
+            device_encode=opt.get("device_encode", "auto"),
+            crc_impl=opt.get("crc_impl", "pallas"),
+            max_flights=opt.get("max_flights", 1),
+            pin_cpus=opt.get("pin_cpus", "auto"),
         )
         self.group = ReftGroup(spec.sg_size, state_template, rcfg)
         self.manager = CheckpointManager(spec.ckpt_dir, spec.sg_size,

@@ -7,18 +7,36 @@ backpressure signal, so saving and training contend as little as the
 hardware allows:
 
   L1 device pump    windowed ``copy_to_host_async`` prefetch over the
-                    upcoming buckets, double-buffered scratch fills, a
+                    upcoming buckets (batched ``jax.device_get`` per
+                    prefetch window), double-buffered scratch fills, a
                     bucket schedule that drains optimizer-moment leaves
                     first, and cooperative yields at training step
-                    boundaries (`StepBoundaryGate`).
+                    boundaries (`StepBoundaryGate`).  With
+                    ``device_encode`` the pump instead gathers each
+                    bucket's leaf byte-ranges on the accelerator and runs
+                    the fused Pallas encode kernel (XOR parity + CRC32,
+                    `repro.kernels.stage`) *before* the d2h copy.
   L2 host stager    moves ready buckets into the SMP staging ring under
                     credit-based flow control: scratch-buffer credits
                     upstream (to L1), ring-slot semaphore credits
                     downstream (from the SMP's bucket consumption).
+                    Best-effort pinned to the saving-path CPU set
+                    (`ReftConfig.pin_cpus`).
   L3 SMP            event-driven begin/bucket/end over the pipe; the
                     own-region CRC is computed inside the SMP at ``end``
-                    (off every trainer-side critical path); the clean-ack
-                    completes the flight.
+                    (off every trainer-side critical path) — or handed
+                    over precombined when the device encode path already
+                    produced per-bucket digests; the clean-ack completes
+                    the flight.
+
+Multi-flight overlap: with ``max_flights > 1`` snapshot N+1's L1 pump may
+start while snapshot N drains L2/L3.  Flights chain on two events —
+N+1's pump waits for N's *pump* to finish (so the shared scratch-credit
+pool is drained oldest-first, deadlock-free), and N+1's stager waits for
+N's clean-ack before ``begin`` (so the SMP never holds two dirty
+buffers).  The scratch pool is owned by the pipeline, not the flight, so
+scratch memory stays fixed at ``scratch_buffers`` buckets no matter how
+many flights are in the air.
 
 The flight keeps `snapshot_async`/`snapshot_sync`/`wait` semantics and the
 dirty-never-visible invariant: an aborted flight never sends ``end``, so
@@ -27,6 +45,7 @@ the dirty buffer is never published.
 from __future__ import annotations
 
 import bisect
+import os
 import pickle
 import queue
 import threading
@@ -36,12 +55,14 @@ from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro.core.crcutil import crc32_concat
 from repro.core.treebytes import FlatSpec, iter_buckets
 
 __all__ = [
     "StepBoundaryGate", "step_boundary", "BucketTask", "build_schedule",
-    "leaf_budget", "LeafReader", "PipelineResult", "PipelineFlight",
-    "SnapshotPipeline",
+    "leaf_budget", "LeafReader", "DeviceEncoder", "PipelineResult",
+    "PipelineFlight", "SnapshotPipeline", "resolve_device_encode",
+    "resolve_affinity", "pin_current_thread",
 ]
 
 
@@ -93,6 +114,67 @@ def step_boundary() -> None:
     GATE.notify()
 
 
+# --------------------------------------------------------- mode resolution
+def resolve_device_encode(cfg) -> bool:
+    """`ReftConfig.device_encode`: "on" forces the device encode path
+    (interpret-mode kernels on CPU — what CI exercises), "off" forces the
+    host path, "auto" enables it exactly when a real accelerator backs
+    the default JAX backend."""
+    mode = str(getattr(cfg, "device_encode", "auto")).lower()
+    if mode in ("on", "true", "1"):
+        return True
+    if mode in ("off", "false", "0"):
+        return False
+    import jax
+    return jax.default_backend() != "cpu"
+
+
+def resolve_affinity(pin) -> Optional[Tuple[int, ...]]:
+    """Saving-path CPU set for the L2 stager thread + SMP process.
+
+    `None`/"off" disables pinning; "auto" reserves the trailing eighth of
+    the allowed CPUs on hosts big enough for it to help (>= 8 allowed
+    cores — tiny CI runners are left alone); an explicit sequence is
+    intersected with the allowed set.  Best-effort: unsupported platforms
+    resolve to None."""
+    if pin is None or pin is False or pin == "off":   # NB: identity, not
+        return None                                   # ==: cpu id 0 != False
+    if pin is True:
+        pin = "auto"
+    if not hasattr(os, "sched_getaffinity"):
+        return None
+    try:
+        avail = sorted(os.sched_getaffinity(0))
+    except OSError:
+        return None
+    if pin == "auto":
+        if len(avail) < 8:
+            return None
+        k = max(1, len(avail) // 8)
+        return tuple(avail[-k:])
+    try:                                 # best-effort: a malformed knob
+        if isinstance(pin, int):         # (bare int, "0,1" string, junk)
+            pin = (pin,)                 # must never fail engine setup
+        elif isinstance(pin, str):
+            pin = pin.replace(",", " ").split()
+        cpus = tuple(c for c in (int(x) for x in pin) if c in avail)
+    except (TypeError, ValueError):
+        return None
+    return cpus or None
+
+
+def pin_current_thread(cpus) -> Optional[Tuple[int, ...]]:
+    """Pin the calling thread (Linux: per-thread affinity) to `cpus`.
+    Returns the applied set, or None where unsupported/denied."""
+    if not cpus or not hasattr(os, "sched_setaffinity"):
+        return None
+    try:
+        os.sched_setaffinity(0, cpus)
+        return tuple(sorted(os.sched_getaffinity(0)))
+    except (AttributeError, OSError):
+        return None
+
+
 # ------------------------------------------------------------- scheduling
 _OPT_MARKERS = ("opt", "mu", "nu", "moment", "adam", "exp_avg")
 
@@ -105,14 +187,18 @@ def _is_opt_path(path: str) -> bool:
 @dataclass(frozen=True)
 class BucketTask:
     """One staging-ring bucket: bytes [lo, hi) of the flat stream, written
-    at `dst` of the own region (kind 0) or XORed into parity (kind 1)."""
-    kind: int                    # 0 = own data block bytes, 1 = parity
+    at `dst` of the own region (kind 0), XORed into parity (kind 1), or —
+    device encode path — the XOR of the stripe's `sources` ranges written
+    straight into parity (kind 2, one d2h'd block instead of n-1)."""
+    kind: int                    # 0 = own data, 1 = host parity XOR,
+                                 # 2 = device-encoded parity write
     dst: int                     # destination offset within the region
-    lo: int                      # global flat-stream byte range
-    hi: int
+    lo: int                      # global flat-stream byte range (kind 2:
+    hi: int                      # the first source range)
     leaf_lo: int                 # first/last+1 spec-leaf index overlapped
     leaf_hi: int
     opt: bool                    # bucket starts inside an optimizer leaf
+    sources: Tuple[Tuple[int, int], ...] = ()   # kind 2: stripe ranges
 
 
 def _leaf_span(offsets: Sequence[int], spec: FlatSpec,
@@ -126,12 +212,18 @@ def build_schedule(spec: FlatSpec,
                    own_plan: Sequence[Tuple[int, int, int]],
                    stripe_plan: Sequence[Tuple[int, int]],
                    bucket_bytes: int, *,
-                   opt_first: bool = True) -> List[BucketTask]:
+                   opt_first: bool = True,
+                   fuse_parity: bool = False) -> List[BucketTask]:
     """Bucket-split both plans into `BucketTask`s.  With `opt_first`, the
     buckets that start inside optimizer-moment leaves drain first: the
     moments are dead weights until the next optimizer update, so saving
     them first maximises the window in which training may already mutate
-    (rebind) the parameter leaves it is about to need."""
+    (rebind) the parameter leaves it is about to need.
+
+    With `fuse_parity` (device encode path) the stripe plan becomes one
+    kind-2 task per *parity-region* bucket, carrying the n-1 source
+    ranges the device kernel XOR-folds — the parity leaves the device
+    already encoded, cutting parity d2h traffic by (n-1)x."""
     offsets = [l.offset for l in spec.leaves]
     tasks: List[BucketTask] = []
     for dst0, lo, hi in own_plan:
@@ -139,11 +231,22 @@ def build_schedule(spec: FlatSpec,
             l0, l1 = _leaf_span(offsets, spec, a, b)
             opt = l0 < len(spec.leaves) and _is_opt_path(spec.leaves[l0].path)
             tasks.append(BucketTask(0, dst0 + (a - lo), a, b, l0, l1, opt))
-    for lo, hi in stripe_plan:
-        for a, b in iter_buckets(lo, hi, bucket_bytes):
-            l0, l1 = _leaf_span(offsets, spec, a, b)
+    if fuse_parity and stripe_plan:
+        bases = [lo for lo, _ in stripe_plan]
+        bs = stripe_plan[0][1] - stripe_plan[0][0]
+        for a, b in iter_buckets(0, bs, bucket_bytes):
+            srcs = tuple((base + a, base + b) for base in bases)
+            l0, l1 = _leaf_span(offsets, spec, srcs[0][0], srcs[0][1])
             opt = l0 < len(spec.leaves) and _is_opt_path(spec.leaves[l0].path)
-            tasks.append(BucketTask(1, a - lo, a, b, l0, l1, opt))
+            tasks.append(BucketTask(2, a, srcs[0][0], srcs[0][1], l0, l1,
+                                    opt, srcs))
+    else:
+        for lo, hi in stripe_plan:
+            for a, b in iter_buckets(lo, hi, bucket_bytes):
+                l0, l1 = _leaf_span(offsets, spec, a, b)
+                opt = l0 < len(spec.leaves) \
+                    and _is_opt_path(spec.leaves[l0].path)
+                tasks.append(BucketTask(1, a - lo, a, b, l0, l1, opt))
     if opt_first:
         tasks.sort(key=lambda t: 0 if t.opt else 1)      # stable
     return tasks
@@ -173,7 +276,8 @@ class LeafReader:
     `budget` ({leaf_idx: bytes that will be read}), a leaf's host copy is
     evicted as soon as its byte ranges are fully consumed, bounding the
     host-cache footprint to the live working set instead of the entire
-    state."""
+    state.  `fetch` batch-transfers a prefetch window's leaves in one
+    `jax.device_get(list)` instead of a synchronous per-leaf read."""
 
     def __init__(self, spec: FlatSpec, leaves: List[Any],
                  budget: Optional[Dict[int, int]] = None):
@@ -183,12 +287,34 @@ class LeafReader:
         self._host: Dict[int, np.ndarray] = {}
         self._budget = budget
         self._consumed: Dict[int, int] = {}
+        self.batched_fetches = 0
+
+    @staticmethod
+    def _as_bytes(arr) -> np.ndarray:
+        return np.ascontiguousarray(arr).reshape(-1).view(np.uint8)
+
+    def fetch(self, idxs: Sequence[int]) -> None:
+        """Batched d2h for every listed leaf not yet cached: pre-warm with
+        `copy_to_host_async`, then ONE `jax.device_get(list)` — the L1
+        pump calls this per prefetch-window advance instead of paying a
+        synchronous `np.asarray` per leaf at first touch."""
+        missing = [i for i in idxs if i not in self._host]
+        if not missing:
+            return
+        for i in missing:
+            try:
+                self.leaves[i].copy_to_host_async()
+            except AttributeError:
+                pass
+        import jax
+        got = jax.device_get([self.leaves[i] for i in missing])
+        for i, arr in zip(missing, got):
+            self._host[i] = self._as_bytes(arr)
+        self.batched_fetches += 1
 
     def _leaf_bytes(self, i: int) -> np.ndarray:
         if i not in self._host:
-            arr = np.asarray(self.leaves[i])          # d2h happens here
-            self._host[i] = np.ascontiguousarray(arr).reshape(-1) \
-                .view(np.uint8)
+            self._host[i] = self._as_bytes(np.asarray(self.leaves[i]))
         return self._host[i]
 
     def read(self, lo: int, hi: int, out: np.ndarray) -> None:
@@ -215,6 +341,92 @@ class LeafReader:
         return len(self._host)
 
 
+# --------------------------------------------------------- device encoder
+class DeviceEncoder:
+    """Device-side bucket encode for one flight: gathers a `BucketTask`'s
+    scattered leaf byte-ranges into a contiguous uint32 lane buffer *on
+    the accelerator* (uint8 bitcast views of the pinned leaves, sliced and
+    concatenated device-side), then runs the fused Pallas kernel
+    (`repro.kernels.stage.encode_bucket`) — XOR parity fold for kind-2
+    buckets, CRC32 for own-data buckets — and pre-warms the d2h copy.
+    The host receives ready-to-publish bytes + digest; no per-leaf host
+    gather, no host XOR, no host zlib."""
+
+    def __init__(self, spec: FlatSpec, leaves: List[Any], *,
+                 interpret: Optional[bool] = None,
+                 crc_impl: str = "pallas"):
+        import jax  # noqa: F401  (device path requires jax at runtime)
+        import jax.numpy as jnp
+        from repro.kernels.stage import (LANE_BYTES, encode_bucket,
+                                         pack_lanes)
+        self._jnp = jnp
+        self._lane_bytes = LANE_BYTES
+        self._encode = encode_bucket
+        self._pack = pack_lanes
+        self.spec = spec
+        self.leaves = leaves
+        self.offsets = [l.offset for l in spec.leaves]
+        self.interpret = interpret
+        self.crc_impl = crc_impl
+        self._u8cache: Dict[int, Any] = {}
+
+    def _u8(self, i: int):
+        got = self._u8cache.get(i)
+        if got is None:
+            import jax
+            jnp = self._jnp
+            arr = jnp.asarray(self.leaves[i])
+            if arr.dtype == jnp.bool_:
+                arr = arr.astype(jnp.uint8)
+            if arr.dtype != jnp.uint8:
+                arr = jax.lax.bitcast_convert_type(arr, jnp.uint8)
+            got = self._u8cache[i] = arr.reshape(-1)
+        return got
+
+    def gather_lanes(self, lo: int, hi: int):
+        """Bytes [lo, hi) of the flat stream as (n_lanes,) uint32 on
+        device, zero-padded past `total_bytes` and up to whole lanes."""
+        jnp = self._jnp
+        nb = hi - lo
+        parts = []
+        i = bisect.bisect_right(self.offsets, lo) - 1
+        pos = lo
+        while pos < hi and i < len(self.spec.leaves):
+            ls = self.spec.leaves[i]
+            a, b = max(pos, ls.offset), min(hi, ls.offset + ls.nbytes)
+            if b > a:
+                parts.append(self._u8(i)[a - ls.offset:b - ls.offset])
+            pos = b
+            i += 1
+        pad = (hi - pos) + ((-nb) % self._lane_bytes)
+        if pad:
+            parts.append(jnp.zeros(pad, jnp.uint8))
+        u8 = parts[0] if len(parts) == 1 else jnp.concatenate(parts)
+        return self._pack(u8)
+
+    def encode(self, task: BucketTask):
+        """Dispatch the fused encode for `task`; returns (lanes, crc,
+        nbytes) device arrays with the d2h copy already warming."""
+        jnp = self._jnp
+        nb = task.hi - task.lo
+        if task.kind == 2:
+            rows = jnp.stack([self.gather_lanes(lo, hi)
+                              for lo, hi in task.sources])
+            want_crc = False                 # parity carries no checksum
+        else:
+            rows = self.gather_lanes(task.lo, task.hi)[None]
+            want_crc = True
+        lanes, crc = self._encode(rows, nbytes=nb, want_crc=want_crc,
+                                  interpret=self.interpret,
+                                  crc_impl=self.crc_impl)
+        for a in (lanes, crc):
+            try:
+                a.copy_to_host_async()
+            except AttributeError:
+                pass
+        return lanes, crc, nb
+
+
 # --------------------------------------------------------------- flights
 @dataclass(frozen=True)
 class PipelineResult:
@@ -236,27 +448,37 @@ class PipelineFlight:
     """One in-flight snapshot: an L1 pump thread and an L2 stager thread
     joined by credit queues.  `wait` never drops a live flight (a timeout
     raises and the flight stays current), and an aborted flight never
-    sends `end`, so a half-written dirty buffer is never published."""
+    sends `end`, so a half-written dirty buffer is never published.
+
+    Scratch credits come from the owning pipeline's SHARED pool; `prev`
+    chains multi-flight overlap (see module docstring): this flight's
+    pump starts after `prev`'s pump finished, its stager `begin`s after
+    `prev`'s clean-ack."""
 
     def __init__(self, smp, spec: FlatSpec, cfg, schedule: List[BucketTask],
                  budget: Dict[int, int], leaves: List[Any], step: int,
-                 extra_meta: dict):
+                 extra_meta: dict, *, free: "queue.Queue",
+                 prev: "Optional[PipelineFlight]" = None,
+                 encoder: Optional[DeviceEncoder] = None,
+                 affinity: Optional[Tuple[int, ...]] = None,
+                 pipeline: "Optional[SnapshotPipeline]" = None):
         self.smp, self.spec, self.cfg = smp, spec, cfg
         self.schedule, self.budget = schedule, budget
         self.leaves, self.step, self.extra_meta = leaves, step, extra_meta
+        self.prev = prev
+        self.encoder = encoder
+        self.affinity = affinity
+        self.pipeline = pipeline
         self.result: Optional[PipelineResult] = None
         self.error: Optional[BaseException] = None
         self.done = threading.Event()
+        self.pump_done = threading.Event()
         self._abort = threading.Event()
         # set while a caller is blocked in wait(): the trainer cannot tick
         # step boundaries then, so the pump must not wait for them
         self._draining = threading.Event()
-        self._free: "queue.Queue" = queue.Queue()
+        self._free = free                       # SHARED scratch-credit pool
         self._ready: "queue.Queue" = queue.Queue()
-        # honor the knob down to 1 (a single credit fully serializes L1/L2,
-        # useful for debugging and minimal host footprint)
-        for _ in range(max(1, getattr(cfg, "scratch_buffers", 2))):
-            self._free.put(np.empty(cfg.bucket_bytes, np.uint8))
         self._l1_read = 0.0
         self._l1_stall = 0.0
         self._t0 = time.perf_counter()
@@ -271,7 +493,7 @@ class PipelineFlight:
         return self
 
     # ------------------------------------------------------------- L1
-    def _get_credit(self) -> np.ndarray:
+    def _get_credit(self):
         while True:
             try:
                 t0 = time.perf_counter()
@@ -283,48 +505,112 @@ class PipelineFlight:
                 if self._abort.is_set():
                     raise RuntimeError("snapshot pipeline aborted") from None
 
+    def _wait_event(self, ev: threading.Event, what: str) -> None:
+        while not ev.wait(0.5):
+            if self._abort.is_set():
+                raise RuntimeError(
+                    f"snapshot pipeline aborted while waiting for {what}")
+
     def _pump(self):
         try:
-            reader = LeafReader(self.spec, self.leaves, self.budget)
-            issued: set = set()
-            window = max(1, getattr(self.cfg, "prefetch_window", 4))
-            yield_every = max(0, getattr(self.cfg, "yield_every_buckets", 4))
-            yield_timeout = getattr(self.cfg, "boundary_timeout_s", 0.005)
-            sched = self.schedule
-            for i, task in enumerate(sched):
-                if self._abort.is_set():
-                    raise RuntimeError("snapshot pipeline aborted")
-                t0 = time.perf_counter()
-                for nxt in sched[i:i + window]:        # windowed prefetch
-                    for li in range(nxt.leaf_lo, nxt.leaf_hi):
-                        if li not in issued:
-                            issued.add(li)
-                            try:
-                                self.leaves[li].copy_to_host_async()
-                            except AttributeError:
-                                pass
-                self._l1_read += time.perf_counter() - t0
-                if yield_every and i and i % yield_every == 0 \
-                        and not self._draining.is_set():
-                    GATE.wait_boundary(yield_timeout)  # yield to training
-                buf = self._get_credit()
-                nb = task.hi - task.lo
-                t0 = time.perf_counter()
-                reader.read(task.lo, task.hi, buf[:nb])
-                self._l1_read += time.perf_counter() - t0
-                self._ready.put((task, buf, nb))
+            prev = self.prev               # local: the stager clears the
+            if prev is not None:           # attr once this flight is done
+                # multi-flight: consume shared scratch credits strictly
+                # oldest-flight-first (no two pumps compete for the pool,
+                # so the older flight can always finish draining)
+                self._wait_event(prev.pump_done, "predecessor pump")
+            if self.encoder is not None:
+                self._pump_device()
+            else:
+                self._pump_host()
         except BaseException as e:
             if self.error is None:
                 self.error = e
             self._abort.set()
         finally:
+            self.pump_done.set()
             self._ready.put(_STOP)
+
+    def _pump_host(self):
+        reader = LeafReader(self.spec, self.leaves, self.budget)
+        issued: set = set()
+        window = max(1, getattr(self.cfg, "prefetch_window", 4))
+        yield_every = max(0, getattr(self.cfg, "yield_every_buckets", 4))
+        yield_timeout = getattr(self.cfg, "boundary_timeout_s", 0.005)
+        sched = self.schedule
+        for i, task in enumerate(sched):
+            if self._abort.is_set():
+                raise RuntimeError("snapshot pipeline aborted")
+            t0 = time.perf_counter()
+            fresh = []
+            for nxt in sched[i:i + window]:        # windowed prefetch
+                for li in range(nxt.leaf_lo, nxt.leaf_hi):
+                    if li not in issued:
+                        issued.add(li)
+                        fresh.append(li)
+            if fresh:
+                reader.fetch(fresh)     # one batched d2h for the window
+            self._l1_read += time.perf_counter() - t0
+            if yield_every and i and i % yield_every == 0 \
+                    and not self._draining.is_set():
+                GATE.wait_boundary(yield_timeout)  # yield to training
+            buf = self._get_credit()
+            nb = task.hi - task.lo
+            t0 = time.perf_counter()
+            try:
+                reader.read(task.lo, task.hi, buf[:nb])
+            except BaseException:
+                self._free.put(buf)                # never leak a credit
+                raise
+            self._l1_read += time.perf_counter() - t0
+            self._ready.put((task, buf, buf[:nb], nb, None))
+
+    def _pump_device(self):
+        enc = self.encoder
+        window = max(1, getattr(self.cfg, "prefetch_window", 4))
+        yield_every = max(0, getattr(self.cfg, "yield_every_buckets", 4))
+        yield_timeout = getattr(self.cfg, "boundary_timeout_s", 0.005)
+        sched = self.schedule
+        pending: Dict[int, tuple] = {}
+        for i, task in enumerate(sched):
+            if self._abort.is_set():
+                raise RuntimeError("snapshot pipeline aborted")
+            t0 = time.perf_counter()
+            for j in range(i, min(i + window, len(sched))):
+                if j not in pending:       # encode a window ahead; the
+                    pending[j] = enc.encode(sched[j])   # kernels + d2h run
+            self._l1_read += time.perf_counter() - t0   # async under this
+            if yield_every and i and i % yield_every == 0 \
+                    and not self._draining.is_set():
+                GATE.wait_boundary(yield_timeout)
+            buf = self._get_credit()       # token: bounds queued buckets
+            lanes, crc, nb = pending.pop(i)
+            t0 = time.perf_counter()
+            try:
+                host = np.asarray(lanes)               # d2h (pre-warmed)
+                payload = host.view(np.uint8)[:nb]
+                crc_val = int(np.asarray(crc)[0]) if task.kind == 0 else None
+            except BaseException:
+                self._free.put(buf)
+                raise
+            self._l1_read += time.perf_counter() - t0
+            self._ready.put((task, buf, payload, nb, crc_val))
 
     # ------------------------------------------------------------- L2
     def _stage(self):
         try:
+            applied = pin_current_thread(self.affinity)
+            if self.pipeline is not None and applied is not None:
+                self.pipeline.applied_affinity = applied
             t_l2 = 0.0
             sent = 0
+            crcs: List[Tuple[int, int, int]] = []      # (dst, nbytes, crc)
+            prev = self.prev
+            if prev is not None:
+                # the SMP holds at most one dirty buffer: begin only after
+                # the predecessor's clean-ack (its stager is done with the
+                # pipe, so the conn is ours alone from here)
+                self._wait_event(prev.done, "predecessor clean-ack")
             t0 = time.perf_counter()
             self.smp.begin(self.step)
             t_l3 = time.perf_counter() - t0
@@ -332,18 +618,29 @@ class PipelineFlight:
                 item = self._ready.get()
                 if item is _STOP:
                     break
-                task, buf, nb = item
+                task, buf, payload, nb, crc_val = item
                 t0 = time.perf_counter()
-                self.smp.send_bucket(task.kind, task.dst, buf[:nb])
+                try:
+                    self.smp.send_bucket(task.kind, task.dst, payload)
+                finally:
+                    self._free.put(buf)                # return the credit
                 t_l2 += time.perf_counter() - t0
                 sent += nb
-                self._free.put(buf)                    # return the credit
+                if crc_val is not None:
+                    crcs.append((task.dst, nb, crc_val))
             if self._abort.is_set():                   # no `end`: dirty
                 return                                 # buffer stays unseen
             meta = {"spec": self.spec.to_json(), "step": self.step,
                     "extra": self.extra_meta}
             t0 = time.perf_counter()
-            self.smp.end(self.step, pickle.dumps(meta), want_crc=True)
+            if crcs:
+                # device encode path: per-bucket digests -> one combined
+                # own-region CRC (dst order); the SMP skips its zlib pass
+                crcs.sort()
+                crc_own = crc32_concat((c, nb) for _, nb, c in crcs)
+                self.smp.end(self.step, pickle.dumps(meta), crc_own=crc_own)
+            else:
+                self.smp.end(self.step, pickle.dumps(meta), want_crc=True)
             clean = self.smp.wait_clean()
             t_l3 += time.perf_counter() - t0
             self.result = PipelineResult(
@@ -356,7 +653,19 @@ class PipelineFlight:
                 self.error = e
             self._abort.set()
         finally:
+            self._drain_ready()            # return credits of unsent items
             self.done.set()
+            self.prev = None               # release the predecessor (and
+                                           # its pinned leaves) promptly
+
+    def _drain_ready(self) -> None:
+        while True:
+            try:
+                item = self._ready.get_nowait()
+            except queue.Empty:
+                return
+            if item is not _STOP:
+                self._free.put(item[1])
 
     # ----------------------------------------------------------- public
     def in_flight(self) -> bool:
@@ -379,6 +688,7 @@ class PipelineFlight:
                 self._draining.clear()     # boundary yields matter again
         self._pump_t.join(timeout=5.0)
         self._stage_t.join(timeout=5.0)
+        self._drain_ready()                # pump items raced past the stager
         if self.error is not None:
             raise self.error
         assert self.result is not None
@@ -386,20 +696,71 @@ class PipelineFlight:
 
 
 class SnapshotPipeline:
-    """Per-engine HASC driver: owns the (static) bucket schedule and leaf
-    budget; `start` launches one `PipelineFlight` at a time."""
+    """Per-engine HASC driver: owns the (static) bucket schedule, leaf
+    budget, the SHARED scratch-credit pool, and the flight chain.
+    `start` launches a `PipelineFlight`; with `cfg.max_flights > 1` a new
+    flight may launch while predecessors drain (overlap), chained so
+    credits drain oldest-first and the SMP sees one dirty buffer."""
 
     def __init__(self, smp, spec: FlatSpec, cfg,
                  own_plan: Sequence[Tuple[int, int, int]],
                  stripe_plan: Sequence[Tuple[int, int]]):
         self.smp, self.spec, self.cfg = smp, spec, cfg
+        self.device_encode = resolve_device_encode(cfg)
+        self.crc_impl = getattr(cfg, "crc_impl", "pallas")
+        self.max_flights = max(1, int(getattr(cfg, "max_flights", 1)))
         self.schedule = build_schedule(
             spec, own_plan, stripe_plan, cfg.bucket_bytes,
-            opt_first=getattr(cfg, "opt_first", True))
+            opt_first=getattr(cfg, "opt_first", True),
+            fuse_parity=self.device_encode)
         self.budget = leaf_budget(
             spec, [(lo, hi) for _, lo, hi in own_plan] + list(stripe_plan))
+        self.scratch_buffers = max(1, getattr(cfg, "scratch_buffers", 2))
+        self._free: "queue.Queue" = queue.Queue()
+        for _ in range(self.scratch_buffers):
+            self._free.put(self._new_credit())
+        self.affinity = resolve_affinity(getattr(cfg, "pin_cpus", None))
+        self.applied_affinity: Optional[Tuple[int, ...]] = None
+        self._last: Optional[PipelineFlight] = None
+
+    def _new_credit(self):
+        # host path: a real scratch bucket; device path: the scratch lives
+        # on the accelerator, the credit is a pure flow-control token
+        return None if self.device_encode \
+            else np.empty(self.cfg.bucket_bytes, np.uint8)
+
+    def _replenish(self) -> None:
+        """Top the shared pool back up (idle only): a flight that died
+        mid-drain may have stranded credits with its corpse."""
+        while self._free.qsize() < self.scratch_buffers:
+            self._free.put(self._new_credit())
+
+    def live_flights(self) -> int:
+        n, f = 0, self._last
+        while f is not None and f.in_flight():
+            n += 1
+            f = f.prev
+        return n
 
     def start(self, leaves: List[Any], step: int,
               extra_meta: dict) -> PipelineFlight:
-        return PipelineFlight(self.smp, self.spec, self.cfg, self.schedule,
-                              self.budget, leaves, step, extra_meta).launch()
+        if self.live_flights() >= self.max_flights:
+            # the engine refuses before calling; this is the backstop for
+            # direct callers — the flight chain (and the SMP's triple
+            # buffer) is sized for max_flights
+            raise RuntimeError(
+                f"max_flights={self.max_flights} snapshots already in "
+                f"flight")
+        prev = self._last if (self._last is not None
+                              and self._last.in_flight()) else None
+        if prev is None:
+            self._replenish()
+        encoder = DeviceEncoder(self.spec, leaves,
+                                crc_impl=self.crc_impl) \
+            if self.device_encode else None
+        flight = PipelineFlight(
+            self.smp, self.spec, self.cfg, self.schedule, self.budget,
+            leaves, step, extra_meta, free=self._free, prev=prev,
+            encoder=encoder, affinity=self.affinity, pipeline=self)
+        self._last = flight
+        return flight.launch()

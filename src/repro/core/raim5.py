@@ -14,8 +14,11 @@ re-encoded from survivors, and each of its data blocks is XOR-decoded from
 its stripe's parity + surviving siblings.
 
 XOR runs on uint64 lanes on the host (paper: "byte-wise on the CPU"); the
-TPU-side Pallas kernel (kernels/xor_parity.py) is the beyond-paper
-on-accelerator variant.
+TPU-side Pallas kernels (kernels/xor_parity.py, kernels/stage.py) are the
+beyond-paper on-accelerator variant.  Decode is encode-agnostic: XOR is
+its own inverse and the device encode path produces byte-identical parity
+blocks, so `decode_node` reconstructs kernel-encoded and host-encoded
+snapshots alike — no format flag, no second path.
 """
 from __future__ import annotations
 

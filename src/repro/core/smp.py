@@ -132,7 +132,12 @@ class NodeLayout:
 
 # ---------------------------------------------------------------- process
 def _smp_main(conn, run: str, node: int, n: int, total_bytes: int,
-              stage_slots: int, bucket_bytes: int, sem):
+              stage_slots: int, bucket_bytes: int, sem, pin_cpus=None):
+    if pin_cpus:
+        try:                       # best-effort NUMA/CPU pinning: keep the
+            os.sched_setaffinity(0, pin_cpus)   # SMP off the trainer cores
+        except (AttributeError, OSError):
+            pass
     lay = NodeLayout(n, total_bytes)
     stage = _create(_seg(run, node, "stage"), stage_slots * bucket_bytes)
     bufs = [_create(_seg(run, node, f"buf{i}"), lay.buf_bytes)
@@ -172,6 +177,9 @@ def _smp_main(conn, run: str, node: int, n: int, total_bytes: int,
                 src = stage_np[slot, :nb]
                 if kind == 0:                      # own data block bytes
                     buf_np[dirty][dst:dst + nb] = src
+                elif kind == 2:                    # device-encoded parity:
+                    buf_np[dirty][lay.own_bytes + dst:     # plain write, no
+                                  lay.own_bytes + dst + nb] = src  # host XOR
                 else:                              # parity-stripe bytes: XOR
                     dview = buf_np[dirty][lay.own_bytes + dst:
                                           lay.own_bytes + dst + nb]
@@ -180,7 +188,15 @@ def _smp_main(conn, run: str, node: int, n: int, total_bytes: int,
             elif op == "end":
                 _, step, meta_blob = msg[:3]
                 want_crc = bool(msg[3]) if len(msg) > 3 else False
-                if want_crc:
+                crc_own = msg[4] if len(msg) > 4 else None
+                if crc_own is not None:
+                    # device encode path: the CRC was computed bucket-wise
+                    # on the accelerator and combined on the trainer side —
+                    # the SMP's zlib pass drops to a meta rewrite
+                    meta = pickle.loads(meta_blob)
+                    meta["crc_own"] = int(crc_own) & 0xFFFFFFFF
+                    meta_blob = pickle.dumps(meta)
+                elif want_crc:
                     # HASC L3: the own-region CRC is computed here, inside
                     # the SMP, off every trainer-side critical path.  One
                     # contiguous pass matches what recovery's verify_crc
@@ -264,7 +280,8 @@ class SMPHandle:
     """Trainer-side handle to one node's SMP."""
 
     def __init__(self, run: str, node: int, n: int, total_bytes: int, *,
-                 stage_slots: int = 8, bucket_bytes: int = 4 << 20):
+                 stage_slots: int = 8, bucket_bytes: int = 4 << 20,
+                 pin_cpus=None):
         self.run, self.node, self.n = run, node, n
         self.layout = NodeLayout(n, total_bytes)
         self.stage_slots = stage_slots
@@ -274,7 +291,8 @@ class SMPHandle:
         self.proc = _MP.Process(
             target=_smp_main,
             args=(child, run, node, n, total_bytes, stage_slots,
-                  bucket_bytes, self._sem),
+                  bucket_bytes, self._sem, tuple(pin_cpus) if pin_cpus
+                  else None),
             daemon=True, name=f"smp-{run}-n{node}")
         self.proc.start()
         child.close()
@@ -326,11 +344,14 @@ class SMPHandle:
         self._stage_np[slot, :nb] = payload.reshape(-1).view(np.uint8)
         self._conn.send(("bucket", slot, kind, int(dst), nb))
 
-    def end(self, step: int, meta_blob: bytes, want_crc: bool = False
-            ) -> None:
+    def end(self, step: int, meta_blob: bytes, want_crc: bool = False,
+            crc_own: Optional[int] = None) -> None:
         """`want_crc=True` asks the SMP to compute the own-region CRC into
-        the snapshot meta at publish time (off the trainer's hot path)."""
-        self._conn.send(("end", int(step), meta_blob, bool(want_crc)))
+        the snapshot meta at publish time (off the trainer's hot path);
+        `crc_own` hands over a precomputed digest (device encode path) so
+        the SMP skips its zlib pass entirely."""
+        self._conn.send(("end", int(step), meta_blob, bool(want_crc),
+                         None if crc_own is None else int(crc_own)))
 
     def wait_clean(self, timeout=60.0) -> int:
         if not self._conn.poll(timeout):

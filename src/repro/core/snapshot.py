@@ -28,7 +28,8 @@ import numpy as np
 
 from repro.core import raim5
 from repro.core.pipeline import (LeafReader, PipelineFlight, SnapshotPipeline,
-                                 leaf_budget)
+                                 leaf_budget, resolve_affinity,
+                                 resolve_device_encode)
 from repro.core.smp import NodeLayout, SMPHandle
 from repro.core.treebytes import FlatSpec, leaf_arrays, make_flat_spec
 
@@ -52,6 +53,14 @@ class ReftConfig:
     opt_first: bool = True           # drain optimizer-moment leaves first
     yield_every_buckets: int = 4     # L1 yields to training this often
     boundary_timeout_s: float = 0.005  # max wait for a step boundary
+    # --- device-side encode + multi-flight (docs/API.md) ---
+    device_encode: str = "auto"      # "auto" (on iff a real accelerator
+                                     # backs JAX) | "on" | "off"
+    crc_impl: str = "pallas"         # device CRC: "pallas" | "jnp" fallback
+    max_flights: int = 1             # >1: snapshot N+1's L1 may overlap
+                                     # snapshot N's L2/L3 drain
+    pin_cpus: Any = "auto"           # saving-path CPU set for the L2
+                                     # stager + SMP: "auto" | "off" | ids
 
 
 class SnapshotEngine:
@@ -68,23 +77,37 @@ class SnapshotEngine:
         self.run = run_id or cfg.run_id
         self.spec = make_flat_spec(state_template)
         self.layout = NodeLayout(n, self.spec.total_bytes)
+        affinity = resolve_affinity(getattr(cfg, "pin_cpus", None))
         self.smp = SMPHandle(self.run, node, n, self.spec.total_bytes,
                              stage_slots=cfg.stage_slots,
-                             bucket_bytes=cfg.bucket_bytes)
+                             bucket_bytes=cfg.bucket_bytes,
+                             pin_cpus=affinity)
         self._own = self._own_plan()
         self._stripe = self._stripe_plan()
         self._pipeline: Optional[SnapshotPipeline] = None
         if cfg.pipeline:
             self._pipeline = SnapshotPipeline(self.smp, self.spec, cfg,
                                               self._own, self._stripe)
-        self._flight: Optional[PipelineFlight] = None
+        self._max_flights = max(1, int(getattr(cfg, "max_flights", 1))) \
+            if cfg.pipeline else 1
+        self._flights: List[PipelineFlight] = []
         self._thread: Optional[threading.Thread] = None    # serial mode
         self._err: Optional[BaseException] = None
         self.degraded = False      # SMP unreachable: snapshots paused, not fatal
         self.last_clean_step = -1
         self.stats = {"snapshots": 0, "bytes_sent": 0, "seconds": 0.0,
                       "l1_seconds": 0.0, "l1_stall_seconds": 0.0,
-                      "l2_seconds": 0.0, "l3_seconds": 0.0}
+                      "l2_seconds": 0.0, "l3_seconds": 0.0,
+                      "overlapped_flights": 0,
+                      "device_encode": (self._pipeline.device_encode
+                                        if self._pipeline else False),
+                      "stager_affinity": None}
+
+    @property
+    def _flight(self) -> Optional[PipelineFlight]:
+        """Newest owned flight (back-compat accessor; multi-flight engines
+        own a queue)."""
+        return self._flights[-1] if self._flights else None
 
     # ------------------------------------------------------------- plan
     def _own_plan(self) -> List[Tuple[int, int, int]]:
@@ -107,24 +130,33 @@ class SnapshotEngine:
 
     # -------------------------------------------------------- snapshot
     def in_flight(self) -> bool:
-        if self._flight is not None and self._flight.in_flight():
+        if any(f.in_flight() for f in self._flights):
             return True
         return self._thread is not None and self._thread.is_alive()
 
     def snapshot_async(self, state: Any, step: int,
                        extra_meta: dict = None) -> bool:
-        """Fire-and-forget; returns False if the previous one is running
-        (frequency self-limits to the achievable rate, Figure 4)."""
-        if self.degraded or self.in_flight():
+        """Fire-and-forget; returns False when no flight slot is free
+        (frequency self-limits to the achievable rate, Figure 4).  With
+        `max_flights > 1` a new flight may launch while its predecessor
+        is still draining L2/L3 (multi-flight overlap)."""
+        if self.degraded:
             return False
-        self._collect_flight(0.0)
+        if self._thread is not None and self._thread.is_alive():
+            return False                       # serial mode: single flight
+        self._collect_finished()
         self._raise_pending()
         if self.degraded:                  # the drain just found a dead SMP
             return False
+        if len(self._flights) >= self._max_flights:
+            return False
         leaves = leaf_arrays(state)                    # pin the references
         if self._pipeline is not None:
-            self._flight = self._pipeline.start(leaves, int(step),
-                                                extra_meta or {})
+            overlapped = any(f.in_flight() for f in self._flights)
+            self._flights.append(self._pipeline.start(leaves, int(step),
+                                                      extra_meta or {}))
+            if overlapped:
+                self.stats["overlapped_flights"] += 1
             return True
         self._thread = threading.Thread(
             target=self._run_serial, args=(leaves, int(step),
@@ -140,12 +172,14 @@ class SnapshotEngine:
         return self.wait()
 
     def wait(self, timeout: float = 300.0) -> int:
-        """Drain the in-flight snapshot.  On timeout the flight handle is
-        KEPT (a second snapshot can never overlap a live one) and a
-        `TimeoutError` is raised instead."""
-        if self._flight is not None:
-            self._collect_flight(timeout)      # raises TimeoutError if live
-        elif self._thread is not None:
+        """Drain every in-flight snapshot (oldest first).  On timeout the
+        live flight handles are KEPT (a snapshot can never be dropped
+        while live) and a `TimeoutError` is raised instead."""
+        deadline = time.monotonic() + timeout
+        while self._flights:
+            left = max(0.0, deadline - time.monotonic())
+            self._collect_flight(left)         # raises TimeoutError if live
+        if self._thread is not None:
             self._thread.join(timeout)
             if self._thread.is_alive():
                 raise TimeoutError(
@@ -155,15 +189,21 @@ class SnapshotEngine:
         self._raise_pending()
         return self.last_clean_step
 
+    def _collect_finished(self):
+        """Fold every already-finished flight (oldest first) into stats
+        without blocking on the live ones."""
+        while self._flights and self._flights[0].done.is_set():
+            self._collect_flight(0.0)
+
     def _collect_flight(self, timeout: float):
-        """Fold a finished flight into stats.  A TimeoutError from a flight
+        """Fold the OLDEST flight into stats.  A TimeoutError from a flight
         that is genuinely still LIVE propagates (the flight stays owned);
         a flight that FAILED with an internal TimeoutError (e.g. the SMP
         ack timed out) is a dead flight and is routed through _err so the
         engine degrades exactly like the serial path."""
-        if self._flight is None:
+        if not self._flights:
             return
-        flight = self._flight
+        flight = self._flights[0]
         try:
             res = flight.wait(timeout)
         except TimeoutError:
@@ -172,14 +212,16 @@ class SnapshotEngine:
             try:                               # finished during the wait:
                 res = flight.wait(0.0)         # collect its real outcome
             except BaseException as e:
-                self._flight = None
-                self._err = e
+                self._flights.pop(0)
+                if self._err is None:
+                    self._err = e
                 return                         # surfaced by _raise_pending
         except BaseException as e:
-            self._flight = None
-            self._err = e
+            self._flights.pop(0)
+            if self._err is None:
+                self._err = e
             return                             # surfaced by _raise_pending
-        self._flight = None
+        self._flights.pop(0)
         self.last_clean_step = res.clean_step
         st = self.stats
         st["snapshots"] += 1
@@ -189,6 +231,8 @@ class SnapshotEngine:
         st["l1_stall_seconds"] += res.l1_stall_seconds
         st["l2_seconds"] += res.l2_seconds
         st["l3_seconds"] += res.l3_seconds
+        if self._pipeline is not None:
+            st["stager_affinity"] = self._pipeline.applied_affinity
 
     def _raise_pending(self):
         if self._err is not None:

@@ -2,6 +2,8 @@
 
 * xor_parity    — RAIM5 parity encode/decode (the paper's EC hot loop,
                   moved on-accelerator as a beyond-paper option)
+* stage         — fused snapshot-bucket encode (XOR parity fold + CRC32
+                  before the d2h copy; the REFT-Sn device encode path)
 * ssd_scan      — Mamba2 chunked state-space-duality scan
 * swa_attention — banded (sliding-window) flash attention
 
@@ -9,8 +11,9 @@ Each kernel ships <name>.py (pl.pallas_call + BlockSpec), a jit'd wrapper
 in ops.py, and a pure-jnp oracle in ref.py, swept in tests/.
 """
 from repro.kernels.ops import (
-    ssd_scan, swa_attention, xor_parity_decode, xor_parity_encode,
+    encode_bucket, ssd_scan, swa_attention, xor_parity_decode,
+    xor_parity_encode,
 )
 
-__all__ = ["ssd_scan", "swa_attention", "xor_parity_decode",
-           "xor_parity_encode"]
+__all__ = ["encode_bucket", "ssd_scan", "swa_attention",
+           "xor_parity_decode", "xor_parity_encode"]

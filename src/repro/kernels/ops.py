@@ -12,14 +12,16 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels.ssd_scan import ssd_scan as _ssd_scan_kernel
+from repro.kernels.stage import encode_bucket as _encode_bucket_kernel
 from repro.kernels.swa_attention import swa_flash as _swa_flash_kernel
 from repro.kernels.xor_parity import xor_reduce as _xor_reduce_kernel
 
 
-def xor_parity_encode(blocks, *, interpret: bool = True):
+def xor_parity_encode(blocks, *, interpret: bool = None):
     """XOR parity of k byte blocks. blocks: (k, nbytes) uint8 -> (nbytes,).
 
-    Pads to 4-byte lanes (uint32) for the TPU kernel.
+    Pads to 4-byte lanes (uint32) for the TPU kernel.  `interpret=None`
+    selects interpret mode from the JAX backend (CPU -> interpreted).
     """
     blocks = jnp.asarray(blocks)
     assert blocks.dtype == jnp.uint8 and blocks.ndim == 2
@@ -35,11 +37,19 @@ def xor_parity_encode(blocks, *, interpret: bool = True):
     return out8[:n]
 
 
-def xor_parity_decode(survivors, parity, *, interpret: bool = True):
+def xor_parity_decode(survivors, parity, *, interpret: bool = None):
     """Reconstruct the missing block: XOR(survivors..., parity)."""
     stack = jnp.concatenate(
         [jnp.asarray(parity)[None], jnp.asarray(survivors)], axis=0)
     return xor_parity_encode(stack, interpret=interpret)
+
+
+def encode_bucket(blocks, *, nbytes: int, want_crc: bool = True,
+                  interpret: bool = None, crc_impl: str = "pallas"):
+    """Fused snapshot-bucket encode (XOR parity fold + CRC32) on device —
+    see `repro.kernels.stage`.  blocks: (k, n_lanes) uint32."""
+    return _encode_bucket_kernel(blocks, nbytes=nbytes, want_crc=want_crc,
+                                 interpret=interpret, crc_impl=crc_impl)
 
 
 def ssd_scan(u, a, Bm, Cm, h0=None, *, chunk: int = 128,

@@ -15,6 +15,19 @@ def xor_reduce_ref(blocks: jax.Array) -> jax.Array:
     return out
 
 
+def encode_bucket_ref(blocks, nbytes: int):
+    """Host oracle for kernels.stage.encode_bucket: numpy XOR fold +
+    zlib CRC over the first `nbytes` bytes.  Returns (lanes, crc)."""
+    import zlib
+
+    import numpy as np
+    acc = np.asarray(blocks[0]).copy()
+    for i in range(1, len(blocks)):
+        acc ^= np.asarray(blocks[i])
+    crc = zlib.crc32(acc.view(np.uint8)[:nbytes]) & 0xFFFFFFFF
+    return acc, crc
+
+
 def ssd_scan_ref(u, a, Bm, Cm, h0=None):
     """Naive SSD recurrence (same semantics as models.ssm.ssd_scan_ref).
 

@@ -1,0 +1,128 @@
+"""Device-side snapshot bucket encode: fused XOR-parity + CRC32 (Pallas).
+
+The save hot path's per-bucket host work (gather -> XOR parity -> zlib
+CRC) moves onto the accelerator: the L1 pump gathers a bucket's scattered
+leaf byte-ranges into one contiguous uint32 lane buffer on device
+(`repro.core.pipeline.DeviceEncoder`), and this kernel finishes the
+encode *before* the d2h copy —
+
+  * XOR-folds the k stacked stripe blocks of a parity bucket (k == 1 for
+    own-data buckets, a pass-through), and
+  * computes the bucket's CRC32 with slice-by-4 table lookups (the
+    (4, 256) uint32 table lives in VMEM; one uint32 lane is consumed per
+    loop step with four lookups).
+
+so the host receives ready-to-publish shard + parity + checksum in one
+`copy_to_host_async` stream and the SMP's byte-wise XOR / zlib pass
+drops to a plain write.  Per-bucket CRCs are recombined into the
+contiguous own-region digest with `repro.core.crcutil.crc32_combine`.
+
+The kernel runs as a single grid cell per bucket (CRC is sequential), so
+`bucket_bytes` x k must fit VMEM on real TPUs (the default 4 MiB bucket
+does for small k; shrink `ReftConfig.bucket_bytes` for large SGs).  On
+CPU backends it runs in interpret mode; `crc_impl="jnp"` keeps a
+pure-jnp CRC fallback for backends where in-kernel table gathers lower
+poorly.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.crcutil import CRC_TABLES
+
+LANE_BYTES = 512              # pad buckets to 128 uint32 lanes x 4 bytes
+
+_MASK = 0xFF                  # plain ints: jnp constants created at module
+_INIT = 0xFFFFFFFF            # scope would be captured consts in the kernel
+
+
+def default_interpret() -> bool:
+    """Interpret mode iff there is no real accelerator to compile for."""
+    return jax.default_backend() == "cpu"
+
+
+def pack_lanes(u8: jax.Array) -> jax.Array:
+    """uint8 bytes (length % 4 == 0) -> little-endian uint32 lanes."""
+    return jax.lax.bitcast_convert_type(
+        u8.reshape(-1, 4), jnp.uint32).reshape(-1)
+
+
+def _crc_words(tab, lanes, nbytes: int):
+    """Slice-by-4 CRC32 over the first `nbytes` bytes of the lane
+    vector (final value, i.e. init/final XOR included)."""
+    nw, rem = nbytes // 4, nbytes % 4
+    mask = jnp.uint32(_MASK)
+
+    def body(i, c):
+        x = c ^ lanes[i]
+        return (tab[3, (x & mask).astype(jnp.int32)]
+                ^ tab[2, ((x >> 8) & mask).astype(jnp.int32)]
+                ^ tab[1, ((x >> 16) & mask).astype(jnp.int32)]
+                ^ tab[0, ((x >> 24) & mask).astype(jnp.int32)])
+
+    crc = jax.lax.fori_loop(0, nw, body, jnp.uint32(_INIT))
+    if rem:                                  # 1-3 tail bytes, unrolled
+        w = lanes[nw]
+        for j in range(rem):
+            byte = (w >> (8 * j)) & mask
+            crc = (crc >> 8) ^ tab[0, ((crc ^ byte) & mask)
+                                   .astype(jnp.int32)]
+    return crc ^ jnp.uint32(_INIT)
+
+
+def _encode_kernel(blocks_ref, tab_ref, out_ref, crc_ref, *,
+                   nbytes: int, want_crc: bool):
+    k = blocks_ref.shape[0]
+    acc = blocks_ref[0]
+    for i in range(1, k):                    # k is static and small (SG-1)
+        acc = jax.lax.bitwise_xor(acc, blocks_ref[i])
+    out_ref[...] = acc
+    if want_crc:
+        crc_ref[0] = _crc_words(tab_ref[...], acc, nbytes)
+    else:
+        crc_ref[0] = jnp.uint32(0)
+
+
+@functools.partial(jax.jit, static_argnames=("nbytes", "want_crc",
+                                             "interpret", "crc_impl"))
+def encode_bucket(blocks: jax.Array, *, nbytes: int, want_crc: bool = True,
+                  interpret: bool = None, crc_impl: str = "pallas"):
+    """Fused bucket encode.  blocks: (k, n_lanes) uint32 (n_lanes % 128
+    == 0; bytes past `nbytes` are zero padding).  Returns
+    (encoded (n_lanes,) uint32, crc (1,) uint32).
+
+    k == 1: own-data bucket — pass-through + CRC.
+    k  > 1: parity bucket — XOR fold of the stripe blocks (+ CRC if
+    asked; parity regions carry no checksum, so callers pass False).
+    """
+    if interpret is None:
+        interpret = default_interpret()
+    k, n = blocks.shape
+    assert blocks.dtype == jnp.uint32 and 0 < nbytes <= 4 * n
+    if crc_impl == "jnp":
+        acc = blocks[0]
+        for i in range(1, k):
+            acc = jax.lax.bitwise_xor(acc, blocks[i])
+        crc = crc32_lanes_jnp(acc, nbytes) if want_crc \
+            else jnp.zeros((1,), jnp.uint32)
+        return acc, crc
+    kern = functools.partial(_encode_kernel, nbytes=nbytes,
+                             want_crc=want_crc)
+    return pl.pallas_call(
+        kern,
+        out_shape=(jax.ShapeDtypeStruct((n,), jnp.uint32),
+                   jax.ShapeDtypeStruct((1,), jnp.uint32)),
+        interpret=interpret,
+    )(blocks, jnp.asarray(CRC_TABLES))
+
+
+@functools.partial(jax.jit, static_argnames=("nbytes",))
+def crc32_lanes_jnp(lanes: jax.Array, nbytes: int) -> jax.Array:
+    """Pure-jnp slice-by-4 CRC32 over uint32 lanes (no Pallas): the
+    fallback for backends where in-kernel VMEM table gathers are not
+    available.  Byte-identical to `zlib.crc32`."""
+    return _crc_words(jnp.asarray(CRC_TABLES), lanes, nbytes).reshape(1)

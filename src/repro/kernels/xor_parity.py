@@ -8,6 +8,12 @@ VPU cycles.  Lanes are uint32 (TPU-native integer width); tiles are
 
 encode: parity[t] = XOR_i blocks[i, t]      blocks: (k, n) uint32
 decode: missing   = XOR(survivors, parity)  == encode on (k, n) stacked
+
+`interpret=None` (the default) selects interpret mode from the JAX
+backend: compiled on a real accelerator, interpreted on CPU (CI).  A
+lane count that does not divide into whole tiles is zero-padded up to a
+128-lane multiple (XOR identity), never ground down to one-element grid
+cells.
 """
 from __future__ import annotations
 
@@ -28,23 +34,24 @@ def _xor_kernel(blocks_ref, out_ref):
 
 @functools.partial(jax.jit, static_argnames=("block_elems", "interpret"))
 def xor_reduce(blocks: jax.Array, *, block_elems: int = 64 * 1024,
-               interpret: bool = True) -> jax.Array:
-    """XOR-reduce along axis 0. blocks: (k, n) uint32 -> (n,) uint32.
-
-    n must be a multiple of 128 lanes; the wrapper in ops.py pads.
-    """
+               interpret: bool = None) -> jax.Array:
+    """XOR-reduce along axis 0. blocks: (k, n) uint32 -> (n,) uint32."""
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
     k, n = blocks.shape
     assert blocks.dtype == jnp.uint32
-    be = min(block_elems, n)
-    while n % be:
-        be //= 2
-    be = max(be, 1)
-    grid = (n // be,)
-    return pl.pallas_call(
+    # tile size: a whole number of 128-lane groups, never below one tile
+    be = max(128, min(block_elems // 128 * 128, -(-n // 128) * 128))
+    n_pad = -(-n // be) * be                 # pad up (zeros = XOR identity)
+    if n_pad != n:
+        blocks = jnp.pad(blocks, ((0, 0), (0, n_pad - n)))
+    grid = (n_pad // be,)
+    out = pl.pallas_call(
         _xor_kernel,
         grid=grid,
         in_specs=[pl.BlockSpec((k, be), lambda i: (0, i))],
         out_specs=pl.BlockSpec((be,), lambda i: (i,)),
-        out_shape=jax.ShapeDtypeStruct((n,), jnp.uint32),
+        out_shape=jax.ShapeDtypeStruct((n_pad,), jnp.uint32),
         interpret=interpret,
     )(blocks)
+    return out[:n] if n_pad != n else out

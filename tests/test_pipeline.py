@@ -1,5 +1,9 @@
 """HASC saving pipeline: schedule ordering, interference, backpressure,
-wait-timeout semantics, leaf-cache eviction, per-level accounting."""
+wait-timeout semantics, leaf-cache eviction, per-level accounting,
+device-side encode equivalence, multi-flight overlap, saving-path
+affinity."""
+import os
+import tempfile
 import time
 
 import numpy as np
@@ -9,7 +13,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.pipeline import (
-    LeafReader, StepBoundaryGate, build_schedule, leaf_budget, step_boundary,
+    LeafReader, StepBoundaryGate, build_schedule, leaf_budget,
+    resolve_affinity, step_boundary,
 )
 from repro.core.snapshot import ReftConfig, SnapshotEngine
 from repro.core.treebytes import make_flat_spec
@@ -314,6 +319,181 @@ def test_boundary_gate_releases_on_tick():
     g.notify()
     t.join(timeout=5)
     assert got == [True]
+
+
+# ----------------------------------------------------- device encode path
+def test_device_encode_roundtrip_single_node():
+    """device_encode="on" (interpret-mode kernels on CPU CI): snapshot ->
+    restore is bit-identical, and the device-combined CRC satisfies
+    recovery's verify_crc — a wrong digest would demote the only member
+    to corrupt and the restore would raise."""
+    state = opt_state(1 << 12)
+    eng = SnapshotEngine(0, 1, state,
+                         ReftConfig(bucket_bytes=2048, device_encode="on"))
+    try:
+        assert eng.stats["device_encode"] is True
+        assert eng.snapshot_sync(state, 3) == 3
+        from repro.core.recovery import restore_state
+        rec, step, _ = restore_state(eng.run, 1, eng.spec.total_bytes,
+                                     state, [0])
+        assert step == 3 and trees_equal(rec, state)
+    finally:
+        eng.close()
+
+
+def test_device_encode_byte_identical_to_host_path():
+    """Host vs device encode of the SAME state must publish byte-identical
+    own bytes, parity bytes, and own-region CRC — `raim5.decode_node` is
+    encode-agnostic exactly because of this.  Odd bucket/leaf sizes
+    exercise the padded-lane tails."""
+    import pickle
+
+    from repro.core import ReftGroup
+    from repro.core.smp import ReadOnlyNode
+    state = opt_state(1 << 12)
+    probes = {}
+    for mode in ("off", "on"):
+        cfg = ReftConfig(bucket_bytes=768, stage_slots=4,
+                         device_encode=mode, ckpt_dir=tempfile.mkdtemp(),
+                         checkpoint_every_snapshots=10 ** 6)
+        g = ReftGroup(3, state, cfg)
+        try:
+            assert g.snapshot(state, 2)
+            view = ReadOnlyNode(g.run, 1, 3, g.total_bytes)
+            try:
+                probes[mode] = (view.read_own(2).tobytes(),
+                                view.read_parity(2).tobytes(),
+                                pickle.loads(view.meta(2))["crc_own"])
+            finally:
+                view.close()
+        finally:
+            g.close()
+    assert probes["off"][0] == probes["on"][0], "own bytes differ"
+    assert probes["off"][1] == probes["on"][1], "parity bytes differ"
+    assert probes["off"][2] == probes["on"][2], "own-region CRC differs"
+
+
+def test_sg4_device_encode_raim5_roundtrip():
+    """Full SG with device-encoded (kind-2) parity: single-node loss still
+    decodes bit-identically from the kernel-encoded parity blocks."""
+    from repro.core import ReftGroup
+    state = opt_state(1 << 12)
+    cfg = ReftConfig(bucket_bytes=512, stage_slots=4,
+                     ckpt_dir=tempfile.mkdtemp(),
+                     checkpoint_every_snapshots=10 ** 6, device_encode="on")
+    g = ReftGroup(4, state, cfg)
+    try:
+        assert g.snapshot(state, 3, extra_meta={"k": 3})
+        # device path sends ONE encoded parity block, not n-1 stripe blocks
+        assert g.engines[0].stats["bytes_sent"] < 2 * g.total_bytes / 4 * 1.5
+        g.inject_node_failure(2)
+        rec, step, extra, tier = g.recover()
+        assert tier == "raim5" and step == 3 and extra == {"k": 3}
+        assert trees_equal(rec, state)
+    finally:
+        g.close()
+
+
+# --------------------------------------------------------- multi-flight
+@pytest.mark.parametrize("device_encode", ["off", "on"])
+def test_multi_flight_overlap_no_data_loss_bounded_scratch(device_encode):
+    """max_flights=2: snapshot N+1 launches while N is still draining; both
+    land bit-identically in the SMP triple buffer (no loss, no clobber)
+    and the SHARED scratch pool never exceeds `scratch_buffers` credits."""
+    state = {"opt_mu": jnp.zeros((1 << 15,), jnp.float32),
+             "w": jnp.ones((1 << 15,), jnp.float32)}
+    state2 = jax.tree.map(lambda x: x + 1, state)
+    eng = SnapshotEngine(0, 1, state,
+                         ReftConfig(bucket_bytes=1 << 12, stage_slots=4,
+                                    max_flights=2, scratch_buffers=2,
+                                    device_encode=device_encode))
+    try:
+        assert eng.snapshot_async(state, 1)
+        assert eng.snapshot_async(state2, 2)          # overlapped launch
+        assert not eng.snapshot_async(state2, 3)      # over the credit
+        assert eng.wait() == 2
+        assert eng.stats["snapshots"] == 2
+        assert eng.stats["overlapped_flights"] >= 1
+        pool = eng._pipeline
+        assert pool._free.qsize() == pool.scratch_buffers   # fixed scratch
+        from repro.core.recovery import restore_state
+        from repro.core.smp import ReadOnlyNode
+        from repro.core.treebytes import tree_to_buffer
+        rec, step, _ = restore_state(eng.run, 1, eng.spec.total_bytes,
+                                     state, [0])
+        assert step == 2 and trees_equal(rec, state2)
+        view = ReadOnlyNode(eng.run, 0, 1, eng.spec.total_bytes)
+        try:
+            assert {1, 2} <= set(view.clean_steps())
+            flat1 = np.empty(eng.spec.total_bytes, np.uint8)
+            tree_to_buffer(state, eng.spec, flat1)
+            assert np.array_equal(
+                view.read_own(1)[:eng.spec.total_bytes], flat1)
+        finally:
+            view.close()
+    finally:
+        eng.close()
+
+
+# ------------------------------------------------------ batched leaf d2h
+def test_leaf_reader_batched_fetch(monkeypatch):
+    """Satellite: the prefetch window's leaves move host-side with ONE
+    jax.device_get(list), not one synchronous np.asarray per leaf, and
+    the result is byte-identical to the per-leaf path."""
+    calls = []
+    real = jax.device_get
+
+    def counting(x):
+        calls.append(len(x) if isinstance(x, list) else 1)
+        return real(x)
+
+    monkeypatch.setattr(jax, "device_get", counting)
+    state = opt_state()
+    spec = make_flat_spec(state)
+    leaves = jax.tree_util.tree_leaves(state)
+    r = LeafReader(spec, leaves)
+    r.fetch(range(len(leaves)))
+    assert calls == [len(leaves)] and r.batched_fetches == 1
+    out = np.empty(spec.total_bytes, np.uint8)
+    r.read(0, spec.total_bytes, out)
+    assert calls == [len(leaves)], "read after fetch re-transferred leaves"
+    r2 = LeafReader(spec, leaves)
+    out2 = np.empty(spec.total_bytes, np.uint8)
+    r2.read(0, spec.total_bytes, out2)
+    assert np.array_equal(out, out2)
+
+
+# ------------------------------------------------------- saving affinity
+def test_affinity_resolution_best_effort():
+    assert resolve_affinity(None) is None
+    assert resolve_affinity("off") is None
+    # malformed knobs degrade to None — never fail engine construction
+    assert resolve_affinity("garbage") is None
+    assert resolve_affinity(object()) is None
+    if hasattr(os, "sched_getaffinity"):
+        avail = sorted(os.sched_getaffinity(0))
+        auto = resolve_affinity("auto")
+        assert auto is None or set(auto) <= set(avail)
+        assert resolve_affinity((avail[0],)) == (avail[0],)
+        assert resolve_affinity(avail[0]) == (avail[0],)          # bare int
+        got = resolve_affinity(",".join(str(c) for c in avail))   # "0,1"
+        assert got == tuple(avail)
+        assert resolve_affinity((10 ** 6,)) is None   # outside allowed set
+
+
+def test_stager_affinity_surfaced_in_stats():
+    if not hasattr(os, "sched_setaffinity"):
+        pytest.skip("no sched_setaffinity on this platform")
+    avail = sorted(os.sched_getaffinity(0))
+    state = {"opt_mu": jnp.zeros((1 << 14,), jnp.float32)}
+    eng = SnapshotEngine(0, 1, state,
+                         ReftConfig(bucket_bytes=1 << 12,
+                                    pin_cpus=(avail[-1],)))
+    try:
+        eng.snapshot_sync(state, 1)
+        assert eng.stats["stager_affinity"] == (avail[-1],)
+    finally:
+        eng.close()
 
 
 # ---------------------------------------------------------- facade events
