@@ -1,4 +1,4 @@
-"""§6.2 restarting & recomputation overhead.
+"""§6.2 restarting & recomputation overhead + distributed-loader figures.
 
 Part 1 (the paper's trade): a 4-node lockstep cluster with a fixed
 per-step compute time is killed mid-run; we measure (a) in-memory/RAIM5
@@ -10,11 +10,19 @@ Part 2 (facade sweep): every registered backend saves the same state and
 is timed through the SAME `Checkpointer.restore()` call, so restore-path
 costs are directly comparable across REFT and the disk baselines.
 
+Part 3 (loader figures): the monolithic pre-refactor restore shape
+(whole-region reads + full-shard decode on one caller) vs the ranged
+`LoadPlan` executors (parallel scatter-gather reads, range-limited RAIM5
+decode), full and partial (single-leaf) plans — with bytes_read /
+decoded_bytes per row.
+
     PYTHONPATH=src python benchmarks/recovery.py [--backend B ...]
+        [--json BENCH_recovery.json]
 """
 from __future__ import annotations
 
 import argparse
+import json
 import os
 import sys
 import tempfile
@@ -34,6 +42,24 @@ KILL_AT = 12
 
 SWEEP_BYTES = 8 << 20
 SWEEP_BACKENDS = ("reft", "sync_disk", "async_disk")
+LOADER_BYTES = 32 << 20
+
+
+def row(name: str, seconds: float, detail: str = "", **extra) -> dict:
+    out = {"name": name, "seconds": seconds, "detail": detail}
+    out.update(extra)
+    return out
+
+
+def _stats_extra(ld) -> dict:
+    if ld is None:
+        return {}
+    return {"tier": ld.tier, "bytes_read": ld.bytes_read,
+            "decoded_bytes": ld.decoded_bytes,
+            "read_seconds": ld.read_seconds,
+            "decode_seconds": ld.decode_seconds,
+            "h2d_seconds": ld.h2d_seconds,
+            "resharded": ld.resharded}
 
 
 def run_cluster_trade() -> list:
@@ -56,25 +82,31 @@ def run_cluster_trade() -> list:
             t_rec = time.perf_counter() - t0
             assert tier == "raim5"
             lost_steps_reft = KILL_AT - step
-            rows.append(("recover_raim5_load", t_rec,
-                         f"steps_lost={lost_steps_reft}"))
-            rows.append(("recover_raim5_recompute",
-                         lost_steps_reft * STEP_TIME, f"tier={tier}"))
+            rows.append(row("recover_raim5_load", t_rec,
+                            f"steps_lost={lost_steps_reft}",
+                            **_stats_extra(c.last_load_stats)))
+            rows.append(row("recover_raim5_recompute",
+                            lost_steps_reft * STEP_TIME, f"tier={tier}"))
 
             # counterfactual: checkpoint-only restart pays load + recompute
+            from repro.core.loader import LoadStats
             from repro.core.recovery import restore_from_checkpoint
+            ck_stats = LoadStats()
             t0 = time.perf_counter()
-            _, ck_step, _ = restore_from_checkpoint(d, 4, c.template)
+            _, ck_step, _ = restore_from_checkpoint(d, 4, c.template,
+                                                    stats=ck_stats)
             t_load = time.perf_counter() - t0
+            ck_stats.tier = "checkpoint"
             lost_steps_ck = KILL_AT - ck_step
-            rows.append(("recover_ckpt_load", t_load,
-                         f"steps_lost={lost_steps_ck}"))
-            rows.append(("recover_ckpt_recompute",
-                         lost_steps_ck * STEP_TIME, "tier=checkpoint"))
+            rows.append(row("recover_ckpt_load", t_load,
+                            f"steps_lost={lost_steps_ck}",
+                            **_stats_extra(ck_stats)))
+            rows.append(row("recover_ckpt_recompute",
+                            lost_steps_ck * STEP_TIME, "tier=checkpoint"))
             saved = (lost_steps_ck - lost_steps_reft) * STEP_TIME \
                 - (t_rec - t_load)
-            rows.append(("recover_net_saving", max(saved, 0.0),
-                         "reft_vs_ckpt"))
+            rows.append(row("recover_net_saving", max(saved, 0.0),
+                            "reft_vs_ckpt"))
         finally:
             c.close()
     return rows
@@ -94,26 +126,112 @@ def run_backend_sweep(backends=SWEEP_BACKENDS, nbytes=SWEEP_BYTES) -> list:
                 t0 = time.perf_counter()
                 res = ck.restore()
                 t = time.perf_counter() - t0
-                rows.append((f"recover_{backend}_restore", t,
-                             f"tier={res.tier}"))
+                rows.append(row(f"recover_{backend}_restore", t,
+                                f"tier={res.tier}",
+                                **_stats_extra(res.load)))
     return rows
 
 
-def run() -> list:
-    return run_cluster_trade() + run_backend_sweep()
+def run_loader_compare(nbytes=LOADER_BYTES) -> list:
+    """Monolithic (pre-refactor whole-region) vs ranged LoadPlan restore,
+    healthy and after a single-member loss, plus a partial (single-leaf)
+    plan with range-limited decode."""
+    from benchmarks.common import make_param_state
+    from repro.core import raim5
+    from repro.core.coordinator import ReftGroup
+    from repro.core.loader import (
+        LoadStats, ShmSource, build_plan, load_bytes, need_for_leaves,
+    )
+    from repro.core.recovery import attach_survivors
+    from repro.core.snapshot import ReftConfig
+    from repro.core.treebytes import make_flat_spec
+
+    def monolithic(views, n, total, step, failed=None):
+        def read_block(node, stripe, index):
+            return views[node].read_block(step, stripe, index)
+        recovered = None
+        if failed is not None:
+            recovered = raim5.decode_node(
+                failed, n, total, read_block=read_block,
+                read_parity=lambda s: views[s].read_parity(step))
+        return raim5.reassemble(n, total, read_block, recovered)
+
+    rows = []
+    state = make_param_state(nbytes)
+    spec = make_flat_spec(state)
+    with tempfile.TemporaryDirectory() as d:
+        g = ReftGroup(4, state, ReftConfig(ckpt_dir=d,
+                                           checkpoint_every_snapshots=10**9))
+        try:
+            g.snapshot(state, 1)
+            total = g.total_bytes
+
+            def compare(failed, alive, tag):
+                views = attach_survivors(g.run, alive, 4, total)
+                try:
+                    t0 = time.perf_counter()
+                    monolithic(views, 4, total, 1, failed)
+                    t_mono = time.perf_counter() - t0
+                    rows.append(row(f"loader_monolithic_{tag}", t_mono,
+                                    f"bytes={total}"))
+                    st = LoadStats()
+                    plan = build_plan(4, total, failed=failed)
+                    t0 = time.perf_counter()
+                    load_bytes(plan, ShmSource(views, 1), verify=False,
+                               stats=st)
+                    rows.append(row(f"loader_ranged_{tag}",
+                                    time.perf_counter() - t0,
+                                    f"readers={st.parallel_readers}",
+                                    **_stats_extra(st)))
+                    # partial: one leaf's ranges only (range-limited decode)
+                    need = need_for_leaves(spec, ("mu",))
+                    st2 = LoadStats()
+                    plan2 = build_plan(4, total, need=need, failed=failed)
+                    t0 = time.perf_counter()
+                    load_bytes(plan2, ShmSource(views, 1), verify=False,
+                               stats=st2)
+                    rows.append(row(f"loader_ranged_partial_{tag}",
+                                    time.perf_counter() - t0,
+                                    f"needed={st2.bytes_needed}",
+                                    **_stats_extra(st2)))
+                finally:
+                    for v in views.values():
+                        v.close()
+
+            compare(None, [0, 1, 2, 3], "full")
+            g.inject_node_failure(2)
+            compare(2, [0, 1, 3], "raim5")
+        finally:
+            g.close()
+    return rows
+
+
+def run(backends=SWEEP_BACKENDS) -> list:
+    return (run_cluster_trade() + run_backend_sweep(backends)
+            + run_loader_compare())
 
 
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--backend", action="append", default=None,
                     help="restrict the facade sweep (repeatable)")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also write structured rows as JSON (CI uploads "
+                         "this as a perf-trajectory artifact)")
     args = ap.parse_args(argv)
-    rows = run_cluster_trade()
-    rows += run_backend_sweep(tuple(args.backend) if args.backend
-                              else SWEEP_BACKENDS)
+    rows = run(tuple(args.backend) if args.backend else SWEEP_BACKENDS)
     print("bench,seconds,derived")
-    for name, s, d in rows:
-        print(f"{name},{s:.4f},{d}")
+    for r in rows:
+        extra = ""
+        if "bytes_read" in r:
+            extra = (f";read={r['bytes_read']}"
+                     f";decoded={r['decoded_bytes']}")
+        print(f"{r['name']},{r['seconds']:.4f},{r['detail']}{extra}")
+    if args.json:
+        payload = {"bench": "recovery", "rows": rows}
+        with open(args.json, "w") as fh:
+            json.dump(payload, fh, indent=2)
+        print(f"[json] wrote {args.json}", file=sys.stderr)
     return 0
 
 

@@ -14,11 +14,11 @@ from repro.api.registry import (
 )
 from repro.api.session import CheckpointSession
 from repro.api.types import (
-    Checkpointer, CheckpointSpec, CkptEvent, RestoreResult,
+    Checkpointer, CheckpointSpec, CkptEvent, RestoreResult, RestoreTarget,
 )
 
 __all__ = [
     "Checkpointer", "CheckpointSpec", "CheckpointSession", "CkptEvent",
-    "RestoreResult", "available_backends", "create_checkpointer",
-    "register_backend",
+    "RestoreResult", "RestoreTarget", "available_backends",
+    "create_checkpointer", "register_backend",
 ]

@@ -15,36 +15,69 @@ import time
 from typing import Any, List, Optional
 
 from repro.api.registry import register_backend
-from repro.api.types import Checkpointer, CheckpointSpec, RestoreResult
+from repro.api.types import (
+    Checkpointer, CheckpointSpec, RestoreResult, RestoreTarget,
+)
+from repro.core.loader import LoadStats, resolve_need
 from repro.core.recovery import (
     RecoveryError, restore_from_checkpoint, restore_state,
 )
 
 
+def _target_need(template: Any, target: Optional[RestoreTarget]):
+    """RestoreTarget -> (global byte ranges or None, device_put flag).
+    The spec is derived from the template, which is layout-identical to
+    what was saved (the FlatSpec contract every tier relies on)."""
+    if target is None:
+        return None, False
+    from repro.core.treebytes import make_flat_spec
+    need = resolve_need(make_flat_spec(template), target)
+    return need, bool(target.device_put)
+
+
 def reft_recovery_ladder(run: str, n: int, total_bytes: int, template: Any,
-                         alive_nodes: List[int],
-                         ckpt_dir: str) -> RestoreResult:
+                         alive_nodes: List[int], ckpt_dir: str,
+                         step: Optional[int] = None,
+                         target: Optional[RestoreTarget] = None
+                         ) -> RestoreResult:
     """Three-tier recovery (paper §3 step 5):
       in-memory  — every member's SMP segments reachable, plain reassembly;
       raim5      — exactly one member missing, decode it from parity;
       checkpoint — >1 member gone, reload the last persisted REFT-Ckpt.
+
+    Every tier routes through the distributed loader's `LoadPlan`
+    executors; `target` restricts the plan to the restoring job's layout
+    (reshard-on-restore / partial loads) and the returned
+    `RestoreResult.load` carries the per-phase `LoadStats`.
     """
+    need, device_put = _target_need(template, target)
+    stats = LoadStats()
+    stats.target_n = (target.sg_size if target and target.sg_size else n)
     try:
         info: dict = {}
-        state, step, extra = restore_state(run, n, total_bytes, template,
-                                           alive_nodes, info=info)
+        state, got_step, extra = restore_state(
+            run, n, total_bytes, template, alive_nodes, info=info,
+            step=step, need=need, device_put=device_put, stats=stats)
         # tier reflects what the restore actually did: any member that had
         # to be decoded from parity (gone, corrupt, OR a laggard whose
         # buffers rotated past the chosen step) makes it raim5
         repaired = (info.get("missing", []) or info.get("corrupt", [])
                     or info.get("stale", []))
-        tier = "raim5" if repaired else "in-memory"
-        return RestoreResult(state=state, step=step, extra_meta=extra,
-                             tier=tier)
+        stats.tier = "raim5" if repaired else "in-memory"
+        stats.saved_n = n
+        stats.resharded = stats.target_n != n
+        return RestoreResult(state=state, step=got_step, extra_meta=extra,
+                             tier=stats.tier, load=stats)
     except RecoveryError:
-        state, step, extra = restore_from_checkpoint(ckpt_dir, n, template)
-        return RestoreResult(state=state, step=step, extra_meta=extra,
-                             tier="checkpoint")
+        stats = LoadStats()                    # drop partial tier-1/2 reads
+        stats.target_n = (target.sg_size if target and target.sg_size else n)
+        state, got_step, extra = restore_from_checkpoint(
+            ckpt_dir, n, template, step=step, need=need,
+            device_put=device_put, stats=stats)
+        stats.tier = "checkpoint"
+        stats.resharded = stats.saved_n != stats.target_n
+        return RestoreResult(state=state, step=got_step, extra_meta=extra,
+                             tier="checkpoint", load=stats)
 
 
 class ReftCheckpointer(Checkpointer):
@@ -119,8 +152,10 @@ class ReftCheckpointer(Checkpointer):
         return s
 
     # ---------------------------------------------------------- restore
-    def restore(self, step=None):
+    def restore(self, step=None, target=None):
         from repro.core.coordinator import NodeState
+        if target is None:
+            target = RestoreTarget(sg_size=self.spec.sg_size)
         t0 = time.perf_counter()
         self.group.wait()                       # drain healthy members
         # a degraded member's SMP is gone: its segments (if any survive)
@@ -131,9 +166,14 @@ class ReftCheckpointer(Checkpointer):
                  and not self.group.engines[i].degraded]
         res = reft_recovery_ladder(
             self.group.run, self.group.n, self.group.total_bytes,
-            self.group.template, alive, self.spec.ckpt_dir)
+            self.group.template, alive, self.spec.ckpt_dir,
+            step=step, target=target)
+        ld = res.load
         self.emit("restore", res.step, seconds=time.perf_counter() - t0,
-                  tier=res.tier)
+                  tier=res.tier, nbytes=ld.bytes_read if ld else 0,
+                  detail=(f"read={ld.bytes_read} decoded={ld.decoded_bytes}"
+                          f"{' resharded' if ld.resharded else ''}"
+                          if ld else ""))
         return res
 
     # ----------------------------------------------------------- health
@@ -214,7 +254,7 @@ class NullCheckpointer(Checkpointer):
     def persist(self, step=None):
         return None
 
-    def restore(self, step=None):
+    def restore(self, step=None, target=None):
         raise RecoveryError("null backend keeps nothing to restore")
 
     def health(self):

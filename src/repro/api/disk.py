@@ -279,7 +279,8 @@ class _DiskCheckpointer(Checkpointer):
         if removed:
             self.emit("gc", keep_from, detail=f"removed {removed} shards")
 
-    def restore(self, step=None):
+    def restore(self, step=None, target=None):
+        from repro.core.loader import LoadStats
         t0 = time.perf_counter()
         self.writer.wait()
         step = latest_complete_step(self.writer.dir) if step is None else step
@@ -287,10 +288,17 @@ class _DiskCheckpointer(Checkpointer):
             raise RecoveryError(f"no disk checkpoint in {self.writer.dir}")
         state, extra = load_checkpoint(self.writer.dir, step, self.template,
                                        with_meta=True)
+        # disk baselines read shard files whole (that inefficiency is the
+        # paper's point of comparison) — report honest monolithic stats
+        st = LoadStats(tier="disk", source="file",
+                       bytes_read=self.writer.spec.total_bytes,
+                       bytes_needed=self.writer.spec.total_bytes,
+                       read_seconds=time.perf_counter() - t0)
+        st.wall_seconds = st.read_seconds
         self.emit("restore", step, seconds=time.perf_counter() - t0,
                   tier="disk")
         return RestoreResult(state=state, step=step, extra_meta=extra,
-                             tier="disk")
+                             tier="disk", load=st)
 
     def health(self):
         inflight = (self.writer._thread is not None

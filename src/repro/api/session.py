@@ -30,7 +30,7 @@ import time
 from typing import Any, Callable, List, Optional, Sequence
 
 from repro.api.types import (
-    Checkpointer, CheckpointSpec, CkptEvent, RestoreResult,
+    Checkpointer, CheckpointSpec, CkptEvent, RestoreResult, RestoreTarget,
 )
 from repro.core.pipeline import step_boundary
 from repro.core.recovery import RecoveryError
@@ -38,13 +38,20 @@ from repro.core.recovery import RecoveryError
 
 class CheckpointSession:
     def __init__(self, spec: CheckpointSpec, state_template: Any, *,
-                 on_event: Optional[Callable[[CkptEvent], None]] = None):
+                 on_event: Optional[Callable[[CkptEvent], None]] = None,
+                 restore_target: Optional[RestoreTarget] = None):
         if spec.run_id is None:
             spec = spec.with_run_id(CheckpointSpec.alloc_run_id())
         self.spec = spec
         self.run_id = spec.run_id
         self.checkpointer: Checkpointer = spec.build(state_template)
         self.checkpointer.on_event = on_event
+        # restore-on-entry (and every sess.restore()) declares the CURRENT
+        # layout so a checkpoint saved under a different sg_size/mesh is
+        # resharded by the distributed loader (elastic n->m restart)
+        self.restore_target = restore_target or RestoreTarget(
+            sg_size=spec.sg_size,
+            device_put=bool(spec.options.get("restore_device_put", False)))
         self.restored: Optional[RestoreResult] = None
         self.snapshot_every = max(1, spec.snapshot_every_steps)
         self.checkpoint_every = max(1, spec.checkpoint_every_steps)
@@ -55,10 +62,20 @@ class CheckpointSession:
         self._degraded_seen: set = set()
 
     # ----------------------------------------------------------- entry
+    def _restore_call(self, step, target) -> RestoreResult:
+        import inspect
+        try:
+            params = inspect.signature(self.checkpointer.restore).parameters
+        except (TypeError, ValueError):
+            params = {}
+        if "target" in params:     # third-party backends may predate it
+            return self.checkpointer.restore(step, target=target)
+        return self.checkpointer.restore(step)
+
     def __enter__(self) -> "CheckpointSession":
         if self.spec.resume:
             try:
-                self.restored = self.checkpointer.restore()
+                self.restored = self._restore_call(None, self.restore_target)
             except (RecoveryError, FileNotFoundError):
                 self.restored = None
         return self
@@ -146,10 +163,13 @@ class CheckpointSession:
                 self._degraded_seen.add(node)
 
     # ------------------------------------------------ recovery surface
-    def restore(self, step: Optional[int] = None) -> RestoreResult:
+    def restore(self, step: Optional[int] = None,
+                target: Optional[RestoreTarget] = None) -> RestoreResult:
         """Run the backend's recovery ladder and heal failed members so
-        training can continue with full protection."""
-        res = self.checkpointer.restore(step)
+        training can continue with full protection.  `target` overrides
+        the session's restore target for this one call (partial loads,
+        explicit reshard)."""
+        res = self._restore_call(step, target or self.restore_target)
         self.checkpointer.heal()
         self._degraded_seen.clear()
         return res

@@ -46,12 +46,35 @@ class CkptEvent:
 
 
 @dataclass(frozen=True)
+class RestoreTarget:
+    """Where a restore is going — the reshard-on-restore contract.
+
+    The snapshot may have been taken by an n-member SG on one mesh; the
+    restoring job declares its OWN layout here and the distributed loader
+    (`repro.core.loader`) computes the minimal old-layout byte ranges to
+    read.  All filters compose by intersection; everything defaults to a
+    full-state restore.
+    """
+    sg_size: Optional[int] = None     # restoring group's SG size (n -> m)
+    member: Optional[int] = None      # only this NEW member's byte shard
+    leaves: Optional[Tuple[str, ...]] = None   # leaf-path substrings
+    shardings: Any = None             # PartitionSpec pytree (repro.dist)
+    mesh: Any = None                  # target mesh the shardings refer to
+    coord: Optional[Dict[str, int]] = None     # this rank's mesh coords
+    device_put: bool = False          # overlapped h2d during assembly
+
+
+@dataclass(frozen=True)
 class RestoreResult:
     """What `Checkpointer.restore()` hands back to the training loop."""
     state: Any
     step: int
     extra_meta: dict
     tier: str                     # which rung of the ladder produced it
+    # per-phase load accounting from the distributed loader (None for
+    # backends that bypass it): tier/source, bytes_read, decoded_bytes,
+    # read/decode/h2d seconds, resharded flag (repro.core.loader.LoadStats)
+    load: Optional[Any] = None
 
 
 @dataclass(frozen=True)
@@ -133,9 +156,13 @@ class Checkpointer(abc.ABC):
         when there is nothing to persist)."""
 
     @abc.abstractmethod
-    def restore(self, step: Optional[int] = None) -> RestoreResult:
+    def restore(self, step: Optional[int] = None,
+                target: Optional[RestoreTarget] = None) -> RestoreResult:
         """Reconstruct state (newest available, or exactly `step`).
-        Raises `repro.core.recovery.RecoveryError` when nothing is left."""
+        `target` declares the restoring job's layout (reshard-on-restore,
+        partial loads); backends without a distributed loader may ignore
+        it.  Raises `repro.core.recovery.RecoveryError` when nothing is
+        left."""
 
     @abc.abstractmethod
     def health(self) -> dict:

@@ -7,24 +7,20 @@ for recovery.
 """
 from __future__ import annotations
 
-import glob
 import json
 import os
-import re
 from typing import Dict, List, Optional
 
-_SHARD_RE = re.compile(r"step-(\d+)-node-(\d+)\.reft$")
 MANIFEST = "MANIFEST.json"
 
 
 def scan_shards(ckpt_dir: str) -> Dict[int, List[int]]:
-    """{step: [nodes present]} from the files on disk."""
-    out: Dict[int, List[int]] = {}
-    for p in glob.glob(os.path.join(ckpt_dir, "step-*-node-*.reft")):
-        m = _SHARD_RE.search(os.path.basename(p))
-        if m:
-            out.setdefault(int(m.group(1)), []).append(int(m.group(2)))
-    return {s: sorted(ns) for s, ns in out.items()}
+    """{step: [nodes present]} from the files on disk.  Delegates to the
+    single anchored-regex parser (`recovery.checkpoint_families`) so GC
+    and restore can never disagree on family membership."""
+    from repro.core.recovery import checkpoint_families
+    return {s: sorted(ns)
+            for s, ns in checkpoint_families(ckpt_dir).items()}
 
 
 def plan_gc(families: Dict[int, list], complete: set, keep_steps: set,

@@ -5,12 +5,14 @@ from repro.core.policy import (
     reft_fail_rate, reft_survival, safe_horizon, weibull_survival,
 )
 from repro.core.snapshot import ReftConfig, SnapshotEngine
+from repro.core.loader import LoadPlan, LoadStats, build_plan
 from repro.core.recovery import (
     RecoveryError, restore_from_checkpoint, restore_state,
 )
 
 __all__ = [
     "NodeState", "Reft", "ReftGroup", "ReftConfig", "SnapshotEngine",
+    "LoadPlan", "LoadStats", "build_plan",
     "RecoveryError", "restore_from_checkpoint", "restore_state",
     "FrequencyPlan", "ckpt_survival", "optimal_interval", "plan_frequencies",
     "reft_fail_rate", "reft_survival", "safe_horizon", "weibull_survival",

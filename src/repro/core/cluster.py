@@ -137,6 +137,7 @@ class LocalCluster:
         os.makedirs(ckpt_dir, exist_ok=True)
         self.template = make_state(seed, nbytes)
         self.total_bytes = make_flat_spec(self.template).total_bytes
+        self.last_load_stats = None           # LoadStats of the last recover
         self.nodes: Dict[int, NodeProc] = {}
         self._args = dict(n=n, run=self.run, seed=seed, nbytes=nbytes,
                           max_steps=max_steps, snapshot_every=snapshot_every,
@@ -238,12 +239,14 @@ class LocalCluster:
             os.kill(np_.smp_pid, signal.SIGKILL)
 
     # --------------------------------------------------------- recovery
-    def recover(self):
-        """3-tier recovery via the shared ladder. (state, step, tier)."""
+    def recover(self, target=None):
+        """3-tier recovery via the shared ladder. (state, step, tier).
+        The per-phase `LoadStats` land on `self.last_load_stats`."""
         from repro.api.backends import reft_recovery_ladder
         res = reft_recovery_ladder(self.run, self.n, self.total_bytes,
                                    self.template, list(range(self.n)),
-                                   self.ckpt_dir)
+                                   self.ckpt_dir, target=target)
+        self.last_load_stats = res.load
         return res.state, res.step, res.tier
 
     def restart_node(self, node: int, state: dict):

@@ -46,6 +46,7 @@ class ReftGroup:
         self.template = state_template
         self.total_bytes = self.engines[0].spec.total_bytes
         self.states = {i: NodeState.HEALTHY for i in range(n)}
+        self.last_load_stats = None           # LoadStats of the last recover
         self._snapshots_since_ckpt = 0
         os.makedirs(cfg.ckpt_dir, exist_ok=True)
 
@@ -137,13 +138,18 @@ class ReftGroup:
         self.states[node] = NodeState.OFFLINE
 
     # ---------------------------------------------------------- recover
-    def recover(self) -> Tuple[Any, int, dict, str]:
-        """Returns (state, step, extra_meta, tier) per the 3-tier policy."""
+    def recover(self, target=None) -> Tuple[Any, int, dict, str]:
+        """Returns (state, step, extra_meta, tier) per the 3-tier policy.
+        `target` (a `repro.api.RestoreTarget`) restricts the load plan;
+        the per-phase `LoadStats` of the last recover is kept on
+        `self.last_load_stats`."""
         from repro.api.backends import reft_recovery_ladder
         alive = [i for i in range(self.n)
                  if self.states[i] != NodeState.OFFLINE]
         res = reft_recovery_ladder(self.run, self.n, self.total_bytes,
-                                   self.template, alive, self.cfg.ckpt_dir)
+                                   self.template, alive, self.cfg.ckpt_dir,
+                                   target=target)
+        self.last_load_stats = res.load
         return res.state, res.step, res.extra_meta, res.tier
 
     def heal(self, node: int):

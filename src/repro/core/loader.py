@@ -1,0 +1,913 @@
+"""Distributed in-memory checkpoint loading (paper §4.2 "Loading").
+
+The seed-era restore path reassembled the ENTIRE state into one
+contiguous host buffer on a single caller, decoded a failed member's
+whole shard even when only a few stripes were needed, and read tier-3
+`.reft` files whole.  This module replaces all of that with a planned,
+ranged, parallel loader:
+
+  LoadPlan      the minimal per-member byte ranges each restoring rank
+                actually needs — `FlatSpec` leaf extents intersected with
+                a target sharding (elastic `sg_size`, member shard,
+                leaf filter, or a `repro.dist` PartitionSpec tree) and
+                mapped through the saved RAIM5 block layout;
+  sources       scatter-gather range readers over survivor SMP segments
+                (`ShmSource` -> `smp.ReadOnlyNode.read_range`) or over
+                persisted REFT-Ckpt files (`FileSource`, seek+read — so
+                NFS-style disk restores are ranged and per-member-
+                parallel too);
+  executors     parallel per-member ranged reads, range-limited RAIM5
+                decode (`raim5.decode_node_ranges`: a lost member costs
+                only the plan-intersecting stripe sub-ranges), incremental
+                CRC folded into the read pass (a member's own-region
+                digest is verified WHILE its bytes stream, no separate
+                probe pass), and streamed per-leaf assembly with
+                overlapped `jax.device_put` (h2d of leaf k while leaf
+                k+1's ranges are still being read);
+  LoadStats     per-phase accounting (`bytes_read`, `decoded_bytes`,
+                read/decode/h2d seconds) surfaced through
+                `RestoreResult.load`.
+
+Reshard-on-restore: `resolve_need` maps a `RestoreTarget` (different
+`sg_size`/mesh than the one that saved — elastic n->m restart) to global
+byte ranges via `FlatSpec`, so the plan reads old-layout blocks for
+new-layout shards without materialising the full state anywhere.
+"""
+from __future__ import annotations
+
+import bisect
+import pickle
+import threading
+import time
+import zlib
+from concurrent.futures import ThreadPoolExecutor
+from dataclasses import dataclass, field, replace
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core import raim5
+from repro.core.treebytes import FlatSpec
+
+CHUNK_BYTES = 8 << 20           # streaming read/CRC granularity
+MAX_SLAB_RANGES = 4096          # strided-shard fallback: whole leaf beyond
+
+
+class CrcMismatch(RuntimeError):
+    """A member's own-region bytes do not match its recorded digest (or
+    its snapshot meta is unreadable — equally untrustworthy)."""
+
+    def __init__(self, node: int, expect: int = 0, got: int = 0,
+                 reason: str = None):
+        super().__init__(reason or
+                         f"node {node} own-region CRC mismatch "
+                         f"(expect {expect:#010x}, got {got:#010x})")
+        self.node = node
+
+
+_META_BAD = object()          # sentinel: meta unreadable -> demote member
+
+
+# ----------------------------------------------------------------- ranges
+def normalize_ranges(ranges: Sequence[Tuple[int, int]], total_bytes: int
+                     ) -> Tuple[Tuple[int, int], ...]:
+    """Sort, clip to [0, total), drop empties, merge overlaps/adjacency."""
+    out: List[Tuple[int, int]] = []
+    for lo, hi in sorted((max(0, int(a)), min(int(b), total_bytes))
+                         for a, b in ranges):
+        if hi <= lo:
+            continue
+        if out and lo <= out[-1][1]:
+            out[-1] = (out[-1][0], max(out[-1][1], hi))
+        else:
+            out.append((lo, hi))
+    return tuple(out)
+
+
+def _intersect(need: Sequence[Tuple[int, int]], lo: int, hi: int
+               ) -> List[Tuple[int, int]]:
+    """Sub-ranges of sorted disjoint `need` falling inside [lo, hi)."""
+    out = []
+    i = bisect.bisect_right([a for a, _ in need], lo) - 1
+    i = max(i, 0)
+    while i < len(need):
+        a, b = need[i]
+        if a >= hi:
+            break
+        a2, b2 = max(a, lo), min(b, hi)
+        if b2 > a2:
+            out.append((a2, b2))
+        i += 1
+    return out
+
+
+# ------------------------------------------------------------------- plan
+@dataclass(frozen=True)
+class RangeReq:
+    """One contiguous read from a member's own region (local coords) and
+    where its bytes land in the global flat stream."""
+    local_lo: int
+    local_hi: int
+    global_lo: int
+
+    @property
+    def nbytes(self) -> int:
+        return self.local_hi - self.local_lo
+
+
+@dataclass(frozen=True)
+class LoadPlan:
+    """Minimal per-member byte ranges for one restore."""
+    n: int                                   # saved SG size (RAIM5 layout)
+    total_bytes: int
+    need: Tuple[Tuple[int, int], ...]        # normalized global ranges
+    reads: Dict[int, Tuple[RangeReq, ...]]   # per surviving member
+    decode: Tuple[Tuple[raim5.BlockRef, Tuple[Tuple[int, int], ...]], ...]
+    failed: Optional[int]
+
+    @property
+    def bytes_needed(self) -> int:
+        return sum(b - a for a, b in self.need)
+
+    @property
+    def read_bytes(self) -> int:
+        """Bytes served by direct survivor reads (excl. decode traffic)."""
+        return sum(r.nbytes for reqs in self.reads.values() for r in reqs)
+
+    @property
+    def decode_bytes(self) -> int:
+        """Failed-member bytes the plan reconstructs from parity."""
+        return sum(o2 - o1 for _, subs in self.decode for o1, o2 in subs)
+
+    def member_covered(self, node: int) -> bool:
+        """True iff the plan reads every real byte of `node`'s shard —
+        the precondition for folding its own-region CRC into the read."""
+        real = _member_real_bytes(node, self.n, self.total_bytes)
+        return sum(r.nbytes for r in self.reads.get(node, ())) >= real
+
+    @property
+    def touched_members(self) -> Tuple[int, ...]:
+        """Every member the executor will read bytes from: direct reads
+        PLUS the stripe siblings / parity holders feeding the failed
+        member's decode — the set a CRC probe must cover."""
+        nodes = set(self.reads)
+        for ref, _ in self.decode:
+            nodes.add(ref.stripe)                       # parity holder
+            for j in range(self.n - 1):
+                if j != ref.index:
+                    nodes.add(raim5.node_of_block(ref.stripe, j, self.n))
+        nodes.discard(self.failed)
+        return tuple(sorted(nodes))
+
+
+def _member_real_bytes(node: int, n: int, total_bytes: int) -> int:
+    if n == 1:
+        return total_bytes
+    bs = raim5.block_size(total_bytes, n)
+    real = 0
+    for ref in raim5.data_blocks_of_node(node, n):
+        lo, hi = ref.byte_range(bs, n)
+        real += max(0, min(hi, total_bytes) - min(lo, total_bytes))
+    return real
+
+
+def build_plan(n: int, total_bytes: int,
+               need: Optional[Sequence[Tuple[int, int]]] = None,
+               failed: Optional[int] = None) -> LoadPlan:
+    """Map global byte `need` (default: everything) through the n-way
+    RAIM5 block layout into per-member local reads + the failed member's
+    decode sub-ranges."""
+    need_n = normalize_ranges(need if need is not None
+                              else [(0, total_bytes)], total_bytes)
+    if n == 1:
+        assert failed is None, "n==1 has no parity to decode from"
+        reqs = tuple(RangeReq(a, b, a) for a, b in need_n)
+        return LoadPlan(1, total_bytes, need_n, {0: reqs}, (), None)
+    bs = raim5.block_size(total_bytes, n)
+    reads: Dict[int, List[RangeReq]] = {}
+    for node in range(n):
+        if node == failed:
+            continue
+        reqs: List[RangeReq] = []
+        for li, ref in enumerate(raim5.data_blocks_of_node(node, n)):
+            g_lo, g_hi = ref.byte_range(bs, n)
+            for a, b in _intersect(need_n, g_lo, min(g_hi, total_bytes)):
+                local = li * bs + (a - g_lo)
+                reqs.append(RangeReq(local, local + (b - a), a))
+        if reqs:
+            reqs.sort(key=lambda r: r.local_lo)
+            reads[node] = reqs
+    decode: Tuple = ()
+    if failed is not None:
+        decode = tuple((ref, tuple(subs)) for ref, subs in
+                       raim5.blocks_intersecting(failed, n, total_bytes,
+                                                 need_n))
+    return LoadPlan(n, total_bytes, need_n,
+                    {k: tuple(v) for k, v in reads.items()}, decode, failed)
+
+
+# ---------------------------------------------------------------- sources
+class ShmSource:
+    """Ranged reads over survivor SMP shared-memory segments at one step
+    (`smp.ReadOnlyNode.read_range` — no whole-region copies)."""
+
+    kind = "shm"
+
+    def __init__(self, views: Dict[int, Any], step: int):
+        self.views = views
+        self.step = step
+
+    @property
+    def nodes(self) -> List[int]:
+        return sorted(self.views)
+
+    def read_local(self, node: int, lo: int, hi: int) -> np.ndarray:
+        return self.views[node].read_range(self.step, lo, hi)
+
+    def read_local_ranges(self, node: int, ranges) -> List[np.ndarray]:
+        """Scatter-gather fast path: one clean-buffer lookup for many
+        range copies (`ReadOnlyNode.read_ranges`) — what partial plans
+        with many small block slices ride on."""
+        return self.views[node].read_ranges(self.step, ranges)
+
+    def read_block_range(self, node: int, stripe: int, index: int,
+                         o1: int, o2: int) -> np.ndarray:
+        return self.views[node].read_block_range(self.step, stripe, index,
+                                                 o1, o2)
+
+    def read_parity_range(self, stripe: int, o1: int, o2: int) -> np.ndarray:
+        return self.views[stripe].read_parity_range(self.step, o1, o2)
+
+    def meta(self, node: int) -> dict:
+        return pickle.loads(self.views[node].meta(self.step))
+
+
+class FileSource:
+    """Ranged reads over a persisted REFT-Ckpt family (`.reft` files):
+    one positioned read (`os.pread`) per range instead of reading every
+    member file whole.  pread carries its own offset, so the executor's
+    member-read threads and the decode task can hit the same file handle
+    concurrently without a seek race.  Discovers the family's own layout
+    (saved n, total bytes) from the pickled heads, which is what makes
+    elastic n->m disk restores work."""
+
+    kind = "file"
+
+    def __init__(self, paths: Dict[int, str]):
+        import os
+        from repro.core.smp import NodeLayout
+        self._files: Dict[int, Any] = {}
+        self._data_off: Dict[int, int] = {}
+        self.heads: Dict[int, dict] = {}
+        try:
+            for node, path in sorted(paths.items()):
+                f = open(path, "rb")
+                self._files[node] = f          # owned even if the head is
+                self.heads[node] = pickle.load(f)   # garbage (see except)
+                self._data_off[node] = f.tell()
+        except BaseException:
+            self.close()                       # junk/torn family: no fd leak
+            raise
+        any_head = next(iter(self.heads.values()))
+        self.n = any_head["n"]
+        self.total_bytes = any_head["total_bytes"]
+        self.step = any_head["step"]
+        self.layout = NodeLayout(self.n, self.total_bytes)
+        self._pread = os.pread
+
+    @property
+    def nodes(self) -> List[int]:
+        return sorted(self._files)
+
+    def read_local(self, node: int, lo: int, hi: int) -> np.ndarray:
+        fd = self._files[node].fileno()
+        return np.frombuffer(
+            self._pread(fd, hi - lo, self._data_off[node] + lo), np.uint8)
+
+    def read_block_range(self, node: int, stripe: int, index: int,
+                         o1: int, o2: int) -> np.ndarray:
+        base = raim5.local_block_index(node, stripe, index, self.n) \
+            * self.layout.bs
+        return self.read_local(node, base + o1, base + o2)
+
+    def read_parity_range(self, stripe: int, o1: int, o2: int) -> np.ndarray:
+        base = self.layout.own_bytes
+        return self.read_local(stripe, base + o1, base + o2)
+
+    def meta(self, node: int) -> dict:
+        return pickle.loads(self.heads[node]["meta"])
+
+    def close(self) -> None:
+        for f in self._files.values():
+            try:
+                f.close()
+            except Exception:
+                pass
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+        return False
+
+
+# ------------------------------------------------------------------ stats
+@dataclass
+class LoadStats:
+    """Per-phase restore accounting (surfaced as `RestoreResult.load`).
+
+    Counters measure the TOTAL work the restore performed — including
+    CRC probe traffic, demotion retries, and candidate steps that were
+    abandoned — not just the final successful plan's footprint; that is
+    what restart latency is made of.  `crc_members` reflects only the
+    attempt that produced the result."""
+    tier: str = ""                 # ladder rung (filled by the caller)
+    source: str = ""               # shm | file
+    saved_n: int = 0               # layout the snapshot was saved with
+    target_n: int = 0              # restoring group size (0 = unspecified)
+    resharded: bool = False        # saved_n != target_n (elastic restart)
+    bytes_needed: int = 0          # plan coverage of the flat stream
+    bytes_read: int = 0            # bytes copied out of sources
+    decoded_bytes: int = 0         # failed-member bytes rebuilt from parity
+    read_seconds: float = 0.0      # parallel read phase (wall; decode runs
+                                   # on the same pool, inside this window)
+    decode_seconds: float = 0.0    # decode task's overlapped share
+    h2d_seconds: float = 0.0       # overlapped jax.device_put drain
+    wall_seconds: float = 0.0
+    members: Tuple[int, ...] = ()  # members actually read
+    crc_members: Tuple[int, ...] = ()  # members CRC-verified in-pass
+    parallel_readers: int = 0
+
+    def to_dict(self) -> dict:
+        return {k: (list(v) if isinstance(v, tuple) else v)
+                for k, v in self.__dict__.items()}
+
+
+# ------------------------------------------------------------------ sinks
+class FlatSink:
+    """Scatter into one contiguous buffer (the compat/monolithic shape).
+    Plan writes land in provably disjoint ranges (each global byte is
+    served by exactly one block or decode piece), so the parallel reader
+    threads scatter without a lock."""
+
+    def __init__(self, total_bytes: int):
+        self.buf = np.zeros(total_bytes, np.uint8)
+
+    def write(self, global_lo: int, data: np.ndarray) -> None:
+        self.buf[global_lo:global_lo + data.nbytes] = data
+
+
+class LeafSink:
+    """Scatter straight into per-leaf arrays (no full-state intermediate
+    buffer).  Tracks per-leaf remaining bytes from the plan's coverage;
+    a leaf whose covered bytes have all arrived is handed to `on_leaf`
+    immediately — the hook the overlapped-h2d drain rides on.
+
+    A PARTIALLY covered leaf (a member shard or mesh slab boundary cuts
+    through it) starts from `template_bytes(i)` so its uncovered bytes
+    keep the template's values — consistent with leaves the plan does
+    not touch at all."""
+
+    def __init__(self, spec: FlatSpec, need: Sequence[Tuple[int, int]],
+                 on_leaf: Optional[Callable[[int, np.ndarray], None]] = None,
+                 template_bytes: Optional[
+                     Callable[[int], np.ndarray]] = None):
+        self.spec = spec
+        self.offsets = [l.offset for l in spec.leaves]
+        self.on_leaf = on_leaf
+        self._template = template_bytes
+        self._arrs: Dict[int, np.ndarray] = {}
+        self._left: Dict[int, int] = {}
+        self._lock = threading.Lock()
+        for lo, hi in need:
+            l0 = max(0, bisect.bisect_right(self.offsets, lo) - 1)
+            for i in range(l0, len(spec.leaves)):
+                ls = spec.leaves[i]
+                if ls.offset >= hi:
+                    break
+                a, b = max(lo, ls.offset), min(hi, ls.offset + ls.nbytes)
+                if b > a:
+                    self._left[i] = self._left.get(i, 0) + (b - a)
+        self._covered0 = dict(self._left)
+
+    @property
+    def covered(self) -> Tuple[int, ...]:
+        return tuple(sorted(self._left))
+
+    def _leaf_arr(self, i: int) -> np.ndarray:
+        arr = self._arrs.get(i)
+        if arr is None:
+            nb = self.spec.leaves[i].nbytes
+            if self._template is not None and self._covered0[i] < nb:
+                arr = np.array(self._template(i), np.uint8, copy=True)
+            else:
+                arr = np.zeros(nb, np.uint8)
+            self._arrs[i] = arr
+        return arr
+
+    def write(self, global_lo: int, data: np.ndarray) -> None:
+        lo, hi = global_lo, global_lo + data.nbytes
+        i = max(0, bisect.bisect_right(self.offsets, lo) - 1)
+        segs: List[Tuple[int, np.ndarray, int, int]] = []
+        with self._lock:                   # allocation only
+            pos = lo
+            while pos < hi and i < len(self.spec.leaves):
+                ls = self.spec.leaves[i]
+                a, b = max(pos, ls.offset), min(hi, ls.offset + ls.nbytes)
+                if b > a:
+                    segs.append((i, self._leaf_arr(i), a, b))
+                pos = b
+                i += 1
+        # plan writes are disjoint: the memcpys need no lock
+        for i, arr, a, b in segs:
+            off = self.spec.leaves[i].offset
+            arr[a - off:b - off] = data[a - lo:b - lo]
+        done: List[Tuple[int, np.ndarray]] = []
+        with self._lock:                   # completion bookkeeping AFTER
+            for i, arr, a, b in segs:      # the bytes actually landed
+                left = self._left[i] - (b - a)
+                self._left[i] = left
+                if left <= 0:
+                    done.append((i, arr))
+        if self.on_leaf is not None:
+            for i, arr in done:
+                self.on_leaf(i, arr)
+
+    def leaf_bytes(self, i: int) -> Optional[np.ndarray]:
+        return self._arrs.get(i)
+
+
+# --------------------------------------------------------------- executor
+def stream_crc(read: Callable[[int, int], np.ndarray], span: int,
+               chunk_bytes: int = CHUNK_BYTES) -> int:
+    """zlib CRC32 of bytes [0, span) served by `read(lo, hi)`, streamed in
+    fixed chunks (never holds more than one chunk)."""
+    crc = 0
+    for lo in range(0, span, chunk_bytes):
+        crc = zlib.crc32(read(lo, min(lo + chunk_bytes, span)), crc)
+    return crc
+
+
+def probe_crc(plan: LoadPlan, source, *,
+              chunk_bytes: int = CHUNK_BYTES,
+              workers: Optional[int] = None,
+              skip: Optional[set] = None,
+              stats: Optional[LoadStats] = None) -> List[int]:
+    """Streamed own-region CRC probe of every member the plan reads —
+    including the stripe siblings and parity holders feeding a failed
+    member's decode (`plan.touched_members`), since corrupt decode
+    inputs would XOR into silently wrong reconstructed bytes.  This is
+    the partial-plan substitute for the folded in-pass check (`crc_own`
+    is a WHOLE-region digest, so a plan that reads only slices of a
+    member still has to stream its full shard to verify it; per-stripe
+    digests would lift this, see ROADMAP).  Returns the corrupt members;
+    probe traffic is counted into `stats`.  `skip` names members already
+    verified in a previous round (a demotion retry must not re-stream
+    their full shards)."""
+    st = stats if stats is not None else LoadStats()
+    bs = raim5.block_size(plan.total_bytes, plan.n) if plan.n > 1 else 0
+    own_bytes = (plan.total_bytes if plan.n == 1 else (plan.n - 1) * bs)
+    decode_stripes = {ref.stripe for ref, _ in plan.decode}
+    lock = threading.Lock()
+    t0 = time.perf_counter()
+
+    def probe(node: int) -> Optional[int]:
+        try:
+            meta = source.meta(node)
+        except Exception:
+            return node
+        expect = meta.get("crc_own")
+        if expect is not None:
+            crc = stream_crc(lambda lo, hi: source.read_local(node, lo, hi),
+                             own_bytes, chunk_bytes)
+            with lock:
+                st.bytes_read += own_bytes
+            if (crc & 0xFFFFFFFF) != (expect & 0xFFFFFFFF):
+                return node
+        if node in decode_stripes:           # its parity feeds the decode
+            exp_p = meta.get("crc_parity")
+            if exp_p is not None:
+                crc = stream_crc(
+                    lambda lo, hi: source.read_parity_range(node, lo, hi),
+                    bs, chunk_bytes)
+                with lock:
+                    st.bytes_read += bs
+                if (crc & 0xFFFFFFFF) != (exp_p & 0xFFFFFFFF):
+                    return node
+        if expect is None:                   # legacy snapshot: no digest
+            return None
+        with lock:
+            st.crc_members += (node,)
+        return None
+
+    nodes = [nd for nd in plan.touched_members
+             if not skip or nd not in skip]
+    nw = workers or min(8, max(1, len(nodes)))
+    if nw == 1 or len(nodes) <= 1:
+        bad = [probe(nd) for nd in nodes]
+    else:
+        with ThreadPoolExecutor(max_workers=nw) as pool:
+            bad = list(pool.map(probe, nodes))
+    st.crc_members = tuple(sorted(set(st.crc_members)))
+    st.read_seconds += time.perf_counter() - t0
+    return sorted(nd for nd in bad if nd is not None)
+
+
+def execute_plan(plan: LoadPlan, source, sink, *,
+                 verify: bool = True,
+                 workers: Optional[int] = None,
+                 chunk_bytes: int = CHUNK_BYTES,
+                 stats: Optional[LoadStats] = None) -> LoadStats:
+    """Run the plan: parallel per-member ranged reads (with the member's
+    own-region CRC folded into the pass when the plan covers its full
+    shard), plus range-limited RAIM5 decode of the failed member.
+
+    Raises `CrcMismatch` when a fully-read member's streamed digest does
+    not match its recorded `crc_own` — callers demote that member and
+    re-plan (RAIM5's single-member budget permitting)."""
+    st = stats if stats is not None else LoadStats()
+    st.source = getattr(source, "kind", "")
+    st.saved_n = plan.n
+    st.bytes_needed = plan.bytes_needed
+    st.members = tuple(sorted(plan.reads))
+    if verify:
+        st.crc_members = ()    # only the attempt that produced the result
+                               # counts (a CrcMismatch retry re-enters here);
+                               # verify=False keeps a prior probe's record
+    lock = threading.Lock()
+    t_wall = time.perf_counter()
+
+    expected: Dict[int, Any] = {}
+    if verify:
+        for node in plan.reads:
+            try:
+                expected[node] = source.meta(node).get("crc_own")
+            except Exception:
+                # unreadable meta = untrustworthy member: demote it like a
+                # digest mismatch (the pre-loader verify_crc did the same)
+                expected[node] = _META_BAD
+
+    own_bytes = (plan.total_bytes if plan.n == 1 else
+                 (plan.n - 1) * raim5.block_size(plan.total_bytes, plan.n))
+
+    def read_member(node: int):
+        reqs = plan.reads[node]
+        nread = 0
+        expect = expected.get(node)
+        if expect is _META_BAD:
+            raise CrcMismatch(
+                node, reason=f"node {node} snapshot meta unreadable")
+        if verify and expect is not None and plan.member_covered(node):
+            # incremental CRC folded into the read pass: stream the FULL
+            # local own region (incl. the tail block's zero padding the
+            # engine checksummed) in fixed chunks, fold crc32, and scatter
+            # the pieces the plan needs as they fly by — one pass over the
+            # bytes instead of probe-then-read.
+            crc = 0
+            ri = 0
+            for lo in range(0, own_bytes, chunk_bytes):
+                hi = min(lo + chunk_bytes, own_bytes)
+                data = source.read_local(node, lo, hi)
+                nread += data.nbytes
+                crc = zlib.crc32(data, crc)
+                while ri < len(reqs) and reqs[ri].local_lo < hi:
+                    r = reqs[ri]
+                    a, b = max(r.local_lo, lo), min(r.local_hi, hi)
+                    if b > a:
+                        sink.write(r.global_lo + (a - r.local_lo),
+                                   data[a - lo:b - lo])
+                    if r.local_hi <= hi:
+                        ri += 1
+                    else:
+                        break
+            if (crc & 0xFFFFFFFF) != (expect & 0xFFFFFFFF):
+                raise CrcMismatch(node, expect, crc)
+            with lock:
+                st.crc_members += (node,)
+        else:
+            pieces = [(a, min(a + chunk_bytes, r.local_hi),
+                       r.global_lo + (a - r.local_lo))
+                      for r in reqs
+                      for a in range(r.local_lo, r.local_hi, chunk_bytes)]
+            batched = getattr(source, "read_local_ranges", None)
+            if batched is None:
+                for a, b, g in pieces:
+                    data = source.read_local(node, a, b)
+                    nread += data.nbytes
+                    sink.write(g, data)
+            else:
+                # scatter-gather: batch pieces per source lookup, bounded
+                # to ~one chunk of live bytes
+                i = 0
+                while i < len(pieces):
+                    group = []
+                    acc = 0
+                    while i < len(pieces) and acc < chunk_bytes \
+                            and len(group) < 256:
+                        group.append(pieces[i])
+                        acc += pieces[i][1] - pieces[i][0]
+                        i += 1
+                    datas = batched(node, [(a, b) for a, b, _ in group])
+                    for (a, b, g), data in zip(group, datas):
+                        nread += data.nbytes
+                        sink.write(g, data)
+        with lock:
+            st.bytes_read += nread
+
+    def run_decode():
+        if plan.failed is None or not plan.decode:
+            return
+        t0 = time.perf_counter()
+        nread = [0]
+        if verify:
+            # decode inputs: a corrupt survivor PARITY block would XOR
+            # silently into the reconstructed bytes — verify each feeding
+            # stripe's parity digest (recorded at publish) before decoding
+            bs = raim5.block_size(plan.total_bytes, plan.n)
+            for s in sorted({ref.stripe for ref, _ in plan.decode}):
+                try:
+                    expect = source.meta(s).get("crc_parity")
+                except Exception:
+                    expect = None          # meta-bad members are demoted
+                if expect is None:         # by the read path / probe
+                    continue               # (legacy snapshot: no digest)
+                crc = stream_crc(
+                    lambda lo, hi: source.read_parity_range(s, lo, hi),
+                    bs, chunk_bytes)
+                nread[0] += bs
+                if (crc & 0xFFFFFFFF) != (expect & 0xFFFFFFFF):
+                    raise CrcMismatch(
+                        s, reason=f"node {s} parity region CRC mismatch "
+                                  f"(expect {expect:#010x}, got "
+                                  f"{crc:#010x})")
+
+        def read_block_range(nd, s, j, o1, o2):
+            data = source.read_block_range(nd, s, j, o1, o2)
+            nread[0] += data.nbytes
+            return data
+
+        def read_parity_range(s, o1, o2):
+            data = source.read_parity_range(s, o1, o2)
+            nread[0] += data.nbytes
+            return data
+
+        bs = raim5.block_size(plan.total_bytes, plan.n)
+        rec = raim5.decode_node_ranges(plan.failed, plan.n,
+                                       plan.total_bytes, plan.need,
+                                       read_block_range, read_parity_range)
+        for (s, j), pieces in rec.items():
+            g_lo, _ = raim5.BlockRef(s, j).byte_range(bs, plan.n)
+            for o1, o2, data in pieces:
+                sink.write(g_lo + o1, data)
+                with lock:
+                    st.decoded_bytes += o2 - o1
+        with lock:
+            st.bytes_read += nread[0]
+            st.decode_seconds += time.perf_counter() - t0
+
+    tasks: List[Callable[[], None]] = [
+        (lambda nd=node: read_member(nd)) for node in plan.reads]
+    tasks.append(run_decode)
+    nw = workers or min(8, max(1, len(tasks)))
+    st.parallel_readers = min(nw, len(tasks))
+    t0 = time.perf_counter()
+    if nw == 1 or len(tasks) == 1:
+        for t in tasks:
+            t()
+    else:
+        with ThreadPoolExecutor(max_workers=nw) as pool:
+            futs = [pool.submit(t) for t in tasks]
+            err = None
+            for f in futs:
+                try:
+                    f.result()
+                except BaseException as e:
+                    # CrcMismatch beats secondaries: a concurrent member's
+                    # transient read error must not mask the demote-and-
+                    # replan signal the ladder acts on
+                    if err is None or (isinstance(e, CrcMismatch)
+                                       and not isinstance(err, CrcMismatch)):
+                        err = e
+            if err is not None:
+                raise err
+    st.crc_members = tuple(sorted(st.crc_members))
+    # read_seconds is the WALL of the parallel read phase; the decode task
+    # runs on the same pool, so decode_seconds is its (overlapped) share,
+    # not a disjoint addend
+    st.read_seconds += time.perf_counter() - t0
+    st.wall_seconds += time.perf_counter() - t_wall
+    return st
+
+
+def load_bytes(plan: LoadPlan, source, *, verify: bool = True,
+               workers: Optional[int] = None,
+               stats: Optional[LoadStats] = None
+               ) -> Tuple[np.ndarray, LoadStats]:
+    """Plan -> one contiguous flat buffer (zeros outside `plan.need`)."""
+    sink = FlatSink(plan.total_bytes)
+    st = execute_plan(plan, source, sink, verify=verify, workers=workers,
+                      stats=stats)
+    return sink.buf, st
+
+
+def load_tree(plan: LoadPlan, source, template: Any, spec: FlatSpec, *,
+              verify: bool = True, device_put: bool = False,
+              workers: Optional[int] = None,
+              stats: Optional[LoadStats] = None) -> Tuple[Any, LoadStats]:
+    """Plan -> pytree, assembled leaf-streamed: each leaf's array is
+    built directly from its ranged reads (no full-state buffer), and with
+    `device_put=True` finished leaves start their h2d transfer while
+    later leaves' ranges are still being read.
+
+    Leaves (or parts of leaves) the plan does not cover keep the
+    template's values (partial restores: a leaf filter / member shard /
+    mesh slice)."""
+    import jax
+
+    st = stats if stats is not None else LoadStats()
+    flat, treedef = jax.tree_util.tree_flatten(template)
+    done: Dict[int, Any] = {}
+    h2d_lock = threading.Lock()
+
+    def finish(i: int, raw: np.ndarray):
+        ls = spec.leaves[i]
+        arr = raw.view(np.dtype(ls.dtype)).reshape(ls.shape)
+        if device_put:
+            t0 = time.perf_counter()
+            arr = jax.device_put(arr)     # async under the remaining reads
+            with h2d_lock:
+                st.h2d_seconds += time.perf_counter() - t0
+        done[i] = arr
+
+    def template_bytes(i: int) -> np.ndarray:
+        return np.ascontiguousarray(
+            np.asarray(flat[i])).reshape(-1).view(np.uint8)
+
+    sink = LeafSink(spec, plan.need, on_leaf=finish,
+                    template_bytes=template_bytes)
+    execute_plan(plan, source, sink, verify=verify, workers=workers,
+                 stats=st)
+    out = []
+    for i, ls in enumerate(spec.leaves):
+        arr = done.get(i)
+        if arr is None:
+            raw = sink.leaf_bytes(i)
+            if raw is None:               # uncovered leaf: template value
+                out.append(np.asarray(flat[i]))
+                continue
+            arr = raw.view(np.dtype(ls.dtype)).reshape(ls.shape)
+        out.append(arr)
+    if device_put:
+        t0 = time.perf_counter()
+        for a in out:
+            if hasattr(a, "block_until_ready"):
+                a.block_until_ready()
+        st.h2d_seconds += time.perf_counter() - t0
+    return jax.tree_util.tree_unflatten(treedef, out), st
+
+
+# ------------------------------------------------- target -> need ranges
+def need_for_leaves(spec: FlatSpec, select) -> List[Tuple[int, int]]:
+    """Global ranges of the leaves whose path matches `select` (a callable
+    path -> bool, or an iterable of substrings)."""
+    if not callable(select):
+        subs = tuple(select)
+        select = lambda p: any(s in p for s in subs)   # noqa: E731
+    return [(ls.offset, ls.offset + ls.nbytes)
+            for ls in spec.leaves if select(ls.path)]
+
+
+def member_shard_need(m: int, member: int, total_bytes: int
+                      ) -> List[Tuple[int, int]]:
+    """Global ranges of `member`'s own data blocks under an m-way RAIM5
+    layout — what one rank of the NEW (restoring) group must load when an
+    n-member snapshot is resharded onto m members."""
+    if m == 1:
+        return [(0, total_bytes)]
+    bs = raim5.block_size(total_bytes, m)
+    out = []
+    for ref in raim5.data_blocks_of_node(member, m):
+        lo, hi = ref.byte_range(bs, m)
+        out.append((min(lo, total_bytes), min(hi, total_bytes)))
+    return out
+
+
+def _leaf_slab_ranges(ls, dim: int, idx: int, k: int
+                      ) -> Optional[List[Tuple[int, int]]]:
+    """Byte ranges of slab `idx`/`k` along `dim` of one leaf (evenly
+    divisible dims only; None = not representable within the range cap)."""
+    shape = ls.shape
+    if not shape or shape[dim] % k:
+        return None
+    per = shape[dim] // k
+    item = np.dtype(ls.dtype).itemsize
+    inner = item
+    for d in range(dim + 1, len(shape)):
+        inner *= shape[d]
+    lead = 1
+    for d in range(dim):
+        lead *= shape[d]
+    if lead > MAX_SLAB_RANGES:
+        return None
+    stride = shape[dim] * inner
+    out = []
+    for li in range(lead):
+        a = ls.offset + li * stride + idx * per * inner
+        out.append((a, a + per * inner))
+    return out
+
+
+def need_for_sharding(spec: FlatSpec, shardings: Any, mesh: Any,
+                      coord: Dict[str, int]) -> List[Tuple[int, int]]:
+    """Global ranges of THIS rank's slice under a `repro.dist` sharding:
+    `shardings` is a PartitionSpec pytree leaf-aligned with the state,
+    adapted to `mesh` by the same rules training uses (`adapt_spec`), and
+    `coord` gives the rank's index on each mesh axis.  Dims the adapted
+    spec leaves unsharded (or slabs too strided to enumerate) fall back
+    to the whole leaf."""
+    import jax
+    from jax.sharding import PartitionSpec as P
+
+    from repro.dist.api import adapt_spec
+
+    sizes = dict(zip(mesh.axis_names, mesh.axis_sizes))
+    flat_specs = jax.tree_util.tree_flatten(
+        shardings, is_leaf=lambda x: isinstance(x, P))[0]
+    assert len(flat_specs) == len(spec.leaves), \
+        f"sharding tree has {len(flat_specs)} leaves, state has " \
+        f"{len(spec.leaves)}"
+    need: List[Tuple[int, int]] = []
+    for ls, sp in zip(spec.leaves, flat_specs):
+        adapted = adapt_spec(sp, ls.shape, mesh) if len(ls.shape) else P()
+        picked = None
+        for dim, entry in enumerate(adapted):
+            if entry is None:
+                continue
+            names = entry if isinstance(entry, tuple) else (entry,)
+            k = 1
+            idx = 0
+            for nm in names:
+                idx = idx * sizes[nm] + coord.get(nm, 0)
+                k *= sizes[nm]
+            if k > 1:
+                picked = (dim, idx, k)
+                break                    # first sharded dim bounds the slab
+        if picked is None:
+            need.append((ls.offset, ls.offset + ls.nbytes))
+            continue
+        slab = _leaf_slab_ranges(ls, *picked)
+        if slab is None:
+            need.append((ls.offset, ls.offset + ls.nbytes))
+        else:
+            need.extend(slab)
+    return need
+
+
+def resolve_need(spec: FlatSpec, target) -> Optional[List[Tuple[int, int]]]:
+    """`RestoreTarget` -> global byte ranges (None = full state).
+
+    Filters compose by intersection: a leaf filter restricted to a new
+    member's byte shard loads exactly the overlap."""
+    if target is None:
+        return None
+    needs: List[Tuple[Tuple[int, int], ...]] = []
+    if getattr(target, "leaves", None):
+        needs.append(normalize_ranges(need_for_leaves(spec, target.leaves),
+                                      spec.total_bytes))
+    if getattr(target, "member", None) is not None:
+        m = target.sg_size
+        if not m:
+            raise ValueError(
+                "RestoreTarget.member needs sg_size (the restoring "
+                "group's size) to define the member's byte shard")
+        if not 0 <= target.member < m:
+            raise ValueError(
+                f"RestoreTarget.member {target.member} out of range for "
+                f"sg_size {m}")
+        needs.append(normalize_ranges(
+            member_shard_need(m, target.member, spec.total_bytes),
+            spec.total_bytes))
+    if getattr(target, "shardings", None) is not None \
+            and getattr(target, "mesh", None) is not None:
+        needs.append(normalize_ranges(
+            need_for_sharding(spec, target.shardings, target.mesh,
+                              target.coord or {}), spec.total_bytes))
+    if not needs:
+        return None
+    out = needs[0]
+    for nxt in needs[1:]:
+        acc: List[Tuple[int, int]] = []
+        for lo, hi in out:
+            acc.extend(_intersect(nxt, lo, hi))
+        out = normalize_ranges(acc, spec.total_bytes)
+    return list(out)
+
+
+__all__ = [
+    "CHUNK_BYTES", "CrcMismatch", "RangeReq", "LoadPlan", "LoadStats",
+    "ShmSource", "FileSource", "FlatSink", "LeafSink", "normalize_ranges",
+    "build_plan", "execute_plan", "load_bytes", "load_tree",
+    "need_for_leaves", "member_shard_need", "need_for_sharding",
+    "resolve_need",
+]

@@ -68,6 +68,7 @@ class MultiStageGroup:
         cfg = cfg if cfg is not None else ReftConfig()
         self.n_pp, self.dp = n_pp, dp
         self.template = state_template
+        self.last_load_stats = None   # per-stage LoadStats of last recover
         self.stage_templates = split_state_by_stage(state_template, n_pp)
         self.groups: List[ReftGroup] = []
         for s, st in enumerate(self.stage_templates):
@@ -114,17 +115,22 @@ class MultiStageGroup:
     def inject_software_failure(self, stage: int, member: int):
         self.groups[stage].inject_software_failure(member)
 
-    def recover(self) -> Tuple[Any, int, str]:
+    def recover(self, target=None) -> Tuple[Any, int, str]:
         """Stage-local recovery; the restart step is the min consistent
-        step across stages (synchronous training keeps them equal)."""
+        step across stages (synchronous training keeps them equal).  Each
+        stage's SG runs its own `LoadPlan` (ranged parallel reads +
+        range-limited decode); the per-stage `LoadStats` land in
+        `self.last_load_stats` (list, one per stage)."""
         stage_states = []
         steps = []
         tiers = []
+        self.last_load_stats = []
         for g in self.groups:
-            st, step, _, tier = g.recover()
+            st, step, _, tier = g.recover(target=target)
             stage_states.append(st)
             steps.append(step)
             tiers.append(tier)
+            self.last_load_stats.append(getattr(g, "last_load_stats", None))
         assert len(set(steps)) == 1, f"stage steps diverged: {steps}"
         worst = max(tiers, key=["in-memory", "raim5", "checkpoint"].index)
         return join_stages(self.template, stage_states), steps[0], worst

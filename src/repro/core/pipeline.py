@@ -357,11 +357,12 @@ class DeviceEncoder:
                  crc_impl: str = "pallas"):
         import jax  # noqa: F401  (device path requires jax at runtime)
         import jax.numpy as jnp
-        from repro.kernels.stage import (LANE_BYTES, encode_bucket,
-                                         pack_lanes)
+        from repro.kernels.stage import (LANE_BYTES, bucket_crc,
+                                         encode_bucket, pack_lanes)
         self._jnp = jnp
         self._lane_bytes = LANE_BYTES
         self._encode = encode_bucket
+        self._bucket_crc = bucket_crc
         self._pack = pack_lanes
         self.spec = spec
         self.leaves = leaves
@@ -425,6 +426,11 @@ class DeviceEncoder:
             except AttributeError:
                 pass
         return lanes, crc, nb
+
+    def bucket_crc(self, crc, nbytes: int) -> int:
+        """Digest array (single-cell or per-tile, already on host) -> the
+        bucket's zlib-compatible CRC32 (crc32_combine fold for tiles)."""
+        return self._bucket_crc(crc, nbytes)
 
 
 # --------------------------------------------------------------- flights
@@ -589,7 +595,8 @@ class PipelineFlight:
             try:
                 host = np.asarray(lanes)               # d2h (pre-warmed)
                 payload = host.view(np.uint8)[:nb]
-                crc_val = int(np.asarray(crc)[0]) if task.kind == 0 else None
+                crc_val = enc.bucket_crc(np.asarray(crc), nb) \
+                    if task.kind == 0 else None
             except BaseException:
                 self._free.put(buf)
                 raise

@@ -60,6 +60,14 @@ def data_blocks_of_node(node: int, n: int) -> List[BlockRef]:
     return out
 
 
+def local_block_index(node: int, stripe: int, index: int, n: int) -> int:
+    """Slot of data block (stripe, index) within `node`'s local shard
+    (the `data_blocks_of_node` order every store layout follows)."""
+    refs = data_blocks_of_node(node, n)
+    return next(i for i, r in enumerate(refs)
+                if (r.stripe, r.index) == (stripe, index))
+
+
 def parity_stripe_of_node(node: int, n: int) -> List[BlockRef]:
     """Blocks XOR-ed into the parity that `node` stores (its own stripe)."""
     return [BlockRef(node, j) for j in range(n - 1)]
@@ -126,6 +134,64 @@ def decode_node(failed: int, n: int, total_bytes: int,
                     for j in range(n - 1) if j != ref.index]
         parity = read_parity(s)                  # stripe s parity on node s
         out[(s, ref.index)] = xor_blocks(siblings + [parity])
+    return out
+
+
+# ----------------------------------------------------- range-limited decode
+def blocks_intersecting(failed: int, n: int, total_bytes: int,
+                        ranges: Sequence[Tuple[int, int]]
+                        ) -> List[Tuple[BlockRef, List[Tuple[int, int]]]]:
+    """`failed`'s data blocks whose global byte span intersects `ranges`,
+    each with the block-LOCAL sub-ranges [(o1, o2), ...] that do.
+
+    `ranges` must be sorted, disjoint global [lo, hi) pairs.  This is the
+    planning half of range-limited decode: a restore that only needs a
+    few byte ranges of a lost member pays XOR + sibling reads for exactly
+    the intersecting stripe sub-ranges, not the whole shard."""
+    bs = block_size(total_bytes, n)
+    out: List[Tuple[BlockRef, List[Tuple[int, int]]]] = []
+    for ref in data_blocks_of_node(failed, n):
+        g_lo, g_hi = ref.byte_range(bs, n)
+        g_hi = min(g_hi, total_bytes)
+        subs = []
+        for a, b in ranges:
+            a2, b2 = max(a, g_lo), min(b, g_hi)
+            if b2 > a2:
+                subs.append((a2 - g_lo, b2 - g_lo))
+        if subs:
+            out.append((ref, subs))
+    return out
+
+
+def decode_node_ranges(failed: int, n: int, total_bytes: int,
+                       ranges: Sequence[Tuple[int, int]],
+                       read_block_range, read_parity_range
+                       ) -> Dict[Tuple[int, int],
+                                 List[Tuple[int, int, np.ndarray]]]:
+    """Reconstruct only the sub-ranges of `failed`'s blocks that intersect
+    the global byte `ranges` (sorted, disjoint).
+
+    XOR decode is byte-wise, so a lost block's bytes [o1, o2) are exactly
+    the XOR of the SAME offsets of its stripe's surviving siblings and
+    parity — no whole-block (let alone whole-shard) decode is needed:
+
+      read_block_range(node, stripe, index, o1, o2) -> np.uint8[o2-o1]
+      read_parity_range(stripe, o1, o2)             -> np.uint8[o2-o1]
+
+    Returns {(stripe, index): [(o1, o2, bytes), ...]} covering only the
+    requested intersections.
+    """
+    out: Dict[Tuple[int, int], List[Tuple[int, int, np.ndarray]]] = {}
+    for ref, subs in blocks_intersecting(failed, n, total_bytes, ranges):
+        s = ref.stripe
+        assert s != failed
+        pieces = []
+        for o1, o2 in subs:
+            parts = [read_block_range(node_of_block(s, j, n), s, j, o1, o2)
+                     for j in range(n - 1) if j != ref.index]
+            parts.append(read_parity_range(s, o1, o2))
+            pieces.append((o1, o2, xor_blocks(parts)))
+        out[(s, ref.index)] = pieces
     return out
 
 

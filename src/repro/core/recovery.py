@@ -1,24 +1,39 @@
 """Recovery paths (paper §3 step 5, §4.2 "Loading", §4.3 decoding).
 
 Three tiers, tried in order:
-  1. software failure (trainer died, SMPs alive): reassemble the full state
+  1. software failure (trainer died, SMPs alive): reassemble the state
      from every SG member's in-memory shard;
   2. single node failure per SG: RAIM5-decode the dead node's blocks from
      survivors' shards + parities, then reassemble;
   3. >1 node failure in an SG: fall back to the last persisted REFT-Ckpt.
+
+This module is the *tier policy*; the data movement lives in
+`repro.core.loader`: every tier routes through a `LoadPlan` executed with
+parallel ranged reads (shared-memory segments for tiers 1-2, seek+read
+over `.reft` files for tier 3), range-limited RAIM5 decode, incremental
+CRC folded into the read pass, and streamed per-leaf assembly.  Tier 3
+additionally supports reshard-on-restore: a family saved by an n-member
+SG restores under an m-member group (elastic n->m restart) because the
+saved layout is rediscovered from the file heads.
 """
 from __future__ import annotations
 
 import glob
 import os
 import pickle
-from typing import Any, Dict, List, Optional, Tuple
+import re
+from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from repro.core import raim5
-from repro.core.smp import NodeLayout, ReadOnlyNode
-from repro.core.treebytes import FlatSpec, buffer_to_tree
+from repro.core.loader import (
+    CHUNK_BYTES, CrcMismatch, FileSource, LoadStats, ShmSource, build_plan,
+    load_bytes, load_tree, probe_crc, stream_crc,
+)
+from repro.core.smp import ReadOnlyNode
+from repro.core.treebytes import FlatSpec
+
+CRC_CHUNK_BYTES = CHUNK_BYTES       # one streaming granularity everywhere
 
 
 class RecoveryError(RuntimeError):
@@ -45,12 +60,15 @@ def common_step(views: Dict[int, ReadOnlyNode]) -> Optional[int]:
     return max(common) if common else None
 
 
-def verify_crc(view: ReadOnlyNode, step: int, n: int,
-               total_bytes: int) -> bool:
-    """Recompute the snapshot's own-shard checksum (written by the engine
-    at save time). Detects silent in-memory corruption — a corrupt member
-    is treated like a failed node and repaired from RAIM5 parity."""
-    import zlib
+def verify_crc(view: ReadOnlyNode, step: int, n: int, total_bytes: int,
+               chunk_bytes: int = CRC_CHUNK_BYTES) -> bool:
+    """Standalone integrity probe: recompute the snapshot's own-shard
+    checksum (written at save time) in fixed-size streamed chunks — never
+    holds more than `chunk_bytes`, so probing a large member does not
+    spike RSS.  The recovery ladder itself no longer calls this (its
+    checks are folded into the loader's read pass / `loader.probe_crc`);
+    it remains the public health-check utility for scrubbers and tests,
+    with identical verdict semantics (unreadable meta = corrupt)."""
     try:
         meta = pickle.loads(view.meta(step))
     except Exception:
@@ -60,43 +78,91 @@ def verify_crc(view: ReadOnlyNode, step: int, n: int,
         return True
     # the engine streams the own region contiguously (full blocks incl.
     # the zero padding of the tail block), so one pass over it suffices
-    buf = view.read_own(step)
     span = total_bytes if n == 1 else view.layout.own_bytes
-    return zlib.crc32(buf[:span]) == expect
-
-
-def _read_block_fn(views, step):
-    def read_block(node, stripe, index):
-        return views[node].read_block(step, stripe, index)
-    return read_block
+    try:
+        crc = stream_crc(lambda lo, hi: view.read_range(step, lo, hi),
+                         span, chunk_bytes)
+    except Exception:
+        return False
+    return crc == expect
 
 
 def restore_bytes(views: Dict[int, ReadOnlyNode], n: int, total_bytes: int,
-                  step: int, failed: Optional[int] = None) -> np.ndarray:
-    """Full state bytes at `step`; RAIM5-decodes `failed`'s blocks if set."""
-    if n == 1:
-        (view,) = views.values()
-        return view.read_own(step)[:total_bytes].copy()
-    recovered = None
-    if failed is not None:
-        recovered = raim5.decode_node(
-            failed, n, total_bytes,
-            read_block=_read_block_fn(views, step),
-            read_parity=lambda s: views[s].read_parity(step))
-    return raim5.reassemble(n, total_bytes, _read_block_fn(views, step),
-                            recovered)
+                  step: int, failed: Optional[int] = None,
+                  need: Optional[Sequence[Tuple[int, int]]] = None,
+                  stats: Optional[LoadStats] = None) -> np.ndarray:
+    """State bytes at `step` via the ranged loader; RAIM5-decodes exactly
+    the plan-intersecting sub-ranges of `failed` if set.  With `need`,
+    bytes outside the requested ranges stay zero."""
+    plan = build_plan(n, total_bytes, need=need, failed=failed)
+    buf, _ = load_bytes(plan, ShmSource(views, step), verify=False,
+                        stats=stats)
+    return buf
+
+
+def _load_with_demotion(n: int, total_bytes: int, template: Any,
+                        spec: FlatSpec, source_of, holders: List[int],
+                        absent: List[int],
+                        need: Optional[Sequence[Tuple[int, int]]],
+                        device_put: bool, stats: LoadStats
+                        ) -> Tuple[Any, List[int], List[int]]:
+    """Execute the plan for one candidate step, folding each fully-read
+    member's CRC into its read pass (full plans) or streaming a probe of
+    the members the plan reads first (partial plans — `crc_own` is a
+    whole-region digest); either way a mismatch demotes that member to
+    failed and re-plans (RAIM5's one-member budget permitting).
+
+    `source_of(usable)` builds the range source over the given members.
+    Returns (tree, usable, corrupt); raises `RecoveryError` when the
+    demotions exceed the parity budget."""
+    corrupt: List[int] = []
+    probed_ok: set = set()
+    while True:
+        usable = [nd for nd in holders if nd not in corrupt]
+        missing = sorted(set(range(n)) - set(usable))
+        if not usable or len(missing) > 1:
+            raise RecoveryError(
+                f"member demotions exceed RAIM5 budget (absent: {absent}, "
+                f"corrupt: {corrupt})")
+        failed = missing[0] if missing else None
+        plan = build_plan(n, total_bytes, need=need, failed=failed)
+        src = source_of(usable)
+        if need is not None:
+            bad = probe_crc(plan, src, stats=stats, skip=probed_ok)
+            probed_ok.update(set(plan.touched_members) - set(bad)
+                             - set(corrupt))
+            if bad:
+                corrupt.extend(bad)
+                continue
+            tree, _ = load_tree(plan, src, template, spec, verify=False,
+                                device_put=device_put, stats=stats)
+            return tree, usable, corrupt
+        try:
+            tree, _ = load_tree(plan, src, template, spec, verify=True,
+                                device_put=device_put, stats=stats)
+            return tree, usable, corrupt
+        except CrcMismatch as e:
+            corrupt.append(e.node)
 
 
 def restore_state(run: str, n: int, total_bytes: int, template: Any,
                   alive_nodes: List[int],
-                  info: Optional[dict] = None) -> Tuple[Any, int, dict]:
+                  info: Optional[dict] = None,
+                  step: Optional[int] = None,
+                  need: Optional[Sequence[Tuple[int, int]]] = None,
+                  device_put: bool = False,
+                  stats: Optional[LoadStats] = None
+                  ) -> Tuple[Any, int, dict]:
     """End-to-end in-memory restore. Returns (state_tree, step, extra_meta).
 
     Raises RecoveryError when more than one node per SG is gone (tier 3
     must take over).  When `info` (a dict) is passed it is filled with
     what actually happened: {"attached", "corrupt", "missing"} — callers
     derive the recovery tier from it instead of re-probing segments.
-    """
+    `step` pins a specific snapshot step; `need` restricts the load to
+    global byte ranges (partial / resharded restore); `stats` (a
+    `LoadStats`) collects per-phase accounting."""
+    st = stats if stats is not None else LoadStats()
     views = attach_survivors(run, alive_nodes, n, total_bytes)
     try:
         if info is not None:
@@ -105,98 +171,180 @@ def restore_state(run: str, n: int, total_bytes: int, template: Any,
         # ONE — a member whose async round lagged behind (its buffers
         # rotated past the step) is byte-for-byte equivalent to a failed
         # node at that step, and RAIM5 decodes its shard from the others'
-        # parity.  Corrupt members (CRC mismatch) are demoted the same way.
+        # parity.  Corrupt members (CRC mismatch, folded into the loader's
+        # read pass) are demoted the same way.
         clean = {node: set(v.clean_steps()) for node, v in views.items()}
         candidates = sorted(set().union(*clean.values()), reverse=True) \
             if clean else []
+        if step is not None:
+            candidates = [s for s in candidates if s == step]
         chosen = None
-        crc_ok: Dict[Tuple[int, int], bool] = {}   # (node, step) -> verdict
-        for step in candidates:
-            holders = [nd for nd, steps in clean.items() if step in steps]
+        for cand in candidates:
+            holders = [nd for nd, steps in clean.items() if cand in steps]
             if n - len(holders) > 1:
                 continue
-            for nd in holders:                     # CRC once per (node,step)
-                if (nd, step) not in crc_ok:
-                    crc_ok[nd, step] = verify_crc(views[nd], step, n,
-                                                  total_bytes)
-            corrupt = [nd for nd in holders if not crc_ok[nd, step]]
-            usable = [nd for nd in holders if nd not in corrupt]
-            # need every member but at most one (RAIM5's budget), and at
-            # least one actual source to read from (n==1 + corrupt would
-            # otherwise slip through as usable=[])
-            if usable and len(usable) >= n - 1:
-                chosen = (step, usable, corrupt)
-                break
+            absent = sorted(set(range(n)) - set(holders))
+            try:
+                tree, usable, corrupt = _load_with_demotion(
+                    n, total_bytes, template,
+                    _spec_of(views, holders, cand),
+                    lambda members, c=cand: ShmSource(
+                        {nd: views[nd] for nd in members}, c),
+                    holders, absent, need, device_put, st)
+            except RecoveryError:
+                continue
+            chosen = (cand, tree, usable, corrupt)
+            break
         if chosen is None:
             raise RecoveryError(
                 f"no usable snapshot step across survivors (dead: "
                 f"{sorted(set(range(n)) - set(views))}, clean steps: "
                 f"{ {nd: sorted(s) for nd, s in clean.items()} }); "
                 f"RAIM5 protects exactly one member")
-        step, usable, corrupt = chosen
+        cand, tree, usable, corrupt = chosen
         missing = sorted(set(range(n)) - set(usable))
         if info is not None:
             info["corrupt"] = corrupt
             info["missing"] = missing
             info["stale"] = [nd for nd in views
                              if nd not in usable and nd not in corrupt]
-        use_views = {nd: views[nd] for nd in usable}
-        failed = missing[0] if missing else None
-        buf = restore_bytes(use_views, n, total_bytes, step, failed)
-        any_view = next(iter(use_views.values()))
-        meta = pickle.loads(any_view.meta(step))
-        spec = FlatSpec.from_json(meta["spec"])
-        tree = buffer_to_tree(template, spec, buf)
-        return tree, step, meta.get("extra", {})
+        extra = {}
+        for nd in usable:              # usable members' metas parsed during
+            try:                       # the load; loop is belt-and-braces
+                extra = pickle.loads(views[nd].meta(cand)).get("extra", {})
+                break
+            except Exception:
+                continue
+        return tree, cand, extra
     finally:
         for v in views.values():
             v.close()
 
 
+def _spec_of(views, holders, step) -> FlatSpec:
+    """Spec from the first holder whose meta parses — a member with a
+    corrupt meta must be DEMOTED by the loader (it is), not allowed to
+    crash the ladder before the load even starts."""
+    last: Optional[Exception] = None
+    for nd in holders:
+        try:
+            meta = pickle.loads(views[nd].meta(step))
+            return FlatSpec.from_json(meta["spec"])
+        except Exception as e:
+            last = e
+    raise RecoveryError(
+        f"no member meta parseable at step {step}: {last!r}")
+
+
 # --------------------------------------------------------------- tier 3
+_CKPT_RE = re.compile(r"^step-(\d+)-node-(\d+)\.reft$")
+
+
+def checkpoint_families(ckpt_dir: str) -> Dict[int, set]:
+    """{step: {nodes on disk}} from anchored-regex filename parsing (a
+    future name with extra dashes can no longer corrupt the step/node
+    split the way `split("-")` indexing did)."""
+    families: Dict[int, set] = {}
+    for p in glob.glob(os.path.join(ckpt_dir, "step-*-node-*.reft")):
+        m = _CKPT_RE.match(os.path.basename(p))
+        if not m:
+            continue
+        families.setdefault(int(m.group(1)), set()).add(int(m.group(2)))
+    return families
+
+
 def latest_checkpoint_step(ckpt_dir: str,
                            n: Optional[int] = None) -> Optional[int]:
     """Newest persisted step; with `n`, newest COMPLETE family (all n
     member shards on disk) — torn families are not restorable."""
-    families: Dict[int, set] = {}
-    for p in glob.glob(os.path.join(ckpt_dir, "step-*-node-*.reft")):
-        parts = os.path.basename(p).split("-")
-        families.setdefault(int(parts[1]), set()).add(int(parts[3].split(".")[0]))
+    families = checkpoint_families(ckpt_dir)
     steps = [s for s, nodes in families.items()
              if n is None or nodes == set(range(n))]
     return max(steps) if steps else None
 
 
+def _family_paths(ckpt_dir: str, step: int, nodes) -> Dict[int, str]:
+    return {node: os.path.join(ckpt_dir, f"step-{step}-node-{node}.reft")
+            for node in nodes}
+
+
+def _open_family(ckpt_dir: str, step: int, nodes: set) -> FileSource:
+    """Attach a family, validating completeness against its OWN saved
+    layout (the heads record n) — an n-member family restores under any
+    current group size (reshard-on-restore)."""
+    if not nodes:
+        raise RecoveryError(f"checkpoint family step {step} has no shards")
+    # lightweight probe: one head read to learn the saved layout (the one
+    # file re-opened by the full FileSource below)
+    path = _family_paths(ckpt_dir, step, [min(nodes)])[min(nodes)]
+    with open(path, "rb") as f:
+        saved_n = pickle.load(f)["n"]
+    want = set(range(saved_n))
+    if nodes & want != want:
+        missing = sorted(want - nodes)[0]
+        raise RecoveryError(
+            f"checkpoint family step {step} is torn: missing "
+            f"step-{step}-node-{missing}.reft")
+    return FileSource(_family_paths(ckpt_dir, step, sorted(want)))
+
+
 def restore_from_checkpoint(ckpt_dir: str, n: int, template: Any,
-                            step: Optional[int] = None
+                            step: Optional[int] = None,
+                            need: Optional[Sequence[Tuple[int, int]]] = None,
+                            device_put: bool = False,
+                            stats: Optional[LoadStats] = None
                             ) -> Tuple[Any, int, dict]:
-    """Rebuild from REFT-Ckpt files (each node persisted shard+parity)."""
-    step = latest_checkpoint_step(ckpt_dir, n) if step is None else step
-    if step is None:
-        raise RecoveryError("no complete checkpoint available")
-    shards = {}
-    head = None
-    for node in range(n):
-        path = os.path.join(ckpt_dir, f"step-{step}-node-{node}.reft")
-        try:
-            with open(path, "rb") as f:
-                head = pickle.load(f)
-                shards[node] = np.frombuffer(f.read(), np.uint8)
-        except FileNotFoundError:
-            raise RecoveryError(f"checkpoint family step {step} is torn: "
-                                f"missing {os.path.basename(path)}")
-    total = head["total_bytes"]
-    lay = NodeLayout(n, total)
-    if n == 1:
-        buf = shards[0][:total]
+    """Rebuild from REFT-Ckpt files through the same `LoadPlan` executors
+    as the in-memory tiers: per-member-parallel ranged file reads, CRC
+    folded into the pass, RAIM5 demotion of a corrupt shard, and elastic
+    reshard when the family was saved with a different SG size than `n`."""
+    st = stats if stats is not None else LoadStats()
+    if not st.target_n:       # the ladder presets target.sg_size; keep it
+        st.target_n = n
+    families = checkpoint_families(ckpt_dir)
+    if step is not None:
+        if step not in families:
+            raise RecoveryError(f"no checkpoint for step {step} "
+                                f"in {ckpt_dir}")
+        candidates = [step]
     else:
-        def read_block(node, stripe, index):
-            refs = raim5.data_blocks_of_node(node, n)
-            li = next(i for i, r in enumerate(refs)
-                      if (r.stripe, r.index) == (stripe, index))
-            return shards[node][li * lay.bs:(li + 1) * lay.bs]
-        buf = raim5.reassemble(n, total, read_block)
-    meta = pickle.loads(head["meta"])
-    spec = FlatSpec.from_json(meta["spec"])
-    tree = buffer_to_tree(template, spec, buf)
-    return tree, head["step"], meta.get("extra", {})
+        candidates = sorted(families, reverse=True)
+    last_err: Optional[Exception] = None
+    for cand in candidates:
+        try:
+            src = _open_family(ckpt_dir, cand, families[cand])
+        except (RecoveryError, FileNotFoundError, EOFError, KeyError,
+                TypeError, pickle.UnpicklingError) as e:
+            last_err = e                # malformed head = unusable family
+            continue
+        try:
+            saved_n = src.n
+            st.saved_n = saved_n
+            st.resharded = bool(n) and saved_n != n
+            meta = spec = None
+            for nd in src.nodes:       # a member with a corrupt meta blob
+                try:                   # is demoted by the loader — any
+                    meta = src.meta(nd)            # parseable meta will do
+                    spec = FlatSpec.from_json(meta["spec"])
+                    break
+                except Exception:
+                    continue
+            if spec is None:
+                raise RecoveryError(
+                    f"family step {src.step}: no member meta parseable")
+            holders = list(src.nodes)
+            tree, usable, corrupt = _load_with_demotion(
+                saved_n, src.total_bytes, template, spec,
+                lambda members: src, holders, [], need, device_put, st)
+            return tree, src.step, meta.get("extra", {})
+        except (RecoveryError, KeyError, TypeError, ValueError, EOFError,
+                pickle.UnpicklingError) as e:
+            last_err = e               # malformed family: try the next one
+            continue
+        finally:
+            src.close()
+    if step is not None and last_err is not None:
+        raise RecoveryError(str(last_err))
+    raise RecoveryError(
+        f"no complete checkpoint available"
+        + (f" ({last_err})" if last_err else ""))

@@ -189,21 +189,30 @@ def _smp_main(conn, run: str, node: int, n: int, total_bytes: int,
                 _, step, meta_blob = msg[:3]
                 want_crc = bool(msg[3]) if len(msg) > 3 else False
                 crc_own = msg[4] if len(msg) > 4 else None
-                if crc_own is not None:
-                    # device encode path: the CRC was computed bucket-wise
-                    # on the accelerator and combined on the trainer side —
-                    # the SMP's zlib pass drops to a meta rewrite
+                if crc_own is not None or want_crc or lay.parity_bytes:
                     meta = pickle.loads(meta_blob)
-                    meta["crc_own"] = int(crc_own) & 0xFFFFFFFF
-                    meta_blob = pickle.dumps(meta)
-                elif want_crc:
-                    # HASC L3: the own-region CRC is computed here, inside
-                    # the SMP, off every trainer-side critical path.  One
-                    # contiguous pass matches what recovery's verify_crc
-                    # recomputes (and what the serial engine streamed).
-                    meta = pickle.loads(meta_blob)
-                    meta["crc_own"] = zlib.crc32(
-                        buf_np[dirty][:lay.own_bytes])
+                    if crc_own is not None:
+                        # device encode path: the CRC was computed bucket-
+                        # wise on the accelerator and combined on the
+                        # trainer side — the SMP's own-region zlib pass
+                        # drops to a meta rewrite
+                        meta["crc_own"] = int(crc_own) & 0xFFFFFFFF
+                    elif want_crc:
+                        # HASC L3: the own-region CRC is computed here,
+                        # inside the SMP, off every trainer-side critical
+                        # path.  One contiguous pass matches what the
+                        # restore loader's folded check recomputes (and
+                        # what the serial engine streamed).
+                        meta["crc_own"] = zlib.crc32(
+                            buf_np[dirty][:lay.own_bytes])
+                    if lay.parity_bytes:
+                        # parity carries no digest in the bucket stream;
+                        # checksum it at publish (still off the trainer's
+                        # path) so restore can verify decode inputs —
+                        # a corrupt survivor parity block would otherwise
+                        # XOR silently into reconstructed bytes
+                        meta["crc_parity"] = zlib.crc32(
+                            buf_np[dirty][lay.own_bytes:])
                     meta_blob = pickle.dumps(meta)
                 base = dirty * META_SLOT
                 mb = memoryview(meta_shm.buf)
@@ -447,11 +456,9 @@ class ReadOnlyNode:
         return None if idx < 0 else self._ctl(2 + 2 * idx)
 
     def _buf(self, step: int) -> np.ndarray:
-        idx = self.clean_steps()[step]
-        shm = self._bufs[idx]
         # copy: callers keep results after close(), and the segment may be
         # unlinked under us (simulated node failure)
-        return np.ndarray((self.layout.buf_bytes,), np.uint8, shm.buf).copy()
+        return self.read_range(step, 0, self.layout.buf_bytes)
 
     def meta(self, step: int) -> bytes:
         idx = self.clean_steps()[step]
@@ -459,20 +466,56 @@ class ReadOnlyNode:
         mlen = struct.unpack("<q", bytes(self._meta.buf[base:base + 8]))[0]
         return bytes(self._meta.buf[base + 8:base + 8 + mlen])
 
+    # ------------------------------------------------ scatter-gather reads
+    def read_range(self, step: int, lo: int, hi: int) -> np.ndarray:
+        """Copy ONLY bytes [lo, hi) of the step's snapshot buffer (local
+        own+parity coordinates) — the ranged primitive the distributed
+        loader's `LoadPlan` executors use instead of whole-region copies."""
+        idx = self.clean_steps()[step]
+        shm = self._bufs[idx]
+        view = np.ndarray((self.layout.buf_bytes,), np.uint8, shm.buf)
+        out = view[lo:hi].copy()
+        del view                     # no exported pointers past this call
+        return out
+
+    def read_ranges(self, step: int, ranges) -> list:
+        """Scatter-gather: one buffer lookup, many range copies.
+        `ranges` is a sequence of local (lo, hi) pairs."""
+        idx = self.clean_steps()[step]
+        shm = self._bufs[idx]
+        view = np.ndarray((self.layout.buf_bytes,), np.uint8, shm.buf)
+        out = [view[lo:hi].copy() for lo, hi in ranges]
+        del view
+        return out
+
     def read_own(self, step: int) -> np.ndarray:
-        return self._buf(step)[:self.layout.own_bytes]
+        return self.read_range(step, 0, self.layout.own_bytes)
+
+    def _block_local(self, stripe: int, index: int) -> int:
+        return raim5.local_block_index(self.node, stripe, index,
+                                       self.layout.n)
 
     def read_block(self, step: int, stripe: int, index: int) -> np.ndarray:
         """One of this node's data blocks, addressed by (stripe, index)."""
         lay = self.layout
-        refs = raim5.data_blocks_of_node(self.node, lay.n)
-        local = next(i for i, r in enumerate(refs)
-                     if (r.stripe, r.index) == (stripe, index))
-        return self._buf(step)[local * lay.bs:(local + 1) * lay.bs]
+        local = self._block_local(stripe, index)
+        return self.read_range(step, local * lay.bs, (local + 1) * lay.bs)
+
+    def read_block_range(self, step: int, stripe: int, index: int,
+                         o1: int, o2: int) -> np.ndarray:
+        """Bytes [o1, o2) *within* data block (stripe, index) — the
+        range-limited RAIM5 decode primitive."""
+        base = self._block_local(stripe, index) * self.layout.bs
+        return self.read_range(step, base + o1, base + o2)
 
     def read_parity(self, step: int) -> np.ndarray:
         lay = self.layout
-        return self._buf(step)[lay.own_bytes:lay.own_bytes + lay.parity_bytes]
+        return self.read_range(step, lay.own_bytes,
+                               lay.own_bytes + lay.parity_bytes)
+
+    def read_parity_range(self, step: int, o1: int, o2: int) -> np.ndarray:
+        base = self.layout.own_bytes
+        return self.read_range(step, base + o1, base + o2)
 
     def close(self):
         for s in [self._ctl_shm, self._meta] + self._bufs:

@@ -14,6 +14,7 @@ from repro.kernels.ops import (
     encode_bucket, ssd_scan, swa_attention, xor_parity_decode,
     xor_parity_encode,
 )
+from repro.kernels.stage import bucket_crc
 
-__all__ = ["encode_bucket", "ssd_scan", "swa_attention",
+__all__ = ["bucket_crc", "encode_bucket", "ssd_scan", "swa_attention",
            "xor_parity_decode", "xor_parity_encode"]

@@ -45,11 +45,15 @@ def xor_parity_decode(survivors, parity, *, interpret: bool = None):
 
 
 def encode_bucket(blocks, *, nbytes: int, want_crc: bool = True,
-                  interpret: bool = None, crc_impl: str = "pallas"):
+                  interpret: bool = None, crc_impl: str = "pallas",
+                  tile_lanes: int = None):
     """Fused snapshot-bucket encode (XOR parity fold + CRC32) on device —
-    see `repro.kernels.stage`.  blocks: (k, n_lanes) uint32."""
+    see `repro.kernels.stage`.  blocks: (k, n_lanes) uint32.  Buckets
+    beyond `stage.MAX_CELL_LANES` tile over a grid and return per-tile
+    digests (fold with `stage.bucket_crc`)."""
     return _encode_bucket_kernel(blocks, nbytes=nbytes, want_crc=want_crc,
-                                 interpret=interpret, crc_impl=crc_impl)
+                                 interpret=interpret, crc_impl=crc_impl,
+                                 tile_lanes=tile_lanes)
 
 
 def ssd_scan(u, a, Bm, Cm, h0=None, *, chunk: int = 128,

@@ -17,24 +17,33 @@ so the host receives ready-to-publish shard + parity + checksum in one
 drops to a plain write.  Per-bucket CRCs are recombined into the
 contiguous own-region digest with `repro.core.crcutil.crc32_combine`.
 
-The kernel runs as a single grid cell per bucket (CRC is sequential), so
-`bucket_bytes` x k must fit VMEM on real TPUs (the default 4 MiB bucket
-does for small k; shrink `ReftConfig.bucket_bytes` for large SGs).  On
-CPU backends it runs in interpret mode; `crc_impl="jnp"` keeps a
-pure-jnp CRC fallback for backends where in-kernel table gathers lower
-poorly.
+Small buckets run as a single grid cell (CRC is sequential).  Buckets
+larger than `MAX_CELL_LANES` are TILED: the kernel runs over a
+`grid=(T,)` of `TILE_LANES`-lane cells — each cell XOR-folds and
+checksums only its slice (so VMEM holds one tile, not the whole bucket)
+and emits a per-tile digest; the host recombines the digests into the
+bucket's zlib-compatible CRC with `repro.core.crcutil.crc32_combine`
+(`bucket_crc`).  On CPU backends the kernel runs in interpret mode;
+`crc_impl="jnp"` keeps a pure-jnp CRC fallback (single-pass — the VMEM
+tiling rationale does not apply to it) for backends where in-kernel
+table gathers lower poorly.
 """
 from __future__ import annotations
 
 import functools
+from typing import Optional
+
+import numpy as np
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from repro.core.crcutil import CRC_TABLES
+from repro.core.crcutil import CRC_TABLES, crc32_concat
 
 LANE_BYTES = 512              # pad buckets to 128 uint32 lanes x 4 bytes
+MAX_CELL_LANES = 1 << 16      # 256 KiB: biggest single-grid-cell bucket
+TILE_LANES = 1 << 15          # 128 KiB grid cells beyond that
 
 _MASK = 0xFF                  # plain ints: jnp constants created at module
 _INIT = 0xFFFFFFFF            # scope would be captured consts in the kernel
@@ -74,6 +83,34 @@ def _crc_words(tab, lanes, nbytes: int):
     return crc ^ jnp.uint32(_INIT)
 
 
+def _crc_words_dyn(tab, lanes, nbytes):
+    """Slice-by-4 CRC32 over the first `nbytes` bytes where `nbytes` is a
+    TRACED value (the per-tile byte count of the tiled kernel): the word
+    loop bound is dynamic and the 0-3 tail bytes are a masked unroll."""
+    mask = jnp.uint32(_MASK)
+    nbytes = jnp.asarray(nbytes, jnp.int32)
+    nw = nbytes // 4
+
+    def body(i, c):
+        x = c ^ lanes[i]
+        return (tab[3, (x & mask).astype(jnp.int32)]
+                ^ tab[2, ((x >> 8) & mask).astype(jnp.int32)]
+                ^ tab[1, ((x >> 16) & mask).astype(jnp.int32)]
+                ^ tab[0, ((x >> 24) & mask).astype(jnp.int32)])
+
+    crc = jax.lax.fori_loop(0, nw, body, jnp.uint32(_INIT))
+    rem = nbytes - nw * 4
+    w = lanes[jnp.minimum(nw, lanes.shape[0] - 1)]   # clamp: unused if rem=0
+
+    def tail(j, c):
+        byte = (w >> (8 * j).astype(jnp.uint32)) & mask
+        nc = (c >> 8) ^ tab[0, ((c ^ byte) & mask).astype(jnp.int32)]
+        return jnp.where(j < rem, nc, c)
+
+    crc = jax.lax.fori_loop(0, 3, tail, crc)
+    return crc ^ jnp.uint32(_INIT)
+
+
 def _encode_kernel(blocks_ref, tab_ref, out_ref, crc_ref, *,
                    nbytes: int, want_crc: bool):
     k = blocks_ref.shape[0]
@@ -87,13 +124,46 @@ def _encode_kernel(blocks_ref, tab_ref, out_ref, crc_ref, *,
         crc_ref[0] = jnp.uint32(0)
 
 
+def _encode_tiled_kernel(blocks_ref, tab_ref, out_ref, crc_ref, *,
+                         nbytes: int, tile_lanes: int, want_crc: bool):
+    """One grid cell per `tile_lanes`-lane slice of the bucket: XOR-fold
+    the slice and checksum only the slice's live bytes.  The per-tile
+    digests are plain zlib CRC32s of consecutive chunks, recombined on
+    the host (`bucket_crc`)."""
+    t = pl.program_id(0)
+    k = blocks_ref.shape[0]
+    acc = blocks_ref[0]
+    for i in range(1, k):
+        acc = jax.lax.bitwise_xor(acc, blocks_ref[i])
+    out_ref[...] = acc
+    if want_crc:
+        tile_bytes = 4 * tile_lanes
+        nb_t = jnp.clip(jnp.int32(nbytes) - t * tile_bytes, 0, tile_bytes)
+        crc_ref[0] = _crc_words_dyn(tab_ref[...], acc, nb_t)
+    else:
+        crc_ref[0] = jnp.uint32(0)
+
+
+def resolve_tile_lanes(n_lanes: int,
+                       tile_lanes: Optional[int] = None) -> Optional[int]:
+    """CRC tiling decision for an `n_lanes`-lane bucket: None = single
+    grid cell (small bucket), else the tile width in lanes."""
+    if tile_lanes is not None:
+        return tile_lanes if n_lanes > tile_lanes else None
+    return TILE_LANES if n_lanes > MAX_CELL_LANES else None
+
+
 @functools.partial(jax.jit, static_argnames=("nbytes", "want_crc",
-                                             "interpret", "crc_impl"))
+                                             "interpret", "crc_impl",
+                                             "tile_lanes"))
 def encode_bucket(blocks: jax.Array, *, nbytes: int, want_crc: bool = True,
-                  interpret: bool = None, crc_impl: str = "pallas"):
+                  interpret: bool = None, crc_impl: str = "pallas",
+                  tile_lanes: Optional[int] = None):
     """Fused bucket encode.  blocks: (k, n_lanes) uint32 (n_lanes % 128
     == 0; bytes past `nbytes` are zero padding).  Returns
-    (encoded (n_lanes,) uint32, crc (1,) uint32).
+    (encoded (n_lanes,) uint32, crc uint32 array) — crc has shape (1,)
+    for single-cell buckets or (T,) per-tile digests when the bucket is
+    larger than `MAX_CELL_LANES` (fold with `bucket_crc`).
 
     k == 1: own-data bucket — pass-through + CRC.
     k  > 1: parity bucket — XOR fold of the stripe blocks (+ CRC if
@@ -110,14 +180,69 @@ def encode_bucket(blocks: jax.Array, *, nbytes: int, want_crc: bool = True,
         crc = crc32_lanes_jnp(acc, nbytes) if want_crc \
             else jnp.zeros((1,), jnp.uint32)
         return acc, crc
-    kern = functools.partial(_encode_kernel, nbytes=nbytes,
-                             want_crc=want_crc)
-    return pl.pallas_call(
+    tl = resolve_tile_lanes(n, tile_lanes)
+    if tl is None:
+        kern = functools.partial(_encode_kernel, nbytes=nbytes,
+                                 want_crc=want_crc)
+        return pl.pallas_call(
+            kern,
+            out_shape=(jax.ShapeDtypeStruct((n,), jnp.uint32),
+                       jax.ShapeDtypeStruct((1,), jnp.uint32)),
+            interpret=interpret,
+        )(blocks, jnp.asarray(CRC_TABLES))
+    nt = -(-n // tl)
+    n_pad = nt * tl
+    if n_pad != n:
+        blocks = jnp.pad(blocks, ((0, 0), (0, n_pad - n)))
+    kern = functools.partial(_encode_tiled_kernel, nbytes=nbytes,
+                             tile_lanes=tl, want_crc=want_crc)
+    out, crc = pl.pallas_call(
         kern,
-        out_shape=(jax.ShapeDtypeStruct((n,), jnp.uint32),
-                   jax.ShapeDtypeStruct((1,), jnp.uint32)),
+        grid=(nt,),
+        in_specs=[pl.BlockSpec((k, tl), lambda t: (0, t)),
+                  pl.BlockSpec((4, 256), lambda t: (0, 0))],
+        out_specs=(pl.BlockSpec((tl,), lambda t: (t,)),
+                   pl.BlockSpec((1,), lambda t: (t,))),
+        out_shape=(jax.ShapeDtypeStruct((n_pad,), jnp.uint32),
+                   jax.ShapeDtypeStruct((nt,), jnp.uint32)),
         interpret=interpret,
     )(blocks, jnp.asarray(CRC_TABLES))
+    return out[:n], crc
+
+
+def bucket_crc(crc, nbytes: int, tile_lanes: Optional[int] = None) -> int:
+    """`encode_bucket` digest(s) -> the bucket's final CRC32: identity for
+    the single-cell (1,) shape, a `crc32_combine` fold of consecutive
+    per-tile digests for the tiled (T,) shape."""
+    arr = np.asarray(crc).reshape(-1)
+    if arr.size <= 1:
+        return int(arr[0]) if arr.size else 0
+    words = -(-nbytes // 4)
+    if tile_lanes is None:
+        # recover the auto tiling: lane counts are padded to LANE_BYTES.
+        # The recovered tile count must match EXACTLY — an encode made
+        # with an explicit tile_lanes combined at the wrong granularity
+        # would fold wrong per-part lengths into a silently bad CRC.
+        n_lanes = -(-nbytes // LANE_BYTES) * (LANE_BYTES // 4)
+        tile_lanes = resolve_tile_lanes(n_lanes) or n_lanes
+        assert -(-n_lanes // tile_lanes) == arr.size, \
+            f"{arr.size} tile digests do not match the auto tiling " \
+            f"({tile_lanes} lanes/tile over {n_lanes} lanes) — pass the " \
+            f"tile_lanes used at encode time"
+    else:
+        # explicit tiling: extra all-padding tiles digest 0 bytes and
+        # combine as identity, but too FEW tiles cannot cover the data
+        assert -(-words // tile_lanes) <= arr.size, \
+            f"{arr.size} tile digests cannot cover {nbytes} bytes " \
+            f"at {tile_lanes} lanes/tile"
+    tile_bytes = 4 * tile_lanes
+    parts = []
+    left = nbytes
+    for i in range(arr.size):
+        nb = max(0, min(tile_bytes, left))
+        parts.append((int(arr[i]), nb))
+        left -= tile_bytes
+    return crc32_concat(parts)
 
 
 @functools.partial(jax.jit, static_argnames=("nbytes",))

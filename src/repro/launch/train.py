@@ -10,6 +10,11 @@ the recovered state.
   PYTHONPATH=src python -m repro.launch.train --arch opt-125m --steps 50 \\
       --batch 2 --seq 256 --backend reft --sg-size 4 --snapshot-every 2 \\
       --inject 20:software --inject 35:node
+
+Elastic restart (reshard-on-restore): `--resume` works with a DIFFERENT
+`--sg-size` than the run that wrote the checkpoint — the distributed
+loader rediscovers the saved layout from the REFT-Ckpt family heads and
+ranges its reads accordingly, so an n-node run restores onto m nodes.
 """
 from __future__ import annotations
 
@@ -20,6 +25,20 @@ import numpy as np
 
 import jax
 import jax.numpy as jnp
+
+
+def _load_stats_str(ld) -> str:
+    """One-line per-phase load decomposition for resume/recover prints."""
+    if ld is None:
+        return ""
+    out = (f" read={ld.bytes_read / 1e6:.1f}MB"
+           f" decoded={ld.decoded_bytes / 1e6:.1f}MB"
+           f" read_s={ld.read_seconds:.3f}")
+    if ld.h2d_seconds:
+        out += f" h2d_s={ld.h2d_seconds:.3f}"
+    if ld.resharded:
+        out += f" resharded={ld.saved_n}->{ld.target_n}"
+    return out
 
 
 def main(argv=None):
@@ -94,7 +113,8 @@ def main(argv=None):
     with CheckpointSession(spec, state) as sess:
         if sess.restored is not None:
             res = sess.restored
-            print(f"[resume] tier={res.tier} step={res.step}")
+            print(f"[resume] tier={res.tier} step={res.step}"
+                  + _load_stats_str(res.load))
             state = jax.tree.map(jnp.asarray, res.state)
             ds.restore(res.extra_meta)
             step = res.step
@@ -115,7 +135,8 @@ def main(argv=None):
                     ap.error(f"injected {kind} failure at step {step} is "
                              f"unrecoverable: {e} (no completed save yet — "
                              f"lower --snapshot-every or inject later)")
-                print(f"[recover] tier={res.tier} step={res.step}")
+                print(f"[recover] tier={res.tier} step={res.step}"
+                      + _load_stats_str(res.load))
                 state = jax.tree.map(jnp.asarray, res.state)
                 ds.restore(res.extra_meta)
                 step = res.step

@@ -73,6 +73,48 @@ def test_encode_bucket_xor_fold_matches_ref(k):
     assert int(crc2[0]) == 0
 
 
+@pytest.mark.parametrize("nbytes", [(1 << 20) + 13, 4 << 20])
+def test_encode_bucket_tiled_large_matches_zlib(nbytes):
+    """Satellite: buckets past MAX_CELL_LANES tile over a grid (each cell
+    checksums only its slice) and the per-tile digests recombine via
+    crc32_combine into exactly zlib's answer."""
+    from repro.kernels.stage import (LANE_BYTES, MAX_CELL_LANES, bucket_crc,
+                                     resolve_tile_lanes)
+    rng = np.random.default_rng(nbytes)
+    npad = -(-nbytes // LANE_BYTES) * LANE_BYTES
+    data = np.zeros(npad, np.uint8)
+    data[:nbytes] = rng.integers(0, 256, nbytes, dtype=np.uint8)
+    lanes = jax.lax.bitcast_convert_type(
+        jnp.asarray(data).reshape(-1, 4), jnp.uint32).reshape(1, -1)
+    assert lanes.shape[1] > MAX_CELL_LANES          # really tiled
+    assert resolve_tile_lanes(lanes.shape[1]) is not None
+    out, crc = encode_bucket(lanes, nbytes=nbytes)
+    assert np.asarray(crc).size > 1                 # per-tile digests
+    assert bucket_crc(crc, nbytes) == zlib.crc32(data[:nbytes].tobytes())
+    assert np.array_equal(np.asarray(out).view(np.uint8), data)
+    # explicit tile width: same answer through a different tiling
+    out2, crc2 = encode_bucket(lanes, nbytes=nbytes, tile_lanes=1 << 14)
+    assert np.asarray(crc2).size != np.asarray(crc).size
+    assert bucket_crc(crc2, nbytes, tile_lanes=1 << 14) \
+        == zlib.crc32(data[:nbytes].tobytes())
+    # folding an explicit tiling WITHOUT tile_lanes must refuse, not
+    # silently combine wrong per-part lengths
+    with pytest.raises(AssertionError):
+        bucket_crc(crc2, nbytes)
+
+
+def test_encode_bucket_tiled_xor_fold():
+    from repro.kernels.stage import bucket_crc
+    rng = np.random.default_rng(3)
+    k, n = 3, 1 << 17                               # > MAX_CELL_LANES
+    blocks = rng.integers(0, 2 ** 32, (k, n), dtype=np.uint64) \
+        .astype(np.uint32)
+    out, crc = encode_bucket(jnp.asarray(blocks), nbytes=4 * n)
+    ref = blocks[0] ^ blocks[1] ^ blocks[2]
+    assert np.array_equal(np.asarray(out), ref)
+    assert bucket_crc(crc, 4 * n) == zlib.crc32(ref.tobytes())
+
+
 def test_crc32_combine_matches_zlib():
     from repro.core.crcutil import crc32_combine, crc32_concat
     rng = np.random.default_rng(0)
