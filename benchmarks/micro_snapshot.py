@@ -15,6 +15,13 @@ through the host encode path and the device-side fused Pallas
 gather+XOR+CRC path (interpret-mode on CPU), with a byte-identity check
 between the two (`encode_*` rows / the JSON `encode` field).
 
+`fig_persist_overlap_*` rows compare blocking vs async REFT-Ckpt
+persistence against a simulated slow durable tier: the trainer-side
+stall of an inline persist vs the fire cost + step-time delta of
+`persist(wait=False)` while the SMPs stream shards in the background
+(`persist_overlap` in the JSON artifact, with an `async_nonblocking`
+check).
+
 The run ends with a training-interference probe: median step time of a
 small jitted compute loop with snapshotting off, then with a snapshot
 permanently in flight — once against the pre-refactor serial thread
@@ -150,6 +157,77 @@ def encode_paths(size: int):
     return rows, checks
 
 
+def persist_overlap(size: int, steps: int = 40,
+                    delay_s: float = 0.35) -> tuple:
+    """Blocking vs async REFT-Ckpt persist interference on step time.
+
+    One reft backend, sg_size=4, with a simulated slow durable tier
+    (`persist_delay_s` — real CI disks are too fast to show the stall).
+    The BLOCKING row is the trainer-side stall of an inline persist; the
+    ASYNC rows are the fire cost of `persist(wait=False)` plus the
+    median step-time delta while the SMPs stream shards in the
+    background.  Returns (rows, checks-dict for the JSON artifact)."""
+    import statistics
+    import tempfile
+    import time as _t
+
+    import jax
+    import jax.numpy as jnp
+
+    state = make_param_state(size)
+    w = jax.random.normal(jax.random.PRNGKey(1), (512, 512), jnp.float32)
+    f = jax.jit(lambda m: m @ m)
+    f(w).block_until_ready()
+
+    def run_steps(n):
+        ts = []
+        for _ in range(n):
+            t0 = _t.perf_counter()
+            f(w).block_until_ready()
+            ts.append(_t.perf_counter() - t0)
+        return statistics.median(ts)
+
+    rows = []
+    with tempfile.TemporaryDirectory() as d:
+        spec = CheckpointSpec(backend="reft", ckpt_dir=d, sg_size=4,
+                              resume=False,
+                              options={"persist_delay_s": delay_s})
+        with spec.build(state) as ck:
+            ck.snapshot(state, 1, wait=True)
+            base = run_steps(steps)
+
+            t0 = _t.perf_counter()
+            assert ck.persist(wait=True) == 1
+            blocking = _t.perf_counter() - t0       # trainer-side stall
+
+            ck.snapshot(state, 2, wait=True)
+            t0 = _t.perf_counter()
+            assert ck.persist(wait=False) == 2
+            fire = _t.perf_counter() - t0           # ticket cost only
+            during = run_steps(steps)               # SMPs writing under us
+            t0 = _t.perf_counter()
+            ck.wait()                               # drain + collect
+            join = _t.perf_counter() - t0
+            st = ck.stats()
+    delta = during - base
+    rows.append(("fig_persist_overlap_blocking_stall_s", blocking, 0.0))
+    rows.append(("fig_persist_overlap_async_fire_s", fire, 0.0))
+    rows.append(("fig_persist_overlap_async_step_delta_s", delta, 0.0))
+    rows.append(("fig_persist_overlap_async_join_s", join, 0.0))
+    checks = {
+        "baseline_step_s": base,
+        "blocking_stall_s": blocking,
+        "async_fire_s": fire,
+        "async_step_delta_s": delta,
+        "async_join_s": join,
+        "persist_overlap_seconds": st.get("persist_overlap_seconds", 0.0),
+        # the async fire must not pay the durable write: well under the
+        # blocking stall (which holds the simulated-fsync delay)
+        "async_nonblocking": fire < max(0.25 * blocking, 0.05),
+    }
+    return rows, checks
+
+
 def interference(size: int, steps: int = 50, rounds: int = 3) -> dict:
     """Training-interference probe: step-time delta with a snapshot
     permanently in flight, serial thread vs HASC pipeline on the same
@@ -238,11 +316,15 @@ def main(argv=None):
     rows = run(size)
     enc_rows, enc_checks = encode_paths(size)
     rows += enc_rows
+    po_rows, po = persist_overlap(size)
+    rows += po_rows
     print("bench,seconds,GB_per_s")
     for name, s, gbps in rows:
         print(f"{name},{s:.4f},{gbps:.2f}")
     for k, v in enc_checks.items():
         print(f"encode_{k},{int(v)},")
+    print(f"persist_overlap_async_nonblocking,"
+          f"{int(po['async_nonblocking'])},")
     inter = None
     if not args.no_interference:
         inter = interference(size)
@@ -259,6 +341,7 @@ def main(argv=None):
             "rows": [{"name": n, "seconds": s, "gb_per_s": g}
                      for n, s, g in rows],
             "encode": enc_checks,
+            "persist_overlap": po,
             "interference": inter,
         }
         with open(args.json, "w") as fh:

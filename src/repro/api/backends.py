@@ -119,6 +119,10 @@ class ReftCheckpointer(Checkpointer):
             crc_impl=opt.get("crc_impl", "pallas"),
             max_flights=opt.get("max_flights", 1),
             pin_cpus=opt.get("pin_cpus", "auto"),
+            # async-persistence knob (docs/API.md "Async persistence"):
+            # simulated durable-tier latency for tests and the
+            # persist-overlap interference benchmark
+            persist_delay_s=opt.get("persist_delay_s", 0.0),
         )
         self.group = ReftGroup(spec.sg_size, state_template, rcfg)
         self.manager = CheckpointManager(spec.ckpt_dir, spec.sg_size,
@@ -127,6 +131,7 @@ class ReftCheckpointer(Checkpointer):
 
     # ------------------------------------------------------------- save
     def snapshot(self, state, step, extra_meta=None, wait=False):
+        self.poll_persists()           # fold finished async persists first
         t0 = time.perf_counter()
         lv0 = self.group.level_seconds() if wait else None
         started = self.group.snapshot(state, step, extra_meta, wait=wait)
@@ -141,14 +146,47 @@ class ReftCheckpointer(Checkpointer):
         self._check_degraded(step)
         return started
 
-    def persist(self, step=None):
-        t0 = time.perf_counter()
-        self.group.wait()
-        s = self.group.checkpoint()
-        manifest = self.manager.commit()
-        if s is not None:
-            self.emit("persist", s, seconds=time.perf_counter() - t0,
-                      detail=f"manifest={manifest['complete_steps']}")
+    def poll_persists(self):
+        """Collect finished REFT-Ckpt rounds: resolve the manager's
+        in-flight registration, commit the manifest (+GC), and emit a
+        `persist` (or `persist-error`) event per round."""
+        return self._emit_rounds(self.group.poll_persists())
+
+    def _emit_rounds(self, out):
+        for r in out:
+            self.manager.resolve_inflight(r["step"])
+            if r["ok"]:
+                manifest = self.manager.commit()
+                self.emit("persist", r["step"], seconds=r["seconds"],
+                          detail=f"manifest={manifest['complete_steps']}")
+            else:
+                # the torn family is left to GC (no longer in-flight);
+                # the engine is NOT degraded — a failed durable write
+                # must not pause in-memory protection
+                self.manager.commit()
+                self.emit("persist-error", r["step"], seconds=r["seconds"],
+                          detail="; ".join(r["errors"]))
+        return out
+
+    def persist(self, step=None, wait=True):
+        """Fire an SG-consistent REFT-Ckpt round.  `wait=False` returns
+        the fired step immediately (the SMPs stream their pinned shards
+        on background threads); `wait=True` additionally drains the
+        freshest snapshot first (so the round captures it) and blocks
+        until the family is durable, raising on persist failure."""
+        self.poll_persists()
+        if wait:
+            self.group.wait()          # capture the newest snapshot
+        s = self.group.checkpoint_async()
+        if s is None:
+            return None
+        self.manager.register_inflight(s)
+        if wait:
+            rounds = self._emit_rounds(self.group.drain_persists())
+            mine = next((r for r in rounds if r["step"] == s), None)
+            if mine is not None and not mine["ok"]:
+                raise RuntimeError(f"REFT-Ckpt persist failed: "
+                                   f"{'; '.join(mine['errors'])}")
         return s
 
     # ---------------------------------------------------------- restore
@@ -207,6 +245,10 @@ class ReftCheckpointer(Checkpointer):
         out["engine_snapshots"] = sum(s["snapshots"] for s in eng)
         out["engine_bytes_sent"] = sum(s["bytes_sent"] for s in eng)
         out["engine_seconds"] = sum(s["seconds"] for s in eng)
+        out["persist_inflight"] = self.group.persist_inflight()
+        out["persist_overlap_seconds"] = sum(
+            s.get("persist_overlap_seconds", 0.0) for s in eng)
+        out["persist_errors"] = sum(s.get("persist_errors", 0) for s in eng)
         for k, v in self.group.level_seconds().items():
             out[f"engine_{k}_seconds"] = v
         return out
@@ -229,8 +271,14 @@ class ReftCheckpointer(Checkpointer):
 
     def wait(self):
         self.group.wait()
+        self._emit_rounds(self.group.drain_persists())
 
     def close(self):
+        try:                              # join outstanding persists so a
+            self._emit_rounds(            # durable family is never torn
+                self.group.drain_persists(30))   # by a clean shutdown
+        except Exception:
+            pass
         self.group.close()
 
 
@@ -251,7 +299,7 @@ class NullCheckpointer(Checkpointer):
     def snapshot(self, state, step, extra_meta=None, wait=False):
         return True
 
-    def persist(self, step=None):
+    def persist(self, step=None, wait=True):
         return None
 
     def restore(self, step=None, target=None):

@@ -242,8 +242,13 @@ class _DiskCheckpointer(Checkpointer):
                       detail="async-launch")
         return started
 
-    def persist(self, step=None):
-        """Disk saves are already durable; just drain in-flight work."""
+    def persist(self, step=None, wait=True):
+        """Disk saves are already durable once the writer finishes; the
+        drain IS the durability barrier, so `wait` is accepted for
+        protocol parity and ignored (the types.py contract for
+        inherently synchronous persists) — `async_disk`'s overlap is the
+        save itself, and skipping the drain would return un-durable
+        steps as tickets no poll ever completes."""
         t0 = time.perf_counter()
         self.writer.wait()
         last = self.writer.last_step

@@ -60,6 +60,20 @@ class CheckpointSession:
         self._last_call_t: Optional[float] = None
         self._step_times: List[float] = []
         self._degraded_seen: set = set()
+        # cadence persists fire WITHOUT blocking on disk I/O when the
+        # backend supports it (persist(wait=False) tickets); completion
+        # is polled alongside snapshot flights in after_step.
+        # options["persist_blocking"] forces the old inline behavior.
+        self._persist_kwargs: dict = {}
+        if not spec.options.get("persist_blocking", False):
+            import inspect
+            try:
+                params = inspect.signature(
+                    self.checkpointer.persist).parameters
+            except (TypeError, ValueError):
+                params = {}
+            if "wait" in params:
+                self._persist_kwargs = {"wait": False}
 
     # ----------------------------------------------------------- entry
     def _restore_call(self, step, target) -> RestoreResult:
@@ -122,8 +136,14 @@ class CheckpointSession:
                 self._last_snapshot = step
                 did["snapshot"] = True
         if step - self._last_persist >= self.checkpoint_every:
-            did["persist"] = self.checkpointer.persist()
+            # fire-and-overlap: the SMPs stream their shards to disk in
+            # the background; after_step returns without touching disk
+            did["persist"] = self.checkpointer.persist(
+                **self._persist_kwargs)
             self._last_persist = step
+        # collect async persists that completed since the last step (the
+        # backend emits their `persist` events / commits the manifest)
+        self.checkpointer.poll_persists()
         self._watch_degraded(step)
         return did
 
@@ -186,14 +206,22 @@ class CheckpointSession:
             self._last_snapshot = step
         return ok
 
-    def persist(self, step=None):
+    def persist(self, step=None, wait=True):
         # a manual persist resets the cadence clock too (a persist right
         # before a cadence boundary should not be repeated at it)
         self._last_persist = step if step is not None else self._last_snapshot
+        if not wait and self._persist_kwargs:
+            return self.checkpointer.persist(step, wait=False)
         return self.checkpointer.persist(step)
 
     def wait(self):
         self.checkpointer.wait()
+
+    def drain(self):
+        """Join ALL outstanding async work — in-flight snapshots and
+        fired-but-unfinished persists — and collect their events."""
+        self.checkpointer.wait()
+        self.checkpointer.poll_persists()
 
     def health(self) -> dict:
         return self.checkpointer.health()

@@ -30,8 +30,8 @@ from typing import Any, Callable, Dict, Optional
 @dataclass(frozen=True)
 class CkptEvent:
     """One structured record per checkpointing operation."""
-    kind: str                     # snapshot | persist | restore | degraded |
-                                  # inject | heal | gc
+    kind: str                     # snapshot | persist | persist-error |
+                                  # restore | degraded | inject | heal | gc
     step: int
     backend: str
     seconds: float = 0.0
@@ -151,9 +151,14 @@ class Checkpointer(abc.ABC):
         degraded backend).  `wait=True` blocks until the capture is clean."""
 
     @abc.abstractmethod
-    def persist(self, step: Optional[int] = None) -> Optional[int]:
+    def persist(self, step: Optional[int] = None,
+                wait: bool = True) -> Optional[int]:
         """Make the newest clean capture durable; returns its step (None
-        when there is nothing to persist)."""
+        when there is nothing to persist).  `wait=False` fires the
+        durable write WITHOUT blocking on disk I/O and returns the step
+        as a ticket — completion is collected by `poll_persists()` /
+        `wait()` and surfaced as `persist` events; backends whose persist
+        is inherently synchronous may ignore the flag."""
 
     @abc.abstractmethod
     def restore(self, step: Optional[int] = None,
@@ -175,7 +180,14 @@ class Checkpointer(abc.ABC):
 
     # ------------------------------------------------- optional surface
     def wait(self) -> None:
-        """Drain in-flight async work (no-op where saves are synchronous)."""
+        """Drain in-flight async work — snapshots AND fired persists
+        (no-op where saves are synchronous)."""
+
+    def poll_persists(self) -> list:
+        """Non-blocking: collect async persists that completed since the
+        last poll (emitting their events); returns completion records.
+        Backends without overlapped persistence return []."""
+        return []
 
     def inject_failure(self, node: int = 0, kind: str = "software") -> None:
         """Simulate a failure for drills.  Disk backends interpret any kind

@@ -24,21 +24,29 @@ def scan_shards(ckpt_dir: str) -> Dict[int, List[int]]:
 
 
 def plan_gc(families: Dict[int, list], complete: set, keep_steps: set,
-            spare_newest_torn: bool = False) -> List[int]:
+            spare_newest_torn: bool = False,
+            inflight=()) -> List[int]:
     """Steps to delete under keep-k-complete retention.
 
     One retention policy for every checkpoint layout (REFT shard families
     and disk ckpt families): complete families survive iff in
     `keep_steps`; torn families are garbage, except — when
     `spare_newest_torn` — the single newest torn family above the newest
-    kept step, which may be a persist currently in flight."""
-    spare = None
+    kept step, which may be a persist currently in flight.  `inflight`
+    explicitly names steps with REGISTERED in-flight persists (the async
+    REFT-Ckpt path): their still-growing families are never GC fodder, no
+    matter how many of them are in the air or where they sit relative to
+    the kept steps."""
+    spare = {int(s) for s in inflight}
     if spare_newest_torn:
         newest_kept = max(keep_steps) if keep_steps else -1
-        spare = max((s for s in families
-                     if s not in complete and s > newest_kept), default=None)
+        newest_torn = max((s for s in families
+                           if s not in complete and s > newest_kept),
+                          default=None)
+        if newest_torn is not None:
+            spare.add(newest_torn)
     return [s for s in families
-            if s != spare and not (s in complete and s in keep_steps)]
+            if s not in spare and not (s in complete and s in keep_steps)]
 
 
 class CheckpointManager:
@@ -46,7 +54,21 @@ class CheckpointManager:
         self.dir = ckpt_dir
         self.n = n_members
         self.keep = keep
-        os.makedirs(ckpt_dir, exist_ok=True)
+        self._inflight: set = set()      # steps with registered async
+        os.makedirs(ckpt_dir, exist_ok=True)   # persists: GC-exempt
+
+    # --------------------------------------------------- in-flight gate
+    def register_inflight(self, step: int) -> None:
+        """Declare an async persist for `step` in flight: its (growing,
+        currently torn) family is exempt from GC until resolved, so a
+        commit racing the background write can never tear it."""
+        self._inflight.add(int(step))
+
+    def resolve_inflight(self, step: int) -> None:
+        self._inflight.discard(int(step))
+
+    def inflight_steps(self) -> List[int]:
+        return sorted(self._inflight)
 
     # ------------------------------------------------------------ state
     def complete_steps(self) -> List[int]:
@@ -55,7 +77,11 @@ class CheckpointManager:
                       if nodes == list(range(self.n)))
 
     def latest(self) -> Optional[int]:
-        steps = self.complete_steps()
+        """Newest COMPLETE, fully-landed step — a family whose async
+        persist is still in flight is never reported (its shards may all
+        exist while a final fsync is pending)."""
+        steps = [s for s in self.complete_steps()
+                 if s not in self._inflight]
         return steps[-1] if steps else None
 
     # --------------------------------------------------------- manifest
@@ -92,7 +118,7 @@ class CheckpointManager:
         complete = {s for s, nodes in shards.items()
                     if nodes == list(range(self.n))}
         for s in plan_gc(shards, complete, set(keep_steps),
-                         spare_newest_torn=True):
+                         spare_newest_torn=True, inflight=self._inflight):
             for node in shards[s]:
                 try:
                     os.remove(os.path.join(

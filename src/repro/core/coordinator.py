@@ -48,6 +48,10 @@ class ReftGroup:
         self.states = {i: NodeState.HEALTHY for i in range(n)}
         self.last_load_stats = None           # LoadStats of the last recover
         self._snapshots_since_ckpt = 0
+        # async REFT-Ckpt rounds in flight: {"step", "parts": [(engine,
+        # seq)], "t0"}; completed per-engine records keyed by (node, seq)
+        self._persist_rounds: List[dict] = []
+        self._persist_done: Dict[Tuple[int, int], dict] = {}
         os.makedirs(cfg.ckpt_dir, exist_ok=True)
 
     # ------------------------------------------------------------- save
@@ -92,11 +96,13 @@ class ReftGroup:
             out["l3"] += e.stats.get("l3_seconds", 0.0)
         return out
 
-    def checkpoint(self) -> Optional[int]:
-        """REFT-Ckpt: every healthy SMP persists its shard (no trainer
-        involvement).  All members persist the SAME step — the newest one
+    def checkpoint_async(self) -> Optional[int]:
+        """REFT-Ckpt, overlapped: every healthy SMP persists its shard on
+        its own background thread (no trainer involvement, no trainer
+        blocking).  All members persist the SAME step — the newest one
         every healthy member holds clean — so the on-disk family is
-        SG-consistent and restorable."""
+        SG-consistent and restorable.  Returns the step fired (a round
+        ticket); collect with `poll_persists` / `drain_persists`."""
         from repro.core.recovery import attach_survivors, common_step
         healthy = [e for e in self.engines
                    if self.states[e.node] == NodeState.HEALTHY
@@ -115,13 +121,83 @@ class ReftGroup:
                 v.close()
         if step is None or step < 0:
             return None
-        # fan out: every SMP writes its shard concurrently, then collect
+        parts = []
         for e in healthy:
-            e.smp.persist_send(os.path.join(
-                self.cfg.ckpt_dir, f"step-{step}-node-{e.node}.reft"),
-                step=step)
-        for e in healthy:
-            e.smp.persist_wait()
+            path = os.path.join(self.cfg.ckpt_dir,
+                                f"step-{step}-node-{e.node}.reft")
+            parts.append((e, e.persist_async(path, step=step)))
+        self._persist_rounds.append({"step": step, "parts": parts,
+                                     "t0": time.monotonic()})
+        return step
+
+    def _fold_round(self, rnd: dict) -> Optional[dict]:
+        """Round -> completion record once every member's record is in."""
+        recs = [self._persist_done.get((e.node, seq))
+                for e, seq in rnd["parts"]]
+        if any(r is None for r in recs):
+            return None
+        for e, seq in rnd["parts"]:
+            self._persist_done.pop((e.node, seq), None)
+        errors = [f"node{e.node}: {r['error']}"
+                  for (e, _), r in zip(rnd["parts"], recs) if r["error"]]
+        return {"step": rnd["step"], "ok": not errors, "errors": errors,
+                "seconds": time.monotonic() - rnd["t0"]}
+
+    def poll_persists(self) -> List[dict]:
+        """Non-blocking: completion records ({step, ok, errors, seconds})
+        of every REFT-Ckpt round whose members have all finished."""
+        for e in self.engines:
+            for rec in e.poll_persists():
+                self._persist_done[(e.node, rec["seq"])] = rec
+        out = []
+        keep = []
+        for rnd in self._persist_rounds:
+            folded = self._fold_round(rnd)
+            if folded is None:
+                keep.append(rnd)
+            else:
+                out.append(folded)
+        self._persist_rounds = keep
+        return out
+
+    def persist_inflight(self) -> int:
+        return len(self._persist_rounds)
+
+    def drain_persists(self, timeout: float = 120.0) -> List[dict]:
+        """Join every outstanding REFT-Ckpt round (oldest first) under one
+        shared deadline."""
+        deadline = time.monotonic() + timeout
+        out = self.poll_persists()
+        while self._persist_rounds:
+            rnd = self._persist_rounds[0]
+            for e, seq in rnd["parts"]:
+                if (e.node, seq) in self._persist_done:
+                    continue
+                if not e.has_persist_ticket(seq):   # collected or lost
+                    self._persist_done[(e.node, seq)] = {
+                        "seq": seq, "path": None, "step": rnd["step"],
+                        "seconds": 0.0, "error": "persist record lost"}
+                    continue
+                left = deadline - time.monotonic()
+                if left <= 0:
+                    raise TimeoutError(
+                        f"REFT-Ckpt round for step {rnd['step']} still in "
+                        f"flight after {timeout:.1f}s")
+                self._persist_done[(e.node, seq)] = e.persist_join(seq, left)
+            out += self.poll_persists()
+        return out
+
+    def checkpoint(self, timeout: float = 120.0) -> Optional[int]:
+        """Blocking REFT-Ckpt (fire + drain); raises when the fired
+        round's persists failed."""
+        step = self.checkpoint_async()
+        if step is None:
+            return None
+        rounds = self.drain_persists(timeout)
+        mine = next((r for r in rounds if r["step"] == step), None)
+        if mine is not None and not mine["ok"]:
+            raise RuntimeError(
+                f"REFT-Ckpt persist failed: {'; '.join(mine['errors'])}")
         return step
 
     # ---------------------------------------------------------- failure

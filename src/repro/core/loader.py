@@ -337,6 +337,8 @@ class LoadStats:
     wall_seconds: float = 0.0
     members: Tuple[int, ...] = ()  # members actually read
     crc_members: Tuple[int, ...] = ()  # members CRC-verified in-pass
+    probe_segments: int = 0        # per-stripe digests verified (partial
+                                   # plans: segments read, not whole shards)
     parallel_readers: int = 0
 
     def to_dict(self) -> dict:
@@ -449,28 +451,101 @@ def stream_crc(read: Callable[[int, int], np.ndarray], span: int,
     return crc
 
 
+def stripe_table(meta: dict) -> Optional[Tuple[int, List[int]]]:
+    """(segment_bytes, per-segment digests) from a snapshot meta, or None
+    when the snapshot predates per-stripe digests (legacy / serial
+    engine).  Segments are the member's local RAIM5 blocks (the whole own
+    region for n == 1), recorded by the SMP at publish time."""
+    table = meta.get("crc_stripes")
+    if not isinstance(table, dict):
+        return None
+    seg, crcs = table.get("seg"), table.get("crcs")
+    if not seg or not crcs:
+        return None
+    return int(seg), list(crcs)
+
+
+def has_stripe_digests(source, node: int) -> bool:
+    try:
+        return stripe_table(source.meta(node)) is not None
+    except Exception:
+        return False
+
+
+def plan_local_ranges(plan: LoadPlan) -> Dict[int, List[Tuple[int, int]]]:
+    """Per-member LOCAL own-region byte ranges the executor will read:
+    the plan's direct reads PLUS the stripe-sibling block sub-ranges
+    feeding the failed member's decode (parity inputs are covered
+    separately by `crc_parity`).  This is the footprint a per-stripe
+    digest probe must cover — and nothing more."""
+    out: Dict[int, List[Tuple[int, int]]] = {}
+    for node, reqs in plan.reads.items():
+        out.setdefault(node, []).extend(
+            (r.local_lo, r.local_hi) for r in reqs)
+    if plan.failed is not None and plan.decode:
+        bs = raim5.block_size(plan.total_bytes, plan.n)
+        for ref, subs in plan.decode:
+            for j in range(plan.n - 1):
+                if j == ref.index:
+                    continue
+                nd = raim5.node_of_block(ref.stripe, j, plan.n)
+                if nd == plan.failed:
+                    continue
+                base = raim5.local_block_index(nd, ref.stripe, j,
+                                               plan.n) * bs
+                out.setdefault(nd, []).extend(
+                    (base + o1, base + o2) for o1, o2 in subs)
+    return out
+
+
 def probe_crc(plan: LoadPlan, source, *,
               chunk_bytes: int = CHUNK_BYTES,
               workers: Optional[int] = None,
               skip: Optional[set] = None,
-              stats: Optional[LoadStats] = None) -> List[int]:
-    """Streamed own-region CRC probe of every member the plan reads —
-    including the stripe siblings and parity holders feeding a failed
-    member's decode (`plan.touched_members`), since corrupt decode
-    inputs would XOR into silently wrong reconstructed bytes.  This is
-    the partial-plan substitute for the folded in-pass check (`crc_own`
-    is a WHOLE-region digest, so a plan that reads only slices of a
-    member still has to stream its full shard to verify it; per-stripe
-    digests would lift this, see ROADMAP).  Returns the corrupt members;
-    probe traffic is counted into `stats`.  `skip` names members already
-    verified in a previous round (a demotion retry must not re-stream
-    their full shards)."""
+              stats: Optional[LoadStats] = None,
+              full_verified: Optional[set] = None) -> List[int]:
+    """CRC probe of every member the plan reads — including the stripe
+    siblings and parity holders feeding a failed member's decode
+    (`plan.touched_members`), since corrupt decode inputs would XOR into
+    silently wrong reconstructed bytes.
+
+    Members whose snapshot meta carries a per-stripe digest table verify
+    ONLY the stripe segments the plan actually touches (read + crc per
+    segment) — the whole point of publishing the table.  Members without
+    one (legacy / serial-engine snapshots) fall back to streaming the
+    full own region against the whole-region `crc_own`.  Returns the
+    corrupt members; probe traffic is counted into `stats`.  `skip` names
+    members already verified in a previous round (a demotion retry must
+    not re-stream their shards).  `full_verified` (a set, filled in
+    place) receives the members verified against the WHOLE-region digest
+    — the only ones a retry may safely skip, since a stripe probe covers
+    just the current plan's segments."""
     st = stats if stats is not None else LoadStats()
     bs = raim5.block_size(plan.total_bytes, plan.n) if plan.n > 1 else 0
     own_bytes = (plan.total_bytes if plan.n == 1 else (plan.n - 1) * bs)
     decode_stripes = {ref.stripe for ref, _ in plan.decode}
+    local = plan_local_ranges(plan)
     lock = threading.Lock()
     t0 = time.perf_counter()
+
+    def probe_segments(node: int, seg: int, crcs: List[int]) -> bool:
+        """Verify the touched segments of `node` against its table."""
+        idxs = sorted({i for lo, hi in local.get(node, ())
+                       for i in range(lo // seg,
+                                      (max(hi, lo + 1) - 1) // seg + 1)})
+        for i in idxs:
+            if i >= len(crcs):
+                return False               # malformed table: distrust
+            a, b = i * seg, min((i + 1) * seg, own_bytes)
+            crc = stream_crc(
+                lambda lo, hi, a=a: source.read_local(node, a + lo, a + hi),
+                b - a, chunk_bytes)
+            with lock:
+                st.bytes_read += b - a
+                st.probe_segments += 1
+            if (crc & 0xFFFFFFFF) != (crcs[i] & 0xFFFFFFFF):
+                return False
+        return True
 
     def probe(node: int) -> Optional[int]:
         try:
@@ -478,13 +553,21 @@ def probe_crc(plan: LoadPlan, source, *,
         except Exception:
             return node
         expect = meta.get("crc_own")
-        if expect is not None:
+        table = stripe_table(meta)
+        if table is not None:
+            seg, crcs = table
+            if not probe_segments(node, seg, crcs):
+                return node
+        elif expect is not None:
             crc = stream_crc(lambda lo, hi: source.read_local(node, lo, hi),
                              own_bytes, chunk_bytes)
             with lock:
                 st.bytes_read += own_bytes
             if (crc & 0xFFFFFFFF) != (expect & 0xFFFFFFFF):
                 return node
+            if full_verified is not None:
+                with lock:
+                    full_verified.add(node)
         if node in decode_stripes:           # its parity feeds the decode
             exp_p = meta.get("crc_parity")
             if exp_p is not None:
@@ -495,7 +578,7 @@ def probe_crc(plan: LoadPlan, source, *,
                     st.bytes_read += bs
                 if (crc & 0xFFFFFFFF) != (exp_p & 0xFFFFFFFF):
                     return node
-        if expect is None:                   # legacy snapshot: no digest
+        if table is None and expect is None:   # legacy: nothing to verify
             return None
         with lock:
             st.crc_members += (node,)
@@ -909,5 +992,6 @@ __all__ = [
     "ShmSource", "FileSource", "FlatSink", "LeafSink", "normalize_ranges",
     "build_plan", "execute_plan", "load_bytes", "load_tree",
     "need_for_leaves", "member_shard_need", "need_for_sharding",
-    "resolve_need",
+    "resolve_need", "stripe_table", "has_stripe_digests",
+    "plan_local_ranges", "probe_crc", "stream_crc",
 ]

@@ -642,10 +642,21 @@ class PipelineFlight:
             t0 = time.perf_counter()
             if crcs:
                 # device encode path: per-bucket digests -> one combined
-                # own-region CRC (dst order); the SMP skips its zlib pass
+                # own-region CRC plus the per-stripe table (one digest per
+                # local RAIM5 block; buckets never cross block boundaries,
+                # so grouping by dst // bs folds exactly); the SMP skips
+                # its zlib pass on both
                 crcs.sort()
                 crc_own = crc32_concat((c, nb) for _, nb, c in crcs)
-                self.smp.end(self.step, pickle.dumps(meta), crc_own=crc_own)
+                lay = self.smp.layout
+                seg = lay.bs if lay.n > 1 else lay.own_bytes
+                per_block: Dict[int, List[Tuple[int, int]]] = {}
+                for dst, nb, c in crcs:
+                    per_block.setdefault(dst // seg, []).append((c, nb))
+                stripes = [crc32_concat(per_block[k])
+                           for k in sorted(per_block)]
+                self.smp.end(self.step, pickle.dumps(meta), crc_own=crc_own,
+                             crc_stripes=stripes)
             else:
                 self.smp.end(self.step, pickle.dumps(meta), want_crc=True)
             clean = self.smp.wait_clean()

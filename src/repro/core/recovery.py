@@ -128,9 +128,13 @@ def _load_with_demotion(n: int, total_bytes: int, template: Any,
         plan = build_plan(n, total_bytes, need=need, failed=failed)
         src = source_of(usable)
         if need is not None:
-            bad = probe_crc(plan, src, stats=stats, skip=probed_ok)
-            probed_ok.update(set(plan.touched_members) - set(bad)
-                             - set(corrupt))
+            # only members verified against the WHOLE-region digest may be
+            # skipped on a demotion retry: a stripe-digest probe covered
+            # exactly the current plan's segments, and the re-plan's
+            # decode may touch new ones (re-probing those is cheap — that
+            # is the point of the table)
+            bad = probe_crc(plan, src, stats=stats, skip=probed_ok,
+                            full_verified=probed_ok)
             if bad:
                 corrupt.extend(bad)
                 continue

@@ -19,18 +19,21 @@ from __future__ import annotations
 
 import os
 import pickle
+import queue
 import struct
 import threading
 import time
 import zlib
+from collections import deque
 from dataclasses import dataclass
 from multiprocessing import get_context
 from multiprocessing.shared_memory import SharedMemory
-from typing import Optional
+from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
 from repro.core import raim5
+from repro.core.crcutil import crc32_concat
 
 _MP = get_context("spawn")
 
@@ -39,6 +42,7 @@ CTL_SLOTS = 2 + 2 * NBUF      # [magic, latest_clean_idx, (step,state)*NBUF]
 ST_FREE, ST_DIRTY, ST_CLEAN = 0, 1, 2
 MAGIC = 0x5EF7
 META_SLOT = 1 << 20           # per-buffer metadata slot (step-consistent)
+PERSIST_CHUNK_BYTES = 8 << 20  # REFT-Ckpt streamed-write granularity
 
 
 def _seg(run: str, node: int, what: str) -> str:
@@ -156,6 +160,56 @@ def _smp_main(conn, run: str, node: int, n: int, total_bytes: int,
     # instead of sleep-polling shm_open until the segments appear
     conn.send(("ready",))
 
+    # REFT-Ckpt runs on a background thread so the message loop keeps
+    # draining bucket/end traffic during the disk write + fsync.  A buffer
+    # being written carries a *persist pin*: `begin` never selects a
+    # pinned buffer as dirty, so the shard on its way to disk can never be
+    # re-dirtied mid-write.  The pin is taken HERE, in the message loop,
+    # before the job is queued — synchronous with begin/end, no race.
+    send_lock = threading.Lock()          # conn.send: loop thread + worker
+    pin_cond = threading.Condition()
+    # pin REFCOUNTS, not a set: two queued persists may select the SAME
+    # buffer (e.g. two rounds at one common step) — the pin must hold
+    # until the LAST job over that buffer finishes, or `begin` would
+    # re-dirty it under the still-queued second write
+    pinned: Dict[int, int] = {}
+    persist_q: "queue.Queue" = queue.Queue()
+
+    def _send(msg) -> None:
+        with send_lock:
+            conn.send(msg)
+
+    def _persist_worker():
+        while True:
+            job = persist_q.get()
+            if job is None:
+                return
+            seq, path, idx, step, delay_s = job
+            try:
+                if delay_s:                  # simulated slow durable tier
+                    time.sleep(delay_s)      # (tests / interference bench)
+                _persist_buffer(path, node, lay, idx, step, buf_np,
+                                meta_shm, seq)
+                reply = ("persisted", seq, path, step)
+            except Exception as e:
+                reply = ("persist-error", seq, repr(e))
+            finally:
+                with pin_cond:
+                    left = pinned.get(idx, 1) - 1
+                    if left <= 0:
+                        pinned.pop(idx, None)
+                    else:
+                        pinned[idx] = left
+                    pin_cond.notify_all()
+            try:
+                _send(reply)
+            except (BrokenPipeError, OSError):
+                pass                         # trainer gone; keep serving
+
+    worker = threading.Thread(target=_persist_worker, daemon=True,
+                              name=f"smp-persist-n{node}")
+    worker.start()
+
     dirty = -1
     try:
         while True:
@@ -163,11 +217,20 @@ def _smp_main(conn, run: str, node: int, n: int, total_bytes: int,
             op = msg[0]
             if op == "begin":
                 _, step = msg
-                # pick the oldest non-clean-latest buffer as dirty
+                # pick the oldest non-clean-latest, non-pinned buffer as
+                # dirty; with one persist in flight at least one candidate
+                # always exists (NBUF=3), but queued-up persists may pin
+                # more — then wait for a pin release, never overwrite
                 latest = int(ctl[1])
-                prev_steps = [(int(ctl[2 + 2 * i]), i) for i in range(NBUF)
-                              if i != latest]
-                dirty = min(prev_steps)[1]
+                with pin_cond:
+                    while True:
+                        cands = [(int(ctl[2 + 2 * i]), i)
+                                 for i in range(NBUF)
+                                 if i != latest and i not in pinned]
+                        if cands:
+                            break
+                        pin_cond.wait(0.1)
+                dirty = min(cands)[1]
                 ctl[2 + 2 * dirty] = step
                 ctl[3 + 2 * dirty] = ST_DIRTY
                 if lay.parity_bytes:
@@ -189,22 +252,38 @@ def _smp_main(conn, run: str, node: int, n: int, total_bytes: int,
                 _, step, meta_blob = msg[:3]
                 want_crc = bool(msg[3]) if len(msg) > 3 else False
                 crc_own = msg[4] if len(msg) > 4 else None
-                if crc_own is not None or want_crc or lay.parity_bytes:
+                crc_stripes = msg[5] if len(msg) > 5 else None
+                if (crc_own is not None or want_crc or lay.parity_bytes
+                        or crc_stripes):
                     meta = pickle.loads(meta_blob)
+                    seg = lay.bs if lay.n > 1 else lay.own_bytes
                     if crc_own is not None:
                         # device encode path: the CRC was computed bucket-
                         # wise on the accelerator and combined on the
                         # trainer side — the SMP's own-region zlib pass
-                        # drops to a meta rewrite
+                        # drops to a meta rewrite (the per-stripe table
+                        # arrives precombined the same way)
                         meta["crc_own"] = int(crc_own) & 0xFFFFFFFF
+                        if crc_stripes:
+                            meta["crc_stripes"] = {
+                                "seg": seg,
+                                "crcs": [int(c) & 0xFFFFFFFF
+                                         for c in crc_stripes]}
                     elif want_crc:
-                        # HASC L3: the own-region CRC is computed here,
-                        # inside the SMP, off every trainer-side critical
-                        # path.  One contiguous pass matches what the
-                        # restore loader's folded check recomputes (and
-                        # what the serial engine streamed).
-                        meta["crc_own"] = zlib.crc32(
-                            buf_np[dirty][:lay.own_bytes])
+                        # HASC L3: digests are computed here, inside the
+                        # SMP, off every trainer-side critical path — one
+                        # pass, segmented per RAIM5 block ("stripe"), so
+                        # PARTIAL restore plans can verify only the
+                        # stripes they read; the whole-region crc_own the
+                        # loader's folded full-plan check recomputes is
+                        # derived from the segments by GF(2) combine.
+                        crcs = [zlib.crc32(buf_np[dirty][a:a + seg])
+                                for a in range(0, lay.own_bytes, seg)]
+                        meta["crc_stripes"] = {"seg": seg, "crcs": crcs}
+                        meta["crc_own"] = crc32_concat(
+                            (c, min(seg, lay.own_bytes - a))
+                            for c, a in zip(crcs,
+                                            range(0, lay.own_bytes, seg)))
                     if lay.parity_bytes:
                         # parity carries no digest in the bucket stream;
                         # checksum it at publish (still off the trainer's
@@ -222,17 +301,38 @@ def _smp_main(conn, run: str, node: int, n: int, total_bytes: int,
                 ctl[3 + 2 * dirty] = ST_CLEAN
                 ctl[1] = dirty                     # atomic-enough publish
                 dirty = -1
-                conn.send(("clean", step))
+                _send(("clean", step))
             elif op == "persist":
-                _, path, want_step = msg
-                try:
-                    _persist(path, run, node, lay, ctl, buf_np, meta_shm,
-                             want_step)
-                    conn.send(("persisted", path))
-                except Exception as e:   # keep serving snapshots regardless
-                    conn.send(("persist-error", repr(e)))
+                # select + pin the buffer synchronously (no begin/end can
+                # interleave), then hand the write to the worker — the
+                # loop goes straight back to draining buckets while the
+                # shard streams to disk
+                _, seq, path, want_step, delay_s = msg
+                latest = int(ctl[1])
+                err = None
+                if latest < 0:
+                    err = "no clean snapshot to persist"
+                idx = latest
+                if err is None and want_step is not None:
+                    # SG-consistent checkpoint: every member persists the
+                    # SAME step
+                    for i in range(NBUF):
+                        if (int(ctl[3 + 2 * i]) == ST_CLEAN
+                                and int(ctl[2 + 2 * i]) == want_step):
+                            idx = i
+                            break
+                    else:
+                        err = (f"step {want_step} no longer clean on "
+                               f"node {node}")
+                if err is not None:
+                    _send(("persist-error", seq, err))
+                else:
+                    with pin_cond:
+                        pinned[idx] = pinned.get(idx, 0) + 1
+                    persist_q.put((seq, path, idx, int(ctl[2 + 2 * idx]),
+                                   delay_s))
             elif op == "ping":
-                conn.send(("pong", time.time()))
+                _send(("pong", time.time()))
             elif op == "stop":
                 break
     except (EOFError, KeyboardInterrupt):
@@ -245,6 +345,10 @@ def _smp_main(conn, run: str, node: int, n: int, total_bytes: int,
         except KeyboardInterrupt:
             pass
     finally:
+        # drain queued persists before dropping the segments (a durable
+        # write already accepted must not be torn by a clean stop)
+        persist_q.put(None)
+        worker.join(timeout=60)
         import gc
         del stage_np, buf_np, ctl
         gc.collect()
@@ -255,33 +359,53 @@ def _smp_main(conn, run: str, node: int, n: int, total_bytes: int,
                 pass
 
 
-def _persist(path, run, node, lay, ctl, buf_np, meta_shm, want_step=None):
-    latest = int(ctl[1])
-    if latest < 0:
-        raise RuntimeError("no clean snapshot to persist")
-    if want_step is not None:
-        # SG-consistent checkpoint: every member persists the SAME step
-        for i in range(NBUF):
-            if (int(ctl[3 + 2 * i]) == ST_CLEAN
-                    and int(ctl[2 + 2 * i]) == want_step):
-                latest = i
-                break
-        else:
-            raise RuntimeError(
-                f"step {want_step} no longer clean on node {node}")
-    step = int(ctl[2 + 2 * latest])
-    base = latest * META_SLOT
+def _tmp_name(path: str, tag) -> str:
+    """Unique scratch name per (process, persist seq): two persists
+    targeting the same path — or a new persist racing a dead SMP's
+    leftover — can never collide on one `.tmp`."""
+    return f"{path}.{os.getpid()}.{tag}.tmp"
+
+
+def _stream_write(f, arr: np.ndarray,
+                  chunk_bytes: int = PERSIST_CHUNK_BYTES) -> int:
+    """Write `arr` (a uint8 view over the snapshot buffer) in fixed
+    chunks.  The old `arr.tobytes()` materialized a full second copy of
+    the shard — doubling RSS exactly while a snapshot may be staging."""
+    nb = arr.nbytes
+    for off in range(0, nb, chunk_bytes):
+        f.write(memoryview(arr[off:off + chunk_bytes]))
+    return nb
+
+
+def _persist_buffer(path, node, lay, idx, step, buf_np, meta_shm, tag):
+    """Stream buffer `idx` (already persist-pinned by the caller) to
+    `path` atomically.  The scratch file is unlinked on ANY failure —
+    write or fsync errors no longer leak `.tmp` files into the family
+    directory."""
+    base = idx * META_SLOT
     mlen = struct.unpack("<q", bytes(meta_shm.buf[base:base + 8]))[0]
     meta = bytes(meta_shm.buf[base + 8:base + 8 + mlen])
-    tmp = path + ".tmp"
-    with open(tmp, "wb") as f:
-        head = {"node": node, "n": lay.n, "total_bytes": lay.total_bytes,
-                "step": step, "meta": meta}
-        pickle.dump(head, f)
-        f.write(buf_np[latest].tobytes())
-        f.flush()
-        os.fsync(f.fileno())
-    os.replace(tmp, path)
+    crc_stripes = None
+    try:                      # surface the digest table in the file head
+        crc_stripes = pickle.loads(meta).get("crc_stripes")
+    except Exception:
+        pass
+    tmp = _tmp_name(path, tag)
+    try:
+        with open(tmp, "wb") as f:
+            head = {"node": node, "n": lay.n,
+                    "total_bytes": lay.total_bytes, "step": step,
+                    "meta": meta, "crc_stripes": crc_stripes}
+            pickle.dump(head, f)
+            _stream_write(f, buf_np[idx])
+            f.flush()
+            os.fsync(f.fileno())
+        os.replace(tmp, path)
+    finally:
+        try:
+            os.unlink(tmp)                 # no-op after a clean replace
+        except FileNotFoundError:
+            pass
 
 
 # ---------------------------------------------------------------- handles
@@ -307,6 +431,20 @@ class SMPHandle:
         child.close()
         self._stage = None
         self._slot = 0
+        # Demultiplexed pipe protocol: persists complete asynchronously in
+        # the SMP, so ("persisted"/"persist-error", seq, ...) replies can
+        # interleave with ("clean", ...) and ("pong", ...) at any time.
+        # Every receive routes messages to per-kind queues under one lock
+        # (`_await`); sends take `_tx_lock` (the stager thread and an
+        # async persist may hit the pipe concurrently).
+        self._tx_lock = threading.Lock()
+        self._rx_lock = threading.Lock()
+        self._rx_clean: deque = deque()
+        self._rx_pong: deque = deque()
+        self._rx_persist: Dict[int, tuple] = {}
+        self._stale_persists: set = set()      # timed-out seqs: drop late
+        self._pending_persists: List[int] = []  # fire order
+        self._persist_seq = 0
         self._wait_ready()
 
     def _wait_ready(self, timeout=90.0):
@@ -331,9 +469,55 @@ class SMPHandle:
             (self.stage_slots, self.bucket_bytes), np.uint8,
             self._stage.buf)
 
+    # -- demultiplexed receive ---------------------------------------------
+    def _dispatch(self, msg) -> None:
+        """Route one SMP message to its queue (callers hold _rx_lock)."""
+        tag = msg[0]
+        if tag == "clean":
+            self._rx_clean.append(msg)
+        elif tag == "pong":
+            self._rx_pong.append(msg)
+        elif tag in ("persisted", "persist-error"):
+            seq = msg[1]
+            if seq in self._stale_persists:
+                # late reply of a timed-out persist: discard instead of
+                # letting the next clean/pong recv consume it (the
+                # protocol-desync bug this demux exists to fix)
+                self._stale_persists.discard(seq)
+                return
+            self._rx_persist[seq] = msg
+        # unknown tags are dropped defensively
+
+    def _await(self, have, timeout: float, what: str):
+        """Poll/recv under the rx lock, dispatching every message to its
+        queue, until `have()` yields a value or `timeout` passes.  Any
+        thread may be the reader; messages meant for other waiters are
+        queued for them, never consumed by the wrong protocol exchange."""
+        deadline = time.monotonic() + timeout
+        while True:
+            with self._rx_lock:
+                got = have()
+                if got is not None:
+                    return got
+                if self._conn.poll(0.05):
+                    self._dispatch(self._conn.recv())
+                    continue
+            if time.monotonic() >= deadline:
+                raise TimeoutError(what)
+
+    def _drain_rx(self) -> None:
+        """Non-blocking: route everything currently in the pipe."""
+        with self._rx_lock:
+            while self._conn.poll(0):
+                self._dispatch(self._conn.recv())
+
+    def _send(self, msg) -> None:
+        with self._tx_lock:
+            self._conn.send(msg)
+
     # -- snapshot protocol -------------------------------------------------
     def begin(self, step: int):
-        self._conn.send(("begin", int(step)))
+        self._send(("begin", int(step)))
 
     def send_bucket(self, kind: int, dst: int, payload: np.ndarray):
         # ring-slot credit: the cross-process BoundedSemaphore the SMP
@@ -351,49 +535,107 @@ class SMPHandle:
         self._slot = (self._slot + 1) % self.stage_slots
         nb = payload.nbytes
         self._stage_np[slot, :nb] = payload.reshape(-1).view(np.uint8)
-        self._conn.send(("bucket", slot, kind, int(dst), nb))
+        self._send(("bucket", slot, kind, int(dst), nb))
 
     def end(self, step: int, meta_blob: bytes, want_crc: bool = False,
-            crc_own: Optional[int] = None) -> None:
-        """`want_crc=True` asks the SMP to compute the own-region CRC into
-        the snapshot meta at publish time (off the trainer's hot path);
-        `crc_own` hands over a precomputed digest (device encode path) so
-        the SMP skips its zlib pass entirely."""
-        self._conn.send(("end", int(step), meta_blob, bool(want_crc),
-                         None if crc_own is None else int(crc_own)))
+            crc_own: Optional[int] = None,
+            crc_stripes: Optional[List[int]] = None) -> None:
+        """`want_crc=True` asks the SMP to compute the own-region digests
+        (whole-region + per-stripe table) into the snapshot meta at
+        publish time (off the trainer's hot path); `crc_own`/`crc_stripes`
+        hand over precomputed digests (device encode path) so the SMP
+        skips its zlib pass entirely."""
+        self._send(("end", int(step), meta_blob, bool(want_crc),
+                    None if crc_own is None else int(crc_own),
+                    None if crc_stripes is None else
+                    [int(c) for c in crc_stripes]))
 
     def wait_clean(self, timeout=60.0) -> int:
-        if not self._conn.poll(timeout):
-            raise TimeoutError("SMP ack timeout")
-        tag, step = self._conn.recv()
-        assert tag == "clean", tag
-        return step
+        msg = self._await(
+            lambda: self._rx_clean.popleft() if self._rx_clean else None,
+            timeout, "SMP ack timeout")
+        return msg[1]
 
-    def persist_send(self, path: str, step: Optional[int] = None) -> None:
-        """Fire the persist request without waiting (SMPs of an SG can
-        then write their shards concurrently)."""
-        self._conn.send(("persist", path, step))
+    def ping(self, timeout=10.0) -> float:
+        self._send(("ping",))
+        msg = self._await(
+            lambda: self._rx_pong.popleft() if self._rx_pong else None,
+            timeout, "SMP ping timeout")
+        return msg[1]
 
-    def persist_wait(self, timeout=120.0) -> str:
-        if not self._conn.poll(timeout):
-            raise TimeoutError("persist timeout")
-        tag, p = self._conn.recv()
-        if tag == "persist-error":
-            raise RuntimeError(f"SMP persist failed: {p}")
-        assert tag == "persisted", tag
-        return p
+    # -- REFT-Ckpt persist protocol ----------------------------------------
+    def persist_send(self, path: str, step: Optional[int] = None,
+                     delay_s: float = 0.0) -> int:
+        """Fire a persist request; returns its sequence id (the ticket
+        `persist_wait`/`persist_poll` take).  The SMP services it on a
+        background thread, so snapshots keep flowing while the shard
+        streams to disk.  `delay_s` simulates a slow durable tier (tests
+        and the interference benchmark)."""
+        with self._rx_lock:
+            self._persist_seq += 1
+            seq = self._persist_seq
+            self._pending_persists.append(seq)
+        self._send(("persist", seq, path, step,
+                    float(delay_s) if delay_s else 0.0))
+        return seq
+
+    def _take_persist(self, seq: int):
+        msg = self._rx_persist.pop(seq, None)
+        if msg is not None and seq in self._pending_persists:
+            self._pending_persists.remove(seq)
+        return msg
+
+    def persist_result(self, seq: Optional[int] = None,
+                       timeout: float = 120.0) -> tuple:
+        """Blocking: the raw ("persisted", seq, path, step) or
+        ("persist-error", seq, err) reply for `seq` (default: the oldest
+        outstanding).  On timeout the seq is marked stale, so its late
+        reply is discarded instead of desyncing the next clean/pong
+        exchange."""
+        if seq is None:
+            with self._rx_lock:
+                if not self._pending_persists:
+                    raise RuntimeError("no persist in flight")
+                seq = self._pending_persists[0]
+        try:
+            return self._await(lambda: self._take_persist(seq),
+                               timeout, "persist timeout")
+        except TimeoutError:
+            with self._rx_lock:
+                msg = self._take_persist(seq)   # landed since last check?
+                if msg is None:
+                    self._stale_persists.add(seq)
+                    if seq in self._pending_persists:
+                        self._pending_persists.remove(seq)
+                    raise
+            return msg
+
+    def persist_wait(self, seq: Optional[int] = None,
+                     timeout: float = 120.0) -> str:
+        msg = self.persist_result(seq, timeout)
+        if msg[0] == "persist-error":
+            raise RuntimeError(f"SMP persist failed: {msg[2]}")
+        return msg[2]
+
+    def persist_poll(self, seq: int) -> Optional[tuple]:
+        """Non-blocking: the reply for `seq` if it has arrived (draining
+        the pipe on the way), else None."""
+        with self._rx_lock:
+            while self._conn.poll(0):
+                self._dispatch(self._conn.recv())
+            return self._take_persist(seq)
 
     def persist(self, path: str, timeout=120.0, step: Optional[int] = None
                 ) -> str:
-        self.persist_send(path, step)
-        return self.persist_wait(timeout)
+        seq = self.persist_send(path, step)
+        return self.persist_wait(seq, timeout)
 
     def alive(self) -> bool:
         return self.proc.is_alive()
 
     def stop(self):
         try:
-            self._conn.send(("stop",))
+            self._send(("stop",))
         except (BrokenPipeError, OSError):
             pass
         self.proc.join(timeout=5)

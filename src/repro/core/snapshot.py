@@ -61,6 +61,9 @@ class ReftConfig:
                                      # snapshot N's L2/L3 drain
     pin_cpus: Any = "auto"           # saving-path CPU set for the L2
                                      # stager + SMP: "auto" | "off" | ids
+    # --- async REFT-Ckpt persistence (docs/API.md "Async persistence") ---
+    persist_delay_s: float = 0.0     # simulated durable-tier latency per
+                                     # persist (tests / interference bench)
 
 
 class SnapshotEngine:
@@ -95,10 +98,15 @@ class SnapshotEngine:
         self._err: Optional[BaseException] = None
         self.degraded = False      # SMP unreachable: snapshots paused, not fatal
         self.last_clean_step = -1
+        self._persists: Dict[int, dict] = {}    # seq -> in-flight record
         self.stats = {"snapshots": 0, "bytes_sent": 0, "seconds": 0.0,
                       "l1_seconds": 0.0, "l1_stall_seconds": 0.0,
                       "l2_seconds": 0.0, "l3_seconds": 0.0,
                       "overlapped_flights": 0,
+                      "persists": 0, "persist_inflight": 0,
+                      "persist_seconds": 0.0,
+                      "persist_overlap_seconds": 0.0,
+                      "persist_errors": 0,
                       "device_encode": (self._pipeline.device_encode
                                         if self._pipeline else False),
                       "stager_affinity": None}
@@ -307,15 +315,114 @@ class SnapshotEngine:
             self._err = e
 
     # ------------------------------------------------------------ ckpt
-    def persist(self, path: str, step: Optional[int] = None) -> str:
-        """REFT-Ckpt: SMP writes its clean shard+parity to disk without
-        touching the training process (a specific clean step if given)."""
-        return self.smp.persist(path, step=step)
+    def persist_async(self, path: str, step: Optional[int] = None) -> int:
+        """REFT-Ckpt, overlapped: fire the persist and return a ticket
+        (the SMP streams the pinned shard to disk on its own background
+        thread while snapshots keep flowing).  Collect with
+        `poll_persists` / `persist_join` / `persist_wait_all`."""
+        seq = self.smp.persist_send(
+            path, step, delay_s=getattr(self.cfg, "persist_delay_s", 0.0))
+        self._persists[seq] = {"path": path, "step": step,
+                               "t0": time.monotonic(), "blocked": 0.0}
+        self.stats["persist_inflight"] = len(self._persists)
+        return seq
+
+    def _finish_persist(self, seq: int, msg) -> dict:
+        rec = self._persists.pop(seq)
+        dt = time.monotonic() - rec["t0"]
+        st = self.stats
+        st["persist_inflight"] = len(self._persists)
+        st["persists"] += 1
+        st["persist_seconds"] += dt
+        # the share of the persist's lifetime nobody spent blocked on it
+        # — the paper's "durable tier off the training path" in seconds
+        st["persist_overlap_seconds"] += max(0.0, dt - rec["blocked"])
+        out = {"seq": seq, "path": rec["path"], "step": rec["step"],
+               "seconds": dt, "error": None}
+        if msg[0] == "persist-error":
+            st["persist_errors"] += 1
+            out["error"] = msg[2]
+        else:
+            out["path"], out["step"] = msg[2], msg[3]
+        return out
+
+    def _lost_persist(self, seq: int, why: str) -> dict:
+        """SMP died under an in-flight persist: degrade (snapshots pause,
+        training continues) and surface the loss as an error record."""
+        self.degraded = True
+        rec = self._persists.pop(seq)
+        self.stats["persist_inflight"] = len(self._persists)
+        self.stats["persist_errors"] += 1
+        return {"seq": seq, "path": rec["path"], "step": rec["step"],
+                "seconds": time.monotonic() - rec["t0"], "error": why}
+
+    def has_persist_ticket(self, seq: int) -> bool:
+        """True while ticket `seq` is outstanding (fired, not yet
+        collected by poll/join) — the group's drain liveness check."""
+        return seq in self._persists
+
+    def poll_persists(self) -> List[dict]:
+        """Non-blocking: completion records of every finished persist
+        ({seq, path, step, seconds, error})."""
+        done = []
+        for seq in sorted(self._persists):
+            try:
+                msg = self.smp.persist_poll(seq)
+            except (EOFError, BrokenPipeError, ConnectionError, OSError):
+                done.append(self._lost_persist(seq, "SMP lost mid-persist"))
+                continue
+            if msg is not None:
+                done.append(self._finish_persist(seq, msg))
+        return done
+
+    def persist_join(self, seq: int, timeout: float = 120.0) -> dict:
+        """Block until ticket `seq` completes; returns its record (an
+        `error` entry instead of raising — callers decide policy)."""
+        rec = self._persists[seq]
+        t0 = time.monotonic()
+        try:
+            msg = self.smp.persist_result(seq, timeout)
+        except TimeoutError:
+            rec["blocked"] += time.monotonic() - t0
+            # the handle marked the seq stale (its late reply will be
+            # discarded), so this ticket can never complete: drop it
+            self._persists.pop(seq, None)
+            self.stats["persist_inflight"] = len(self._persists)
+            self.stats["persist_errors"] += 1
+            raise
+        except (EOFError, BrokenPipeError, ConnectionError, OSError):
+            return self._lost_persist(seq, "SMP lost mid-persist")
+        rec["blocked"] += time.monotonic() - t0
+        return self._finish_persist(seq, msg)
+
+    def persist_wait_all(self, timeout: float = 120.0) -> List[dict]:
+        """Join every outstanding persist (oldest first)."""
+        deadline = time.monotonic() + timeout
+        out = []
+        for seq in sorted(self._persists):
+            out.append(self.persist_join(
+                seq, max(0.01, deadline - time.monotonic())))
+        return out
+
+    def persist(self, path: str, step: Optional[int] = None,
+                timeout: float = 120.0) -> str:
+        """REFT-Ckpt, blocking: SMP writes its clean shard+parity to disk
+        without touching the training process (a specific clean step if
+        given); raises on persist failure."""
+        rec = self.persist_join(self.persist_async(path, step), timeout)
+        if rec["error"]:
+            raise RuntimeError(f"SMP persist failed: {rec['error']}")
+        return rec["path"]
 
     def close(self):
         try:
             if self.in_flight():
                 self.wait(timeout=30)
+        except Exception:
+            pass
+        try:
+            if self._persists:            # never strand a durable write
+                self.persist_wait_all(timeout=30)
         except Exception:
             pass
         self.smp.stop()

@@ -58,6 +58,9 @@ def main(argv=None):
                     help="restore-on-entry from ckpt-dir if possible")
     ap.add_argument("--auto-tune", action="store_true",
                     help="Appendix-A adaptive snapshot cadence")
+    ap.add_argument("--blocking-persist", action="store_true",
+                    help="run cadence persists inline (the pre-overlap "
+                         "behavior) instead of fire-and-poll")
     ap.add_argument("--inject", action="append", default=[],
                     help="step:kind  (kind: software|node)")
     ap.add_argument("--no-reft", action="store_true",
@@ -105,6 +108,7 @@ def main(argv=None):
         checkpoint_every_steps=args.ckpt_every,
         resume=args.resume,
         auto_tune=args.auto_tune,
+        options={"persist_blocking": True} if args.blocking_persist else {},
     )
 
     losses = []
@@ -145,7 +149,7 @@ def main(argv=None):
                 print(f"  step {step:5d} loss {losses[-1]:.4f} "
                       f"({(time.time()-t0)/max(step,1):.2f}s/step)",
                       flush=True)
-        sess.wait()
+        sess.drain()               # join async persists + collect events
         st = sess.stats()
         # engine-side timing when the backend exposes it (async launches
         # make the trainer-side snapshot_seconds near-zero by design)
@@ -153,6 +157,8 @@ def main(argv=None):
         secs = st.get("engine_seconds", st.get("snapshot_seconds", 0.0))
         print(f"[{args.backend}] snapshots={snaps} "
               f"persists={st.get('persist', 0)} "
+              f"persist_inflight={st.get('persist_inflight', 0)} "
+              f"persist_overlap_s={st.get('persist_overlap_seconds', 0.0):.3f} "
               f"restores={st.get('restore', 0)} "
               f"avg_snapshot_s={secs/max(snaps, 1):.3f} "
               f"degraded={sess.degraded}")

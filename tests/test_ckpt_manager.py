@@ -63,6 +63,31 @@ def test_torn_new_families_no_longer_leak(tmp_path):
     assert set(scan_shards(d)) == {4, 5, 7}
 
 
+def test_inflight_persists_are_gc_exempt(tmp_path):
+    """Async persists register their step before any shard lands: the
+    growing (torn) families must survive every commit until resolved —
+    even when several are in the air at once (the newest-torn spare
+    alone would sacrifice all but one)."""
+    d = str(tmp_path)
+    m = CheckpointManager(d, 2, keep=1)
+    for n in range(2):
+        _touch(d, 5, n)
+    m.register_inflight(6)
+    m.register_inflight(7)
+    _touch(d, 6, 0)                  # both in-flight families are torn
+    _touch(d, 7, 0)
+    m.commit()
+    assert set(scan_shards(d)) == {5, 6, 7}
+    assert m.latest() == 5           # a registered step is never reported
+    _touch(d, 6, 1)                  # family 6 completes...
+    m.resolve_inflight(6)
+    _touch(d, 7, 1)
+    m.resolve_inflight(7)
+    m.commit()                       # ...and normal keep-1 retention resumes
+    assert set(scan_shards(d)) == {7}
+    assert m.latest() == 7
+
+
 def test_integration_with_reft_group(tmp_path):
     import jax.numpy as jnp
     from repro.core import ReftConfig, ReftGroup

@@ -447,15 +447,38 @@ def test_tier3_corrupt_shard_demoted_and_decoded(tmp_path):
                                             stats=st)
     assert step == 4 and trees_equal(tree, state)
     assert st.decoded_bytes > 0              # node 2 rebuilt from parity
-    # PARTIAL plans verify via the streamed probe (the fold needs full
-    # coverage): the same corruption must be caught and decoded around
+    # PARTIAL plans verify via per-stripe digests now: corruption in a
+    # stripe the plan does not read is neither paid for nor decoded
+    # around (the restored bytes never touch it), while corruption
+    # INSIDE a read stripe is caught and decoded around
     spec_f = make_flat_spec(template)
+    need = need_for_leaves(spec_f, ("w",))
     st2 = LoadStats()
-    tree2, _, _ = restore_from_checkpoint(
-        str(tmp_path), 4, template,
-        need=need_for_leaves(spec_f, ("w",)), stats=st2)
+    tree2, _, _ = restore_from_checkpoint(str(tmp_path), 4, template,
+                                          need=need, stats=st2)
     assert trees_equal(tree2["params"]["w"], state["params"]["w"])
-    assert st2.decoded_bytes > 0
+    assert st2.probe_segments > 0            # stripe table used
+    assert st2.decoded_bytes == 0            # byte 100 is outside the plan
+    # now corrupt a byte the plan DOES read (any member of its footprint);
+    # heal node 2 first so exactly ONE member is corrupt (RAIM5 budget)
+    blob = bytearray(open(path, "rb").read())
+    blob[data_off + 100] ^= 0xFF
+    open(path, "wb").write(bytes(blob))
+    from repro.core.loader import build_plan, plan_local_ranges
+    plan = build_plan(4, spec_f.total_bytes, need=need)
+    nd, ranges = sorted(plan_local_ranges(plan).items())[0]
+    path_nd = os.path.join(str(tmp_path), f"step-4-node-{nd}.reft")
+    with open(path_nd, "rb") as f:
+        pickle.load(f)
+        off_nd = f.tell()
+    blob = bytearray(open(path_nd, "rb").read())
+    blob[off_nd + ranges[0][0] + 8] ^= 0xFF
+    open(path_nd, "wb").write(bytes(blob))
+    st3 = LoadStats()
+    tree3, _, _ = restore_from_checkpoint(str(tmp_path), 4, template,
+                                          need=need, stats=st3)
+    assert trees_equal(tree3["params"]["w"], state["params"]["w"])
+    assert st3.decoded_bytes > 0             # member rebuilt from parity
 
 
 # ------------------------------------------------ filename parsing (regex)

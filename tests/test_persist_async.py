@@ -1,0 +1,435 @@
+"""Async overlapped REFT-Ckpt persistence: SMP buffer pinning, the
+seq-tagged persist protocol (no desync after a timed-out wait), streamed
+tmp-safe shard writes, per-stripe digest verification, and the
+facade/session ticket surface."""
+import os
+import pickle
+import tempfile
+import time
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import ReftConfig, ReftGroup
+from repro.core.loader import (
+    FileSource, LoadStats, ShmSource, build_plan, probe_crc, stripe_table,
+)
+from repro.core.recovery import (
+    attach_survivors, restore_from_checkpoint,
+)
+from repro.core.smp import PERSIST_CHUNK_BYTES, ReadOnlyNode, _stream_write, \
+    _tmp_name
+from repro.core.snapshot import SnapshotEngine
+
+
+def small_state(seed=0):
+    k = jax.random.PRNGKey(seed)
+    return {
+        "params": {"w": jax.random.normal(k, (64, 32)),
+                   "b": jnp.ones((17,), jnp.bfloat16)},
+        "opt": {"mu": jnp.zeros((64, 32))},
+    }
+
+
+def trees_equal(a, b):
+    return all(np.array_equal(np.asarray(x), np.asarray(y))
+               for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)))
+
+
+def bump(state, k):
+    return jax.tree.map(lambda x: x + k, state)
+
+
+# ------------------------------------------------------------- unit level
+def test_stream_write_is_chunked_and_byte_identical():
+    """The RSS-doubling `.tobytes()` is gone: the shard streams to disk
+    in fixed chunks, never materializing a second full copy."""
+    class Rec:
+        def __init__(self):
+            self.sizes = []
+            self.blob = b""
+
+        def write(self, b):
+            mv = memoryview(b)
+            self.sizes.append(mv.nbytes)
+            self.blob += mv.tobytes()
+
+    arr = np.arange(1000, dtype=np.uint8)
+    f = Rec()
+    n = _stream_write(f, arr, chunk_bytes=64)
+    assert n == 1000
+    assert max(f.sizes) <= 64 and len(f.sizes) == 16
+    assert f.blob == arr.tobytes()
+    assert PERSIST_CHUNK_BYTES >= 1 << 20       # sane default granularity
+
+
+def test_tmp_names_are_unique_per_seq():
+    """Two persists targeting the same path never collide on one tmp."""
+    a = _tmp_name("/x/step-1-node-0.reft", 1)
+    b = _tmp_name("/x/step-1-node-0.reft", 2)
+    assert a != b and a.endswith(".tmp") and str(os.getpid()) in a
+
+
+# ------------------------------------------------------ protocol + pinning
+def test_persist_wait_timeout_does_not_desync_protocol(tmp_path):
+    """Regression: a timed-out persist_wait used to leave the late
+    ("persisted", ...) reply in the pipe, where the next recv expecting
+    ("clean", step) or ("pong", ...) consumed it.  With seq tagging the
+    stale reply is discarded and every later exchange stays aligned."""
+    state = small_state()
+    eng = SnapshotEngine(0, 1, state, ReftConfig(bucket_bytes=4096))
+    try:
+        eng.snapshot_sync(state, 1)
+        path = str(tmp_path / "slow.reft")
+        seq = eng.smp.persist_send(path, delay_s=0.8)
+        with pytest.raises(TimeoutError):
+            eng.smp.persist_wait(seq, timeout=0.05)
+        # the very exchanges the stale reply used to corrupt:
+        assert eng.snapshot_sync(bump(state, 1), 2) == 2
+        assert eng.smp.ping() > 0
+        assert eng.snapshot_sync(bump(state, 2), 3) == 3
+        # a second persist completes with ITS OWN reply, not the stale one
+        path2 = str(tmp_path / "fast.reft")
+        assert eng.smp.persist(path2, step=3) == path2
+        deadline = time.monotonic() + 10
+        while not os.path.exists(path):          # abandoned one still lands
+            assert time.monotonic() < deadline
+            time.sleep(0.02)
+        assert not eng.degraded
+    finally:
+        eng.close()
+
+
+def test_smp_drains_snapshots_during_persist_and_pin_is_immutable(tmp_path):
+    """Tentpole semantics: with the persist on the SMP's background
+    thread, bucket/end traffic keeps flowing during the write, and the
+    pinned buffer is never selected as dirty — the bytes that land on
+    disk are exactly the bytes of the pinned step, byte for byte, even
+    though later snapshots rotated every other buffer."""
+    state = small_state(1)
+    eng = SnapshotEngine(0, 1, state, ReftConfig(bucket_bytes=4096))
+    try:
+        eng.snapshot_sync(state, 1)
+        total = eng.spec.total_bytes
+        view = ReadOnlyNode(eng.run, 0, 1, total)
+        oracle = view.read_range(1, 0, eng.layout.buf_bytes).tobytes()
+        view.close()
+
+        path = str(tmp_path / "pinned.reft")
+        seq = eng.smp.persist_send(path, step=1, delay_s=1.0)
+        t0 = time.perf_counter()
+        assert eng.snapshot_sync(bump(state, 1), 2) == 2
+        assert eng.snapshot_sync(bump(state, 2), 3) == 3
+        snap_secs = time.perf_counter() - t0
+        # both snapshots completed while the persist was still sleeping
+        assert snap_secs < 0.9, snap_secs
+        assert eng.smp.persist_poll(seq) is None      # genuinely in flight
+        assert eng.smp.persist_wait(seq, timeout=30) == path
+
+        with open(path, "rb") as f:
+            head = pickle.load(f)
+            payload = f.read()
+        assert head["step"] == 1
+        assert payload == oracle, "pinned buffer was re-dirtied mid-write"
+    finally:
+        eng.close()
+
+
+def test_two_queued_persists_of_one_buffer_hold_the_pin(tmp_path):
+    """The pin is a REFCOUNT: when two persists select the same buffer,
+    the first finishing must not release it under the still-queued
+    second — both files must carry the pinned step's exact bytes even
+    while later snapshots rotate every other buffer."""
+    state = small_state(11)
+    eng = SnapshotEngine(0, 1, state, ReftConfig(bucket_bytes=4096))
+    try:
+        eng.snapshot_sync(state, 1)
+        view = ReadOnlyNode(eng.run, 0, 1, eng.spec.total_bytes)
+        oracle = view.read_range(1, 0, eng.layout.buf_bytes).tobytes()
+        view.close()
+        p1 = str(tmp_path / "a.reft")
+        p2 = str(tmp_path / "b.reft")
+        s1 = eng.smp.persist_send(p1, step=1, delay_s=0.4)
+        s2 = eng.smp.persist_send(p2, step=1, delay_s=0.4)
+        for k in (2, 3, 4):                    # rotate buffers hard
+            eng.snapshot_sync(bump(state, k), k)
+        assert eng.smp.persist_wait(s1, timeout=30) == p1
+        for k in (5, 6):                       # job 2 still holds the pin
+            eng.snapshot_sync(bump(state, k), k)
+        assert eng.smp.persist_wait(s2, timeout=30) == p2
+        for p in (p1, p2):
+            with open(p, "rb") as f:
+                head = pickle.load(f)
+                payload = f.read()
+            assert head["step"] == 1 and payload == oracle, p
+    finally:
+        eng.close()
+
+
+def test_persist_failure_unlinks_tmp_and_does_not_wedge(tmp_path):
+    """An injected replace failure (the target path is a directory, the
+    same failure class as ENOSPC after the write) must leave NO stray
+    .tmp behind, surface as an error, and leave the engine fully
+    functional (persist errors demote the round, not the engine)."""
+    state = small_state(2)
+    eng = SnapshotEngine(0, 1, state, ReftConfig(bucket_bytes=4096))
+    try:
+        eng.snapshot_sync(state, 1)
+        bad = str(tmp_path / "step-1-node-0.reft")
+        os.makedirs(bad)                      # os.replace(file, dir) fails
+        with pytest.raises(RuntimeError, match="persist failed"):
+            eng.persist(bad, step=1)
+        leftovers = [f for f in os.listdir(tmp_path) if ".tmp" in f]
+        assert leftovers == [], leftovers
+        assert eng.stats["persist_errors"] == 1
+        assert not eng.degraded
+        # engine keeps snapshotting AND persisting after the failure
+        assert eng.snapshot_sync(bump(state, 1), 2) == 2
+        good = str(tmp_path / "ok.reft")
+        assert eng.persist(good, step=2) == good
+    finally:
+        eng.close()
+
+
+def test_engine_ticket_stats(tmp_path):
+    state = small_state(3)
+    eng = SnapshotEngine(0, 1, state,
+                         ReftConfig(bucket_bytes=4096, persist_delay_s=0.3))
+    try:
+        eng.snapshot_sync(state, 1)
+        seq = eng.persist_async(str(tmp_path / "t.reft"))
+        assert eng.stats["persist_inflight"] == 1
+        done = []
+        deadline = time.monotonic() + 10
+        while not done and time.monotonic() < deadline:
+            done = eng.poll_persists()
+            time.sleep(0.02)
+        assert done and done[0]["seq"] == seq and done[0]["error"] is None
+        assert done[0]["step"] == 1
+        assert eng.stats["persists"] == 1
+        assert eng.stats["persist_inflight"] == 0
+        # collected by polling, not blocking: the whole lifetime overlapped
+        assert eng.stats["persist_overlap_seconds"] > 0.2
+    finally:
+        eng.close()
+
+
+# ------------------------------------------------------------ group level
+def test_group_async_checkpoint_round_and_byte_identity(tmp_path):
+    """checkpoint_async returns immediately; drain_persists lands an
+    SG-consistent family that restores byte-identically — the serial
+    oracle being the state the snapshot captured."""
+    state = small_state(4)
+    g = ReftGroup(2, state, ReftConfig(bucket_bytes=2048, stage_slots=4,
+                                       ckpt_dir=str(tmp_path),
+                                       checkpoint_every_snapshots=10 ** 6,
+                                       persist_delay_s=0.4))
+    try:
+        g.snapshot(state, 1)
+        t0 = time.perf_counter()
+        step = g.checkpoint_async()
+        assert step == 1
+        assert time.perf_counter() - t0 < 0.3      # no disk I/O inline
+        assert g.persist_inflight() == 1
+        # snapshots keep flowing while both SMPs write
+        st2 = bump(state, 1)
+        g.snapshot(st2, 2)
+        rounds = g.drain_persists(30)
+        assert [r["step"] for r in rounds] == [1] and rounds[0]["ok"]
+        assert g.persist_inflight() == 0
+        rec, got, _ = restore_from_checkpoint(str(tmp_path), 2, state)
+        assert got == 1 and trees_equal(rec, state)
+    finally:
+        g.close()
+
+
+# ----------------------------------------------------------- facade level
+def test_facade_after_step_nonblocking_and_drain(tmp_path):
+    """Acceptance: after_step with a persist in flight returns without
+    blocking on disk I/O (bounded well under the simulated write time),
+    completion is collected by polling, and drain() joins the rest."""
+    from repro.api import CheckpointSession, CheckpointSpec
+
+    template = small_state(5)
+    spec = CheckpointSpec(backend="reft", ckpt_dir=str(tmp_path), sg_size=2,
+                          snapshot_every_steps=1, checkpoint_every_steps=1,
+                          resume=False,
+                          options={"persist_delay_s": 0.6})
+    with CheckpointSession(spec, template) as sess:
+        state = bump(template, 1)
+        assert sess.snapshot(state, 1, wait=True)
+        t0 = time.perf_counter()
+        did = sess.after_step(bump(state, 1), 2)
+        elapsed = time.perf_counter() - t0
+        # newest SG-clean step: 1, or already 2 when the tiny async
+        # snapshot outran the fire — either way nothing touched disk
+        fired = did["persist"]
+        assert fired in (1, 2)
+        assert elapsed < 0.4, f"after_step blocked on disk ({elapsed:.2f}s)"
+        assert sess.stats()["persist_inflight"] == 1
+        sess.drain()
+        assert sess.stats()["persist_inflight"] == 0
+        ev = [e for e in sess.events if e.kind == "persist"]
+        assert ev and ev[-1].step == fired
+        assert sess.checkpointer.manager.latest() == fired
+
+
+def test_facade_persist_error_event_without_degrading(tmp_path):
+    from repro.api import CheckpointSpec
+
+    template = small_state(6)
+    spec = CheckpointSpec(backend="reft", ckpt_dir=str(tmp_path), sg_size=2,
+                          resume=False)
+    with spec.build(template) as ck:
+        ck.snapshot(template, 1, wait=True)
+        os.makedirs(os.path.join(str(tmp_path), "step-1-node-0.reft"))
+        assert ck.persist(wait=False) == 1
+        deadline = time.monotonic() + 15
+        while not any(e.kind == "persist-error" for e in ck.events):
+            assert time.monotonic() < deadline
+            ck.poll_persists()
+            time.sleep(0.02)
+        assert ck.health()["healthy"]              # engines unharmed
+        assert ck.snapshot(bump(template, 1), 2, wait=True)
+
+
+def test_elastic_resume_from_async_persisted_family(tmp_path):
+    """CI-shaped end to end: a 4-member session persists asynchronously
+    and exits (drain-on-close); a 2-member session resumes byte-
+    identically from the family (reshard-on-restore)."""
+    from repro.api import CheckpointSession, CheckpointSpec
+
+    template = small_state(7)
+    state = bump(template, 3)
+    spec = CheckpointSpec(backend="reft", ckpt_dir=str(tmp_path), sg_size=4,
+                          resume=False, options={"persist_delay_s": 0.2})
+    with CheckpointSession(spec, template) as sess:
+        assert sess.snapshot(state, 2, wait=True)
+        assert sess.persist(wait=False) == 2       # async; close() drains
+
+    spec2 = CheckpointSpec(backend="reft", ckpt_dir=str(tmp_path),
+                           sg_size=2, resume=True)
+    with CheckpointSession(spec2, template) as sess:
+        assert sess.restored is not None
+        assert sess.restored.step == 2
+        assert sess.restored.load.resharded
+        assert trees_equal(sess.restored.state, state)
+
+
+# ------------------------------------------------------ per-stripe digests
+def test_partial_plan_verifies_only_read_stripes(tmp_path):
+    """Acceptance: a PARTIAL restore plan verifies via per-stripe digests
+    — corruption in a stripe the plan does not read goes unnoticed (and
+    unpaid-for), corruption in a read stripe demotes the member and the
+    restore self-heals from parity, byte-identically."""
+    state = small_state(8)
+    g = ReftGroup(4, state, ReftConfig(bucket_bytes=2048, stage_slots=4,
+                                       ckpt_dir=str(tmp_path),
+                                       checkpoint_every_snapshots=10 ** 6))
+    try:
+        g.snapshot(state, 1)
+        total = g.total_bytes
+        assert g.checkpoint() == 1
+    finally:
+        g.close()
+
+    # the family's per-member layout: block (stripe 0, idx 0) is global
+    # bytes [0, bs) and lives on node 1 as its local block 0
+    src = FileSource({n: os.path.join(str(tmp_path),
+                                      f"step-1-node-{n}.reft")
+                      for n in range(4)})
+    bs = src.layout.bs
+    own = src.layout.own_bytes
+    data_off = {n: src._data_off[n] for n in src.nodes}
+    assert stripe_table(src.meta(1)) is not None
+    src.close()
+
+    need = [(16, min(1000, total))]
+
+    def flip(node, local_off):
+        p = os.path.join(str(tmp_path), f"step-1-node-{node}.reft")
+        with open(p, "r+b") as f:
+            f.seek(data_off[node] + local_off)
+            b = f.read(1)
+            f.seek(data_off[node] + local_off)
+            f.write(bytes([b[0] ^ 0xFF]))
+
+    # corruption OUTSIDE the plan (node 1's second block): partial restore
+    # neither reads nor pays for it
+    flip(1, bs + 7)
+    st = LoadStats()
+    rec, got, _ = restore_from_checkpoint(str(tmp_path), 4, state,
+                                          need=need, stats=st)
+    assert got == 1
+    assert st.probe_segments > 0, "stripe digests were not used"
+    # whole-region probing of the one read member alone would cost `own`
+    assert st.bytes_read < own, (st.bytes_read, own)
+    full = np.concatenate([np.asarray(x).reshape(-1).view(np.uint8)
+                           for x in jax.tree.leaves(state)])
+    rec_flat = np.concatenate([np.asarray(x).reshape(-1).view(np.uint8)
+                               for x in jax.tree.leaves(rec)])
+    lo, hi = need[0]
+    assert np.array_equal(rec_flat[lo:hi], full[lo:hi])
+
+    # corruption INSIDE the read stripe: the digest catches it, the
+    # member demotes, and parity decode reproduces the exact bytes
+    flip(1, 32)
+    st2 = LoadStats()
+    rec2, got2, _ = restore_from_checkpoint(str(tmp_path), 4, state,
+                                            need=need, stats=st2)
+    assert got2 == 1
+    assert st2.decoded_bytes > 0, "corrupt stripe did not demote-decode"
+    rec2_flat = np.concatenate([np.asarray(x).reshape(-1).view(np.uint8)
+                                for x in jax.tree.leaves(rec2)])
+    assert np.array_equal(rec2_flat[lo:hi], full[lo:hi])
+
+
+def test_stripe_tables_identical_host_and_device_encode():
+    """The device encode path's per-bucket digests fold into the SAME
+    per-stripe table the SMP computes on the host path."""
+    state = small_state(9)
+    tables = {}
+    for mode in ("off", "on"):
+        eng = SnapshotEngine(0, 2, state,
+                             ReftConfig(bucket_bytes=4096,
+                                        device_encode=mode))
+        try:
+            eng.snapshot_sync(state, 1)
+            view = ReadOnlyNode(eng.run, 0, 2, eng.spec.total_bytes)
+            try:
+                meta = pickle.loads(view.meta(1))
+            finally:
+                view.close()
+            tables[mode] = (meta["crc_own"], stripe_table(meta))
+        finally:
+            eng.close()
+    assert tables["off"][1] is not None
+    assert tables["off"] == tables["on"]
+
+
+def test_shm_partial_probe_uses_stripes(tmp_path):
+    """Same acceptance over live SMP segments (tier 1/2): the probe of a
+    partial plan reads only the touched stripe segments."""
+    state = small_state(10)
+    g = ReftGroup(4, state, ReftConfig(bucket_bytes=2048, stage_slots=4,
+                                       ckpt_dir=str(tmp_path),
+                                       checkpoint_every_snapshots=10 ** 6))
+    try:
+        g.snapshot(state, 1)
+        total = g.total_bytes
+        views = attach_survivors(g.run, [0, 1, 2, 3], 4, total)
+        try:
+            plan = build_plan(4, total, need=[(0, 512)])
+            st = LoadStats()
+            bad = probe_crc(plan, ShmSource(views, 1), stats=st)
+            assert bad == []
+            assert st.probe_segments == 1
+            assert st.bytes_read <= g.engines[0].layout.bs
+        finally:
+            for v in views.values():
+                v.close()
+    finally:
+        g.close()
