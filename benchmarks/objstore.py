@@ -1,0 +1,191 @@
+"""Tier-4 object-store figures: upload overlap, ranged remote restore,
+and scrubber detection/repair.
+
+Rows (the `BENCH_objstore.json` CI artifact):
+  upload_overlap_stall     trainer-side stall of persist(wait=False)
+                           with remote uploads in flight vs the blocking
+                           drain — DataStates-LLM's "remote tier must
+                           stay lazy" claim in seconds
+  upload_drain             wall time of the full async round (local
+                           write + stripe-multipart upload + manifest)
+  restore_remote_full      ranged remote restore, whole family
+  restore_remote_partial   single-leaf partial plan over remote ranges
+  restore_local_tier3      local `.reft` FileSource equivalent
+  scrub_pass               digest walk over both tiers (clean)
+  scrub_repair             injected stripe corruption: detect + parity
+                           repair, both tiers
+
+`--scrub-smoke` is the CI gate mode: exit 0 iff an injected corrupt
+stripe in a `LocalObjectStore` family is detected AND repaired from
+parity (and a local-file corruption likewise).
+
+    PYTHONPATH=src python benchmarks/objstore.py [--smoke]
+        [--json BENCH_objstore.json] [--scrub-smoke]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import tempfile
+import time
+
+if __package__ in (None, ""):                    # `python benchmarks/x.py`
+    sys.path.insert(0, os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))))
+    sys.path.insert(0, os.path.join(os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))), "src"))
+
+BYTES_FULL = 32 << 20
+BYTES_SMOKE = 4 << 20
+
+
+def row(name: str, seconds: float, detail: str = "", **extra) -> dict:
+    out = {"name": name, "seconds": seconds, "detail": detail}
+    out.update(extra)
+    return out
+
+
+def _corrupt_remote(store, prefix, step, node) -> None:
+    from repro.store import load_manifest
+    ent = load_manifest(store, prefix, step)["nodes"][node]
+    store.write_range(ent["key"], int(ent["data_off"]) + 3,
+                      b"\xde\xad\xbe\xef")
+
+
+def _corrupt_local(ckpt_dir, step, node) -> None:
+    import pickle
+    p = os.path.join(ckpt_dir, f"step-{step}-node-{node}.reft")
+    with open(p, "rb") as f:
+        pickle.load(f)
+        off = f.tell()
+    with open(p, "r+b") as f:
+        f.seek(off + 3)
+        f.write(b"\x55\xaa\x55\xaa")
+
+
+def run_upload_overlap(nbytes: int) -> list:
+    """Async persist+upload stall vs blocking drain, through the facade."""
+    from benchmarks.common import make_param_state
+    from repro.api import CheckpointSpec
+
+    rows = []
+    state = make_param_state(nbytes)
+    with tempfile.TemporaryDirectory() as d:
+        spec = CheckpointSpec(backend="objstore", ckpt_dir=d, sg_size=4,
+                              resume=False,
+                              options={"scrub_every_s": 0.0})
+        with spec.build(state) as ck:
+            ck.snapshot(state, 1, wait=True)
+            t0 = time.perf_counter()
+            ck.persist(step=None, wait=False)       # fire
+            stall = time.perf_counter() - t0        # trainer-side cost
+            t0 = time.perf_counter()
+            ck.wait()                               # drain round
+            drain = time.perf_counter() - t0
+            st = ck.stats()
+            rows.append(row("upload_overlap_stall", stall,
+                            "persist(wait=False) trainer-side",
+                            upload_bytes=st.get("persist_upload_bytes", 0)))
+            rows.append(row("upload_drain", drain,
+                            "local write + stripe multipart + manifest",
+                            upload_seconds=st.get("persist_upload_seconds",
+                                                  0.0)))
+    return rows
+
+
+def run_restore_compare(nbytes: int) -> list:
+    """Remote ranged restore vs local tier-3, same persisted family."""
+    from benchmarks.recovery import run_objstore
+    name_map = {"objstore_remote_full": "restore_remote_full",
+                "objstore_remote_partial": "restore_remote_partial",
+                "objstore_local_tier3_full": "restore_local_tier3"}
+    rows = []
+    for r in run_objstore(nbytes):
+        if r["name"] in name_map:
+            r = dict(r)
+            r["name"] = name_map[r["name"]]
+            rows.append(r)
+    return rows
+
+
+def run_scrub(nbytes: int, smoke_gate: bool = False) -> list:
+    """Clean scrub pass timing + injected-corruption detect/repair; with
+    `smoke_gate`, raise unless both tiers detect AND repair."""
+    from benchmarks.common import make_param_state
+    from repro.api import CheckpointSpec
+
+    rows = []
+    state = make_param_state(nbytes)
+    with tempfile.TemporaryDirectory() as d:
+        spec = CheckpointSpec(backend="objstore", ckpt_dir=d, sg_size=4,
+                              resume=False,
+                              options={"scrub_every_s": 0.0})
+        with spec.build(state) as ck:
+            ck.snapshot(state, 1, wait=True)
+            step = ck.persist(wait=True)
+
+            t0 = time.perf_counter()
+            clean = ck.scrub()
+            rows.append(row("scrub_pass", time.perf_counter() - t0,
+                            f"families={len(clean)} clean",
+                            segments=sum(r.segments for r in clean)))
+            assert all(r.clean for r in clean), \
+                [r.corrupt + r.errors for r in clean]
+
+            _corrupt_remote(ck.store, ck.store_prefix, step, node=1)
+            _corrupt_local(d, step, node=2)
+            t0 = time.perf_counter()
+            reports = ck.scrub()
+            found = [r for r in reports if r.corrupt]
+            repaired = [r for r in reports if r.repaired]
+            rows.append(row("scrub_repair", time.perf_counter() - t0,
+                            f"corrupt={sum(len(r.corrupt) for r in reports)}"
+                            f" repaired="
+                            f"{sum(len(r.repaired) for r in reports)}"))
+            if smoke_gate:
+                kinds_found = {r.kind for r in found}
+                kinds_fixed = {r.kind for r in repaired}
+                assert kinds_found == {"file", "object"}, \
+                    f"detection missed a tier: {kinds_found}"
+                assert kinds_fixed == {"file", "object"}, \
+                    f"repair missed a tier: {kinds_fixed}"
+                again = ck.scrub()
+                assert all(r.clean for r in again), \
+                    [r.corrupt + r.errors for r in again]
+    return rows
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="small payload (CI)")
+    ap.add_argument("--json", default=None, metavar="PATH")
+    ap.add_argument("--scrub-smoke", action="store_true",
+                    help="CI gate: exit nonzero unless injected stripe "
+                         "corruption is detected and parity-repaired in "
+                         "both durable tiers")
+    args = ap.parse_args(argv)
+    nbytes = BYTES_SMOKE if (args.smoke or args.scrub_smoke) else BYTES_FULL
+
+    if args.scrub_smoke:
+        run_scrub(nbytes, smoke_gate=True)
+        print("[scrub-smoke] detection + parity repair OK in both tiers")
+        return 0
+
+    rows = (run_upload_overlap(nbytes) + run_restore_compare(nbytes)
+            + run_scrub(nbytes))
+    print("bench,seconds,detail")
+    for r in rows:
+        print(f"{r['name']},{r['seconds']:.4f},{r['detail']}")
+    if args.json:
+        payload = {"bench": "objstore", "rows": rows}
+        with open(args.json, "w") as fh:
+            json.dump(payload, fh, indent=2)
+        print(f"[json] wrote {args.json}", file=sys.stderr)
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

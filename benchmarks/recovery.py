@@ -206,9 +206,76 @@ def run_loader_compare(nbytes=LOADER_BYTES) -> list:
     return rows
 
 
-def run(backends=SWEEP_BACKENDS) -> list:
+def run_objstore(nbytes=LOADER_BYTES) -> list:
+    """Tier-4 rows: ranged restore straight from a remote family (full /
+    single-member decode / partial) vs the local tier-3 `FileSource`
+    equivalent over the SAME persisted family."""
+    from benchmarks.common import make_param_state
+    from repro.core.coordinator import ReftGroup
+    from repro.core.loader import (
+        FileSource, LoadStats, ObjectSource, build_plan, load_bytes,
+        need_for_leaves,
+    )
+    from repro.core.snapshot import ReftConfig
+    from repro.core.treebytes import make_flat_spec
+    from repro.store import (
+        LocalObjectStore, build_manifest, load_manifest, put_manifest,
+    )
+
+    rows = []
+    state = make_param_state(nbytes)
+    spec = make_flat_spec(state)
+    with tempfile.TemporaryDirectory() as d:
+        g = ReftGroup(4, state, ReftConfig(ckpt_dir=d,
+                                           checkpoint_every_snapshots=10**9))
+        try:
+            g.snapshot(state, 1)
+            g.wait()
+            total = g.total_bytes
+            store = LocalObjectStore(os.path.join(d, "objstore"))
+            step = g.checkpoint_async(remote={"store": store.config,
+                                              "prefix": "families"})
+            rounds = g.drain_persists()
+            rnd = next(r for r in rounds if r["step"] == step)
+            assert rnd["ok"], rnd["errors"]
+            put_manifest(store, "families",
+                         build_manifest(g.run, step, 4, total,
+                                        rnd["uploads"]))
+            man = load_manifest(store, "families", step)
+
+            def src_obj():
+                return ObjectSource(store, man)
+
+            def src_file():
+                return FileSource({nd: os.path.join(
+                    d, f"step-{step}-node-{nd}.reft") for nd in range(4)})
+
+            def timed(tag, mk_src, need=None, failed=None):
+                st = LoadStats()
+                plan = build_plan(4, total, need=need, failed=failed)
+                src = mk_src()
+                try:
+                    t0 = time.perf_counter()
+                    load_bytes(plan, src, verify=False, stats=st)
+                    rows.append(row(tag, time.perf_counter() - t0,
+                                    f"bytes={total}", **_stats_extra(st)))
+                finally:
+                    src.close()
+
+            timed("objstore_remote_full", src_obj)
+            timed("objstore_remote_decode", src_obj, failed=2)
+            timed("objstore_remote_partial", src_obj,
+                  need=need_for_leaves(spec, ("mu",)))
+            timed("objstore_local_tier3_full", src_file)
+        finally:
+            g.close()
+    return rows
+
+
+def run(backends=SWEEP_BACKENDS, objstore=False) -> list:
     return (run_cluster_trade() + run_backend_sweep(backends)
-            + run_loader_compare())
+            + run_loader_compare()
+            + (run_objstore() if objstore else []))
 
 
 def main(argv=None):
@@ -218,8 +285,12 @@ def main(argv=None):
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="also write structured rows as JSON (CI uploads "
                          "this as a perf-trajectory artifact)")
+    ap.add_argument("--objstore", action="store_true",
+                    help="add tier-4 rows (remote ranged full / decode / "
+                         "partial restore vs local tier-3)")
     args = ap.parse_args(argv)
-    rows = run(tuple(args.backend) if args.backend else SWEEP_BACKENDS)
+    rows = run(tuple(args.backend) if args.backend else SWEEP_BACKENDS,
+               objstore=args.objstore)
     print("bench,seconds,derived")
     for r in rows:
         extra = ""

@@ -38,12 +38,16 @@ def _target_need(template: Any, target: Optional[RestoreTarget]):
 def reft_recovery_ladder(run: str, n: int, total_bytes: int, template: Any,
                          alive_nodes: List[int], ckpt_dir: str,
                          step: Optional[int] = None,
-                         target: Optional[RestoreTarget] = None
-                         ) -> RestoreResult:
-    """Three-tier recovery (paper §3 step 5):
+                         target: Optional[RestoreTarget] = None,
+                         store=None, store_prefix: str = "families",
+                         store_retry=None) -> RestoreResult:
+    """Tiered recovery (paper §3 step 5 + the tier-4 remote rung):
       in-memory  — every member's SMP segments reachable, plain reassembly;
       raim5      — exactly one member missing, decode it from parity;
-      checkpoint — >1 member gone, reload the last persisted REFT-Ckpt.
+      checkpoint — >1 member gone, reload the last persisted REFT-Ckpt;
+      objstore   — local families gone/corrupt too, ranged reads from the
+                   object store's manifest-complete families (only when a
+                   `store` is configured).
 
     Every tier routes through the distributed loader's `LoadPlan`
     executors; `target` restricts the plan to the restoring job's layout
@@ -51,8 +55,9 @@ def reft_recovery_ladder(run: str, n: int, total_bytes: int, template: Any,
     `RestoreResult.load` carries the per-phase `LoadStats`.
     """
     need, device_put = _target_need(template, target)
+    target_n = (target.sg_size if target and target.sg_size else n)
     stats = LoadStats()
-    stats.target_n = (target.sg_size if target and target.sg_size else n)
+    stats.target_n = target_n
     try:
         info: dict = {}
         state, got_step, extra = restore_state(
@@ -69,8 +74,10 @@ def reft_recovery_ladder(run: str, n: int, total_bytes: int, template: Any,
         return RestoreResult(state=state, step=got_step, extra_meta=extra,
                              tier=stats.tier, load=stats)
     except RecoveryError:
+        pass
+    try:
         stats = LoadStats()                    # drop partial tier-1/2 reads
-        stats.target_n = (target.sg_size if target and target.sg_size else n)
+        stats.target_n = target_n
         state, got_step, extra = restore_from_checkpoint(
             ckpt_dir, n, template, step=step, need=need,
             device_put=device_put, stats=stats)
@@ -78,6 +85,19 @@ def reft_recovery_ladder(run: str, n: int, total_bytes: int, template: Any,
         stats.resharded = stats.saved_n != stats.target_n
         return RestoreResult(state=state, step=got_step, extra_meta=extra,
                              tier="checkpoint", load=stats)
+    except RecoveryError:
+        if store is None:
+            raise
+    from repro.core.recovery import restore_from_objstore
+    stats = LoadStats()                        # drop partial tier-3 reads
+    stats.target_n = target_n
+    state, got_step, extra = restore_from_objstore(
+        store, store_prefix, n, template, step=step, need=need,
+        device_put=device_put, stats=stats, retry=store_retry)
+    stats.tier = "objstore"
+    stats.resharded = stats.saved_n != stats.target_n
+    return RestoreResult(state=state, step=got_step, extra_meta=extra,
+                         tier="objstore", load=stats)
 
 
 class ReftCheckpointer(Checkpointer):
@@ -119,10 +139,13 @@ class ReftCheckpointer(Checkpointer):
             crc_impl=opt.get("crc_impl", "pallas"),
             max_flights=opt.get("max_flights", 1),
             pin_cpus=opt.get("pin_cpus", "auto"),
-            # async-persistence knob (docs/API.md "Async persistence"):
+            # async-persistence knobs (docs/API.md "Async persistence"):
             # simulated durable-tier latency for tests and the
-            # persist-overlap interference benchmark
+            # persist-overlap interference benchmark; persist_bw_limit
+            # rate-limits the SMP's background writes (+ uploads) so the
+            # durable tier cannot starve a co-located trainer of IO
             persist_delay_s=opt.get("persist_delay_s", 0.0),
+            persist_bw_limit=opt.get("persist_bw_limit", 0.0),
         )
         self.group = ReftGroup(spec.sg_size, state_template, rcfg)
         self.manager = CheckpointManager(spec.ckpt_dir, spec.sg_size,
@@ -168,6 +191,12 @@ class ReftCheckpointer(Checkpointer):
                           detail="; ".join(r["errors"]))
         return out
 
+    def _persist_remote(self) -> Optional[dict]:
+        """Tier-4 hook: the `remote` spec ({store, prefix, retry}) each
+        persist round mirrors shards under, or None for local-only (this
+        base backend).  `ObjStoreCheckpointer` overrides it."""
+        return None
+
     def persist(self, step=None, wait=True):
         """Fire an SG-consistent REFT-Ckpt round.  `wait=False` returns
         the fired step immediately (the SMPs stream their pinned shards
@@ -177,7 +206,7 @@ class ReftCheckpointer(Checkpointer):
         self.poll_persists()
         if wait:
             self.group.wait()          # capture the newest snapshot
-        s = self.group.checkpoint_async()
+        s = self.group.checkpoint_async(remote=self._persist_remote())
         if s is None:
             return None
         self.manager.register_inflight(s)
@@ -190,6 +219,12 @@ class ReftCheckpointer(Checkpointer):
         return s
 
     # ---------------------------------------------------------- restore
+    def _ladder_extra(self) -> dict:
+        """Tier-4 hook: extra `reft_recovery_ladder` kwargs (the object
+        store the checkpoint tier falls through to).  Empty here;
+        `ObjStoreCheckpointer` overrides it."""
+        return {}
+
     def restore(self, step=None, target=None):
         from repro.core.coordinator import NodeState
         if target is None:
@@ -205,7 +240,7 @@ class ReftCheckpointer(Checkpointer):
         res = reft_recovery_ladder(
             self.group.run, self.group.n, self.group.total_bytes,
             self.group.template, alive, self.spec.ckpt_dir,
-            step=step, target=target)
+            step=step, target=target, **self._ladder_extra())
         ld = res.load
         self.emit("restore", res.step, seconds=time.perf_counter() - t0,
                   tier=res.tier, nbytes=ld.bytes_read if ld else 0,
@@ -249,6 +284,17 @@ class ReftCheckpointer(Checkpointer):
         out["persist_overlap_seconds"] = sum(
             s.get("persist_overlap_seconds", 0.0) for s in eng)
         out["persist_errors"] = sum(s.get("persist_errors", 0) for s in eng)
+        out["persist_throttle_seconds"] = sum(
+            s.get("persist_throttle_seconds", 0.0) for s in eng)
+        out["persist_bw_limit"] = float(
+            self.spec.options.get("persist_bw_limit", 0.0))
+        up_bytes = sum(s.get("persist_upload_bytes", 0) for s in eng)
+        if up_bytes:
+            out["persist_upload_bytes"] = up_bytes
+            out["persist_upload_seconds"] = sum(
+                s.get("persist_upload_seconds", 0.0) for s in eng)
+            out["persist_upload_retries"] = sum(
+                s.get("persist_upload_retries", 0) for s in eng)
         for k, v in self.group.level_seconds().items():
             out[f"engine_{k}_seconds"] = v
         return out

@@ -42,3 +42,4 @@ def _load_builtin():
     # import for registration side effects (idempotent)
     from repro.api import backends as _b          # noqa: F401
     from repro.api import disk as _d              # noqa: F401
+    from repro.api import objstore as _o          # noqa: F401

@@ -50,12 +50,15 @@ def plan_gc(families: Dict[int, list], complete: set, keep_steps: set,
 
 
 class CheckpointManager:
-    def __init__(self, ckpt_dir: str, n_members: int, *, keep: int = 3):
+    def __init__(self, ckpt_dir: str, n_members: int, *, keep: int = 3,
+                 store=None, remote_prefix: str = "families"):
         self.dir = ckpt_dir
         self.n = n_members
         self.keep = keep
-        self._inflight: set = set()      # steps with registered async
-        os.makedirs(ckpt_dir, exist_ok=True)   # persists: GC-exempt
+        self.store = store               # tier-4 ObjectStore (optional):
+        self.remote_prefix = remote_prefix   # remote families join
+        self._inflight: set = set()      # latest()/GC on equal footing
+        os.makedirs(ckpt_dir, exist_ok=True)   # inflight steps: GC-exempt
 
     # --------------------------------------------------- in-flight gate
     def register_inflight(self, step: int) -> None:
@@ -76,13 +79,29 @@ class CheckpointManager:
         return sorted(s for s, nodes in scan_shards(self.dir).items()
                       if nodes == list(range(self.n)))
 
+    def remote_complete_steps(self) -> List[int]:
+        """Steps with a COMPLETE remote family (manifest present — the
+        marker is written only after every shard object composed).
+        Empty without a store or when the store is unreachable."""
+        if self.store is None:
+            return []
+        from repro.store.base import StoreError
+        from repro.store.manifest import object_families
+        try:
+            return sorted(object_families(self.store, self.remote_prefix))
+        except StoreError:
+            return []
+
     def latest(self) -> Optional[int]:
-        """Newest COMPLETE, fully-landed step — a family whose async
-        persist is still in flight is never reported (its shards may all
-        exist while a final fsync is pending)."""
-        steps = [s for s in self.complete_steps()
+        """Newest COMPLETE, fully-landed step — local `.reft` families
+        and manifest-complete remote families on equal footing; a family
+        whose async persist is still in flight is never reported (its
+        shards may all exist while a final fsync or manifest write is
+        pending)."""
+        steps = [s for s in set(self.complete_steps())
+                 | set(self.remote_complete_steps())
                  if s not in self._inflight]
-        return steps[-1] if steps else None
+        return max(steps) if steps else None
 
     # --------------------------------------------------------- manifest
     def commit(self) -> dict:
@@ -90,6 +109,8 @@ class CheckpointManager:
         steps = self.complete_steps()
         kept = steps[-self.keep:] if self.keep else steps
         manifest = {"n_members": self.n, "complete_steps": kept}
+        if self.store is not None:
+            manifest["remote_steps"] = self.remote_complete_steps()
         tmp = os.path.join(self.dir, MANIFEST + ".tmp")
         with open(tmp, "w") as f:
             json.dump(manifest, f)
@@ -97,6 +118,7 @@ class CheckpointManager:
             os.fsync(f.fileno())
         os.replace(tmp, os.path.join(self.dir, MANIFEST))
         self._gc(set(kept))
+        self._gc_remote()
         return manifest
 
     def read_manifest(self) -> Optional[dict]:
@@ -127,3 +149,28 @@ class CheckpointManager:
                 except FileNotFoundError:
                     pass
         return removed
+
+    def _gc_remote(self) -> int:
+        """Same keep-k policy over remote families: complete = manifest
+        present; torn = shard/part objects with no manifest (a crashed
+        upload's orphans).  Store errors skip the sweep — retention is
+        best-effort, never a persist-path failure."""
+        if self.store is None:
+            return 0
+        from repro.store.base import StoreError
+        from repro.store.manifest import delete_family, list_step_prefixes
+        try:
+            complete = set(self.remote_complete_steps())
+            families = {s: None
+                        for s in list_step_prefixes(self.store,
+                                                    self.remote_prefix)}
+            kept = sorted(complete)[-self.keep:] if self.keep \
+                else sorted(complete)
+            removed = 0
+            for s in plan_gc(families, complete, set(kept),
+                             spare_newest_torn=True,
+                             inflight=self._inflight):
+                removed += delete_family(self.store, self.remote_prefix, s)
+            return removed
+        except StoreError:
+            return 0

@@ -96,13 +96,16 @@ class ReftGroup:
             out["l3"] += e.stats.get("l3_seconds", 0.0)
         return out
 
-    def checkpoint_async(self) -> Optional[int]:
+    def checkpoint_async(self, remote: Optional[dict] = None
+                         ) -> Optional[int]:
         """REFT-Ckpt, overlapped: every healthy SMP persists its shard on
         its own background thread (no trainer involvement, no trainer
         blocking).  All members persist the SAME step — the newest one
         every healthy member holds clean — so the on-disk family is
         SG-consistent and restorable.  Returns the step fired (a round
-        ticket); collect with `poll_persists` / `drain_persists`."""
+        ticket); collect with `poll_persists` / `drain_persists`.
+        `remote` ({store, prefix, retry}) additionally mirrors each shard
+        to the object store under `<prefix>/step-<S>/node-<N>.reft`."""
         from repro.core.recovery import attach_survivors, common_step
         healthy = [e for e in self.engines
                    if self.states[e.node] == NodeState.HEALTHY
@@ -125,7 +128,14 @@ class ReftGroup:
         for e in healthy:
             path = os.path.join(self.cfg.ckpt_dir,
                                 f"step-{step}-node-{e.node}.reft")
-            parts.append((e, e.persist_async(path, step=step)))
+            rnode = None
+            if remote:
+                from repro.store.manifest import shard_key
+                rnode = {k: v for k, v in remote.items() if k != "prefix"}
+                rnode["key"] = shard_key(remote.get("prefix", ""), step,
+                                         e.node)
+            parts.append((e, e.persist_async(path, step=step,
+                                             remote=rnode)))
         self._persist_rounds.append({"step": step, "parts": parts,
                                      "t0": time.monotonic()})
         return step
@@ -140,8 +150,14 @@ class ReftGroup:
             self._persist_done.pop((e.node, seq), None)
         errors = [f"node{e.node}: {r['error']}"
                   for (e, _), r in zip(rnd["parts"], recs) if r["error"]]
-        return {"step": rnd["step"], "ok": not errors, "errors": errors,
-                "seconds": time.monotonic() - rnd["t0"]}
+        uploads = {e.node: r["upload"]
+                   for (e, _), r in zip(rnd["parts"], recs)
+                   if r.get("upload")}
+        out = {"step": rnd["step"], "ok": not errors, "errors": errors,
+               "seconds": time.monotonic() - rnd["t0"]}
+        if uploads:
+            out["uploads"] = uploads
+        return out
 
     def poll_persists(self) -> List[dict]:
         """Non-blocking: completion records ({step, ok, errors, seconds})

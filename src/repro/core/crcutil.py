@@ -91,14 +91,24 @@ def _zero_operator(len2: int) -> tuple:
 def crc32_combine(crc1: int, crc2: int, len2: int) -> int:
     """CRC32 of A||B from crc(A), crc(B), len(B) — zlib's crc32_combine
     (not exposed by the `zlib` module).  `crc32_combine(0, crc, n) == crc`,
-    so a fold over (crc, len) pairs starts from 0 (the empty-string CRC)."""
-    if len2 <= 0:
-        return int(crc1)
-    return _gf2_times(_zero_operator(len2), int(crc1)) ^ int(crc2)
+    so a fold over (crc, len) pairs starts from 0 (the empty-string CRC).
+
+    Inputs are masked to 32 bits: callers hand over digests that may
+    ride in wider containers (uint64 device lanes, Python ints from
+    signed struct unpacks) — an unmasked bit >= 32 used to index past
+    the 32-column GF(2) matrix and raise, and a zero-length B with such
+    a crc1 slipped through unmasked entirely."""
+    crc1 = int(crc1) & 0xFFFFFFFF
+    if int(len2) <= 0:                 # empty B: crc(A||B) == crc(A);
+        return crc1                    # numpy scalar lens coerce too
+    return _gf2_times(_zero_operator(int(len2)), crc1) \
+        ^ (int(crc2) & 0xFFFFFFFF)
 
 
 def crc32_concat(parts: Iterable[Tuple[int, int]]) -> int:
-    """Fold (crc, nbytes) digests of consecutive chunks into one CRC32."""
+    """Fold (crc, nbytes) digests of consecutive chunks into one CRC32.
+    Zero-length chunks (empty tail parts, padding-only segments) fold to
+    identity; single-byte tails exercise `_zero_operator(1)`."""
     crc = 0
     for part_crc, nbytes in parts:
         crc = crc32_combine(crc, part_crc, nbytes)

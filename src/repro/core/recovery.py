@@ -352,3 +352,77 @@ def restore_from_checkpoint(ckpt_dir: str, n: int, template: Any,
     raise RecoveryError(
         f"no complete checkpoint available"
         + (f" ({last_err})" if last_err else ""))
+
+
+# --------------------------------------------------------------- tier 4
+def restore_from_objstore(store, prefix: str, n: int, template: Any,
+                          step: Optional[int] = None,
+                          need: Optional[Sequence[Tuple[int, int]]] = None,
+                          device_put: bool = False,
+                          stats: Optional[LoadStats] = None,
+                          retry=None) -> Tuple[Any, int, dict]:
+    """Rebuild from a remote object-store family: the manifest names the
+    shard objects and saved topology, `ObjectSource` turns `LoadPlan`
+    ranges into positioned remote reads (no local staging copy), and the
+    rest — folded CRC verify, RAIM5 demotion, elastic n->m reshard —
+    is the same `_load_with_demotion` machinery every other tier uses.
+    Only manifest-complete families are candidates, so a torn upload can
+    never be surfaced."""
+    from repro.core.loader import ObjectSource
+    from repro.store.base import StoreError, retrier
+    from repro.store.manifest import load_manifest, object_families
+
+    st = stats if stats is not None else LoadStats()
+    if not st.target_n:
+        st.target_n = n
+    wrap = retrier(retry)
+    try:
+        families = object_families(store, prefix)
+    except StoreError as e:
+        raise RecoveryError(f"object store unavailable: {e!r}")
+    if step is not None:
+        if step not in families:
+            raise RecoveryError(
+                f"no remote family for step {step} under {prefix!r}")
+        candidates = [step]
+    else:
+        candidates = sorted(families, reverse=True)
+    last_err: Optional[Exception] = None
+    for cand in candidates:
+        try:
+            man = load_manifest(store, prefix, cand, retry=retry)
+            src = ObjectSource(store, man, retry=wrap)
+            saved_n = src.n
+            st.saved_n = saved_n
+            st.resharded = bool(n) and saved_n != n
+            # a manifest-complete family names all saved_n shards; a
+            # shard object deleted since (GC race, remote loss) becomes
+            # a missing member the RAIM5 demotion path reconstructs
+            holders = [nd for nd in range(saved_n)
+                       if nd in man["nodes"]
+                       and store.exists(man["nodes"][nd]["key"])]
+            absent = [nd for nd in range(saved_n) if nd not in holders]
+            meta = spec = None
+            for nd in holders:
+                try:
+                    meta = src.meta(nd)
+                    spec = FlatSpec.from_json(meta["spec"])
+                    break
+                except Exception:
+                    continue
+            if spec is None:
+                raise RecoveryError(
+                    f"remote family step {cand}: no member meta parseable")
+            tree, usable, corrupt = _load_with_demotion(
+                saved_n, src.total_bytes, template, spec,
+                lambda members: src, holders, absent, need, device_put, st)
+            return tree, src.step, meta.get("extra", {})
+        except (RecoveryError, StoreError, KeyError, TypeError, ValueError,
+                EOFError, pickle.UnpicklingError) as e:
+            last_err = e               # malformed family: try the next one
+            continue
+    if step is not None and last_err is not None:
+        raise RecoveryError(str(last_err))
+    raise RecoveryError(
+        f"no complete remote family available"
+        + (f" ({last_err})" if last_err else ""))

@@ -184,13 +184,40 @@ def _smp_main(conn, run: str, node: int, n: int, total_bytes: int,
             job = persist_q.get()
             if job is None:
                 return
-            seq, path, idx, step, delay_s = job
+            seq, path, idx, step, delay_s, opts = job
+            opts = opts or {}
             try:
                 if delay_s:                  # simulated slow durable tier
                     time.sleep(delay_s)      # (tests / interference bench)
+                # one token bucket covers the local stream AND the remote
+                # upload: persist_bw_limit bounds the SMP's total write
+                # pressure against a co-located trainer
+                bucket = (_TokenBucket(opts["bw_limit"])
+                          if opts.get("bw_limit") else None)
+                throttle = bucket.consume if bucket else None
+                head_blob, digests = _head_and_meta(node, lay, idx, step,
+                                                    meta_shm)
                 _persist_buffer(path, node, lay, idx, step, buf_np,
-                                meta_shm, seq)
-                reply = ("persisted", seq, path, step)
+                                meta_shm, seq, head_blob=head_blob,
+                                throttle=throttle)
+                info = {}
+                remote = opts.get("remote")
+                if remote:
+                    # tier-4: stream the same pinned buffer to the object
+                    # store, one multipart part per RAIM5 stripe block —
+                    # still on this worker thread, snapshots keep flowing
+                    from repro.store import store_from_config, upload_shard
+                    store = store_from_config(remote["store"])
+                    seg = lay.bs if lay.n > 1 else lay.own_bytes
+                    up = upload_shard(store, remote["key"], head_blob,
+                                      buf_np[idx], seg, lay.own_bytes,
+                                      retry=remote.get("retry"),
+                                      throttle=throttle)
+                    up.update(digests)
+                    info["upload"] = up
+                if bucket:
+                    info["throttle_s"] = bucket.throttled_s
+                reply = ("persisted", seq, path, step, info)
             except Exception as e:
                 reply = ("persist-error", seq, repr(e))
             finally:
@@ -307,7 +334,8 @@ def _smp_main(conn, run: str, node: int, n: int, total_bytes: int,
                 # interleave), then hand the write to the worker — the
                 # loop goes straight back to draining buckets while the
                 # shard streams to disk
-                _, seq, path, want_step, delay_s = msg
+                _, seq, path, want_step, delay_s = msg[:5]
+                opts = msg[5] if len(msg) > 5 else None
                 latest = int(ctl[1])
                 err = None
                 if latest < 0:
@@ -330,7 +358,7 @@ def _smp_main(conn, run: str, node: int, n: int, total_bytes: int,
                     with pin_cond:
                         pinned[idx] = pinned.get(idx, 0) + 1
                     persist_q.put((seq, path, idx, int(ctl[2 + 2 * idx]),
-                                   delay_s))
+                                   delay_s, opts))
             elif op == "ping":
                 _send(("pong", time.time()))
             elif op == "stop":
@@ -366,38 +394,85 @@ def _tmp_name(path: str, tag) -> str:
     return f"{path}.{os.getpid()}.{tag}.tmp"
 
 
+class _TokenBucket:
+    """Byte-rate limiter for the SMP's background writes (the
+    `persist_bw_limit` knob).  Charged per chunk/part BEFORE the write;
+    when the bucket runs dry the persist worker sleeps until the deficit
+    refills — trainer-side snapshots never block (the buffer is pinned,
+    `begin` just picks another).  Burst is a quarter second of rate so
+    small shards pass untouched."""
+
+    def __init__(self, rate_bytes_s: float):
+        self.rate = float(rate_bytes_s)
+        self.burst = max(self.rate * 0.25, float(1 << 20))
+        self.tokens = self.burst
+        self.t_last = time.perf_counter()
+        self.throttled_s = 0.0
+
+    def consume(self, nbytes: int) -> None:
+        now = time.perf_counter()
+        self.tokens = min(self.burst,
+                          self.tokens + (now - self.t_last) * self.rate)
+        self.t_last = now
+        self.tokens -= nbytes
+        if self.tokens < 0:
+            wait = -self.tokens / self.rate
+            self.throttled_s += wait
+            time.sleep(wait)
+
+
 def _stream_write(f, arr: np.ndarray,
-                  chunk_bytes: int = PERSIST_CHUNK_BYTES) -> int:
+                  chunk_bytes: int = PERSIST_CHUNK_BYTES,
+                  throttle=None) -> int:
     """Write `arr` (a uint8 view over the snapshot buffer) in fixed
     chunks.  The old `arr.tobytes()` materialized a full second copy of
     the shard — doubling RSS exactly while a snapshot may be staging."""
     nb = arr.nbytes
     for off in range(0, nb, chunk_bytes):
-        f.write(memoryview(arr[off:off + chunk_bytes]))
+        chunk = memoryview(arr[off:off + chunk_bytes])
+        if throttle is not None:
+            throttle(chunk.nbytes)
+        f.write(chunk)
     return nb
 
 
-def _persist_buffer(path, node, lay, idx, step, buf_np, meta_shm, tag):
+def _head_and_meta(node, lay, idx, step, meta_shm):
+    """Build the shard head blob for buffer `idx` plus the digest record
+    the remote manifest wants.  One head serves both durable paths: the
+    local `.reft` file is `head_blob + buffer`, and the uploaded shard
+    object is byte-identical, so the loader's parse/verify code reads
+    either through one format."""
+    base = idx * META_SLOT
+    mlen = struct.unpack("<q", bytes(meta_shm.buf[base:base + 8]))[0]
+    meta = bytes(meta_shm.buf[base + 8:base + 8 + mlen])
+    digests = {"crc_stripes": None, "crc_own": None, "crc_parity": None}
+    try:                      # surface the digest table in the file head
+        md = pickle.loads(meta)
+        for k in digests:
+            digests[k] = md.get(k)
+    except Exception:
+        pass
+    head = {"node": node, "n": lay.n, "total_bytes": lay.total_bytes,
+            "step": step, "meta": meta,
+            "crc_stripes": digests["crc_stripes"]}
+    return pickle.dumps(head), digests
+
+
+def _persist_buffer(path, node, lay, idx, step, buf_np, meta_shm, tag,
+                    head_blob=None, throttle=None):
     """Stream buffer `idx` (already persist-pinned by the caller) to
     `path` atomically.  The scratch file is unlinked on ANY failure —
     write or fsync errors no longer leak `.tmp` files into the family
     directory."""
-    base = idx * META_SLOT
-    mlen = struct.unpack("<q", bytes(meta_shm.buf[base:base + 8]))[0]
-    meta = bytes(meta_shm.buf[base + 8:base + 8 + mlen])
-    crc_stripes = None
-    try:                      # surface the digest table in the file head
-        crc_stripes = pickle.loads(meta).get("crc_stripes")
-    except Exception:
-        pass
+    if head_blob is None:
+        head_blob, _ = _head_and_meta(node, lay, idx, step, meta_shm)
     tmp = _tmp_name(path, tag)
     try:
         with open(tmp, "wb") as f:
-            head = {"node": node, "n": lay.n,
-                    "total_bytes": lay.total_bytes, "step": step,
-                    "meta": meta, "crc_stripes": crc_stripes}
-            pickle.dump(head, f)
-            _stream_write(f, buf_np[idx])
+            if throttle is not None:
+                throttle(len(head_blob))
+            f.write(head_blob)
+            _stream_write(f, buf_np[idx], throttle=throttle)
             f.flush()
             os.fsync(f.fileno())
         os.replace(tmp, path)
@@ -565,18 +640,22 @@ class SMPHandle:
 
     # -- REFT-Ckpt persist protocol ----------------------------------------
     def persist_send(self, path: str, step: Optional[int] = None,
-                     delay_s: float = 0.0) -> int:
+                     delay_s: float = 0.0, opts: Optional[dict] = None
+                     ) -> int:
         """Fire a persist request; returns its sequence id (the ticket
         `persist_wait`/`persist_poll` take).  The SMP services it on a
         background thread, so snapshots keep flowing while the shard
         streams to disk.  `delay_s` simulates a slow durable tier (tests
-        and the interference benchmark)."""
+        and the interference benchmark).  `opts` is a plain picklable
+        dict of worker knobs: `bw_limit` (token-bucket bytes/s for the
+        write stream) and `remote` (`{store, key, retry}` — mirror the
+        shard to an object store after the local write)."""
         with self._rx_lock:
             self._persist_seq += 1
             seq = self._persist_seq
             self._pending_persists.append(seq)
         self._send(("persist", seq, path, step,
-                    float(delay_s) if delay_s else 0.0))
+                    float(delay_s) if delay_s else 0.0, opts))
         return seq
 
     def _take_persist(self, seq: int):

@@ -64,6 +64,9 @@ class ReftConfig:
     # --- async REFT-Ckpt persistence (docs/API.md "Async persistence") ---
     persist_delay_s: float = 0.0     # simulated durable-tier latency per
                                      # persist (tests / interference bench)
+    persist_bw_limit: float = 0.0    # token-bucket cap (bytes/s) on the
+                                     # SMP's background persist + upload
+                                     # writes; 0 = unlimited
 
 
 class SnapshotEngine:
@@ -107,6 +110,10 @@ class SnapshotEngine:
                       "persist_seconds": 0.0,
                       "persist_overlap_seconds": 0.0,
                       "persist_errors": 0,
+                      "persist_throttle_seconds": 0.0,
+                      "persist_upload_seconds": 0.0,
+                      "persist_upload_bytes": 0,
+                      "persist_upload_retries": 0,
                       "device_encode": (self._pipeline.device_encode
                                         if self._pipeline else False),
                       "stager_affinity": None}
@@ -315,13 +322,23 @@ class SnapshotEngine:
             self._err = e
 
     # ------------------------------------------------------------ ckpt
-    def persist_async(self, path: str, step: Optional[int] = None) -> int:
+    def persist_async(self, path: str, step: Optional[int] = None,
+                      remote: Optional[dict] = None) -> int:
         """REFT-Ckpt, overlapped: fire the persist and return a ticket
         (the SMP streams the pinned shard to disk on its own background
         thread while snapshots keep flowing).  Collect with
-        `poll_persists` / `persist_join` / `persist_wait_all`."""
+        `poll_persists` / `persist_join` / `persist_wait_all`.
+        `remote` ({store, key, retry}) asks the SMP worker to mirror the
+        shard to an object store — tier 4 — after the local write."""
+        opts = {}
+        bw = float(getattr(self.cfg, "persist_bw_limit", 0.0) or 0.0)
+        if bw > 0:
+            opts["bw_limit"] = bw
+        if remote:
+            opts["remote"] = remote
         seq = self.smp.persist_send(
-            path, step, delay_s=getattr(self.cfg, "persist_delay_s", 0.0))
+            path, step, delay_s=getattr(self.cfg, "persist_delay_s", 0.0),
+            opts=opts or None)
         self._persists[seq] = {"path": path, "step": step,
                                "t0": time.monotonic(), "blocked": 0.0}
         self.stats["persist_inflight"] = len(self._persists)
@@ -344,6 +361,15 @@ class SnapshotEngine:
             out["error"] = msg[2]
         else:
             out["path"], out["step"] = msg[2], msg[3]
+            info = msg[4] if len(msg) > 4 and isinstance(msg[4], dict) \
+                else {}
+            st["persist_throttle_seconds"] += info.get("throttle_s", 0.0)
+            up = info.get("upload")
+            if up:
+                st["persist_upload_seconds"] += up.get("upload_s", 0.0)
+                st["persist_upload_bytes"] += up.get("upload_bytes", 0)
+                st["persist_upload_retries"] += up.get("retries", 0)
+                out["upload"] = up
         return out
 
     def _lost_persist(self, seq: int, why: str) -> dict:

@@ -49,7 +49,8 @@ def main(argv=None):
     ap.add_argument("--batch", type=int, default=2)
     ap.add_argument("--seq", type=int, default=256)
     ap.add_argument("--backend", default="reft",
-                    choices=["reft", "sync_disk", "async_disk", "null"])
+                    choices=["reft", "objstore", "sync_disk", "async_disk",
+                             "null"])
     ap.add_argument("--sg-size", type=int, default=4)
     ap.add_argument("--snapshot-every", type=int, default=2)
     ap.add_argument("--ckpt-every", type=int, default=25)
@@ -162,6 +163,18 @@ def main(argv=None):
               f"restores={st.get('restore', 0)} "
               f"avg_snapshot_s={secs/max(snaps, 1):.3f} "
               f"degraded={sess.degraded}")
+        if st.get("persist_upload_bytes"):
+            print(f"[{args.backend}] uploads="
+                  f"{st['persist_upload_bytes'] / 1e6:.1f}MB "
+                  f"upload_s={st.get('persist_upload_seconds', 0.0):.3f} "
+                  f"retries={st.get('persist_upload_retries', 0)} "
+                  f"throttle_s="
+                  f"{st.get('persist_throttle_seconds', 0.0):.3f}")
+        if st.get("scrub_passes"):
+            print(f"[{args.backend}] scrub_passes={st['scrub_passes']} "
+                  f"families={st.get('scrub_families', 0)} "
+                  f"corrupt={st.get('scrub_corrupt', 0)} "
+                  f"repaired={st.get('scrub_repaired', 0)}")
     if not losses:
         print(f"[done] steps={step} (resumed past --steps; nothing to run) "
               f"wall={time.time()-t0:.1f}s")

@@ -1,0 +1,387 @@
+"""Tier-4 object-store durability: store primitives, retry/backoff, CRC
+composition properties, stripe-multipart upload + ranged remote restore,
+the recovery ladder's tier-3 -> tier-4 fallthrough, fault injection with
+zero data loss, and the persist_bw_limit token bucket."""
+import glob
+import os
+import pickle
+import random
+import zlib
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.api import CheckpointSpec, RestoreTarget
+from repro.api.registry import available_backends, create_checkpointer
+from repro.core.crcutil import crc32_combine, crc32_concat
+from repro.core.loader import ObjectSource
+from repro.store import (
+    FlakyStore, LocalObjectStore, NotFoundError, RetryPolicy, StoreError,
+    TransientStoreError, build_manifest, call_with_retries, delete_family,
+    list_step_prefixes, load_manifest, object_families, put_manifest,
+    shard_key, store_from_config, upload_shard,
+)
+
+
+def small_state(seed=0):
+    k = jax.random.PRNGKey(seed)
+    return {"w": jax.random.normal(k, (512, 8), jnp.float32),
+            "b": jnp.arange(64, dtype=jnp.int32),
+            "step": jnp.asarray(7, jnp.int32)}
+
+
+def assert_trees_equal(a, b):
+    for k in a:
+        np.testing.assert_array_equal(np.asarray(a[k]), np.asarray(b[k]))
+
+
+# --------------------------------------------------------- store basics
+def test_local_store_multipart_roundtrip(tmp_path):
+    s = LocalObjectStore(str(tmp_path))
+    s.put_part("fam/a.bin", 0, b"hello ")
+    s.put_part("fam/a.bin", 1, b"world")
+    # parts are invisible until compose (torn upload == no object)
+    assert s.list() == []
+    assert not s.exists("fam/a.bin")
+    assert s.compose("fam/a.bin", 2) == 11
+    assert s.list() == ["fam/a.bin"]
+    assert bytes(s.read_range("fam/a.bin", 0, 11)) == b"hello world"
+    assert bytes(s.read_range("fam/a.bin", 6, 11)) == b"world"
+    assert s.size("fam/a.bin") == 11
+    # compose consumed the parts
+    with pytest.raises(StoreError):
+        s.compose("fam/a.bin", 2)
+
+
+def test_local_store_missing_and_bad_keys(tmp_path):
+    s = LocalObjectStore(str(tmp_path))
+    with pytest.raises(NotFoundError):
+        s.read_range("nope", 0, 1)
+    with pytest.raises(NotFoundError):
+        s.size("nope")
+    s.delete("nope")                       # idempotent
+    for bad in ("", "/abs", "a/../b"):
+        with pytest.raises(StoreError):
+            s.put(bad, b"x")
+
+
+def test_local_store_delete_prefix_sweeps_scratch(tmp_path):
+    s = LocalObjectStore(str(tmp_path))
+    s.put("fam/step-1/a", b"x")
+    s.put_part("fam/step-1/torn", 0, b"orphan part")
+    assert s.delete_prefix("fam/step-1") == 1
+    assert s.list() == []
+    # scratch of the torn upload swept too
+    assert not any("torn" in f for _, _, fs in os.walk(str(tmp_path))
+                   for f in fs)
+
+
+def test_store_from_config_roundtrip(tmp_path):
+    s = LocalObjectStore(str(tmp_path))
+    f = FlakyStore(s, latency_s=0.0, error_rate=0.5, fail_every=3, seed=9)
+    rebuilt = store_from_config(f.config)
+    assert isinstance(rebuilt, FlakyStore)
+    assert isinstance(rebuilt.inner, LocalObjectStore)
+    assert rebuilt.fail_every == 3 and rebuilt.inner.root == s.root
+    with pytest.raises(StoreError):
+        store_from_config({"kind": "s3"})
+
+
+# -------------------------------------------------------- retry/backoff
+def test_retry_bounded_backoff(tmp_path):
+    s = FlakyStore(LocalObjectStore(str(tmp_path)), fail_every=2)
+    sleeps = []
+    pol = RetryPolicy(attempts=4, base_s=0.01, max_s=0.04, mult=2.0)
+    # every 2nd op faults: each logical op needs exactly one retry
+    for i in range(4):
+        _, retries = call_with_retries(
+            lambda i=i: s.put(f"k{i}", b"v"), pol, sleep=sleeps.append)
+    assert all(s.exists(f"k{i}") for i in range(4))
+    assert sleeps and all(0.01 <= t <= 0.04 for t in sleeps)
+
+
+def test_retry_exhaustion_propagates():
+    calls = []
+
+    def always_503():
+        calls.append(1)
+        raise TransientStoreError("503")
+
+    with pytest.raises(TransientStoreError):
+        call_with_retries(always_503,
+                          RetryPolicy(attempts=3, base_s=0.0),
+                          sleep=lambda t: None)
+    assert len(calls) == 3                 # bounded, not infinite
+
+
+def test_terminal_errors_not_retried(tmp_path):
+    s = LocalObjectStore(str(tmp_path))
+    calls = []
+
+    def missing():
+        calls.append(1)
+        return s.size("absent")
+
+    with pytest.raises(NotFoundError):
+        call_with_retries(missing, RetryPolicy(attempts=5, base_s=0.0))
+    assert len(calls) == 1
+
+
+# ------------------------------------------------- CRC composition props
+def test_crc_combine_matches_zlib_random_splits():
+    rng = random.Random(0)
+    for _ in range(200):
+        blob = bytes(rng.getrandbits(8)
+                     for _ in range(rng.randrange(0, 64)))
+        cut = rng.randint(0, len(blob))
+        a, b = blob[:cut], blob[cut:]
+        got = crc32_combine(zlib.crc32(a), zlib.crc32(b), len(b))
+        assert got == zlib.crc32(blob), (len(a), len(b))
+
+
+def test_crc_concat_multipart_vs_whole_object():
+    """The invariant the upload path rests on: folding per-part digests
+    (stripe-sized parts, zero-length tails, single-byte tails included)
+    reproduces the whole-object zlib CRC."""
+    rng = random.Random(1)
+    for _ in range(100):
+        blob = bytes(rng.getrandbits(8)
+                     for _ in range(rng.randrange(1, 200)))
+        parts, i = [], 0
+        while i < len(blob):
+            step = rng.choice([0, 1, 1, rng.randrange(1, 40)])
+            parts.append(blob[i:i + step])
+            i += step if step else 0
+            if step == 0:
+                parts[-1] = b""            # explicit empty segment
+        parts.append(b"")                  # zero-length tail part
+        assert b"".join(parts) == blob
+        got = crc32_concat((zlib.crc32(p), len(p)) for p in parts)
+        assert got == zlib.crc32(blob)
+
+
+def test_crc_combine_masks_wide_inputs():
+    """Digests can ride in containers wider than 32 bits (uint64 device
+    lanes); bits >= 32 used to index past the GF(2) matrix."""
+    c = zlib.crc32(b"payload")
+    wide = (1 << 40) | c
+    assert crc32_combine(wide, 0, 0) == c
+    assert crc32_combine(wide, zlib.crc32(b"x"), 1) == \
+        crc32_combine(c, zlib.crc32(b"x"), 1) == zlib.crc32(b"payloadx")
+    assert crc32_combine(0, wide, 7) == crc32_combine(0, c, 7)
+    assert crc32_combine(np.uint64(c), np.uint64(zlib.crc32(b"x")),
+                         np.int64(1)) == zlib.crc32(b"payloadx")
+
+
+# ------------------------------------- upload + ObjectSource (no SMP)
+def test_upload_shard_stripes_and_ranged_reads(tmp_path):
+    store = LocalObjectStore(str(tmp_path))
+    rng = np.random.default_rng(2)
+    head = pickle.dumps({"n": 1, "total_bytes": 96, "step": 5,
+                         "meta": pickle.dumps({})})
+    buf = rng.integers(0, 256, size=96, dtype=np.uint8)
+    rec = upload_shard(store, "fam/step-5/node-0.reft", head, buf,
+                       seg=32, own_bytes=96)
+    assert rec["parts"] == 1 + 3           # head + 3 stripe parts
+    assert rec["data_off"] == len(head)
+    assert store.size("fam/step-5/node-0.reft") == len(head) + 96
+    got = store.read_range("fam/step-5/node-0.reft",
+                           len(head), len(head) + 96)
+    np.testing.assert_array_equal(got, buf)
+
+
+def test_manifest_completeness_marker(tmp_path):
+    store = LocalObjectStore(str(tmp_path))
+    store.put(shard_key("families", 3, 0), b"shardbytes")
+    # shard objects alone do NOT make a family: no manifest, not listed
+    assert object_families(store, "families") == {}
+    assert list_step_prefixes(store, "families") == {3}
+    man = build_manifest("run", 3, 1, 10, {0: {
+        "key": shard_key("families", 3, 0), "nbytes": 10, "data_off": 0,
+        "parts": 1}})
+    put_manifest(store, "families", man)
+    assert object_families(store, "families") == {3: "families/step-3"}
+    got = load_manifest(store, "families", 3)
+    assert got["nodes"][0]["key"] == man["nodes"]["0"]["key"]
+    assert delete_family(store, "families", 3) == 2
+    assert object_families(store, "families") == {}
+
+
+def test_manager_treats_remote_families_like_local(tmp_path):
+    from repro.ckpt.manager import CheckpointManager
+    store = LocalObjectStore(str(tmp_path / "obj"))
+    mgr = CheckpointManager(str(tmp_path / "ckpt"), 2, keep=2,
+                            store=store)
+    for s in (1, 2, 3, 4):
+        for nd in (0, 1):
+            store.put(shard_key("families", s, nd), b"x" * 8)
+        put_manifest(store, "families",
+                     build_manifest("r", s, 2, 16,
+                                    {nd: {"key": shard_key("families", s,
+                                                           nd),
+                                          "nbytes": 8, "data_off": 0,
+                                          "parts": 1} for nd in (0, 1)}))
+    # torn remote family (objects, no manifest) newest: spared by GC
+    store.put(shard_key("families", 9, 0), b"inflight")
+    assert mgr.latest() == 4               # remote-only family surfaces
+    mgr.register_inflight(4)
+    assert mgr.latest() == 3               # in-flight never surfaced
+    mgr.resolve_inflight(4)
+    mgr.commit()                           # keep=2 -> remote 1, 2 GC'd
+    assert sorted(object_families(store, "families")) == [3, 4]
+    assert 9 in list_step_prefixes(store, "families")  # newest torn spared
+
+
+# ----------------------------------------------------- SMP-backed e2e
+def test_backend_registered():
+    assert "objstore" in available_backends()
+
+
+def test_remote_restore_elastic_after_local_loss(tmp_path):
+    """Acceptance path: persist (stripe-multipart upload) -> delete ALL
+    local `.reft` files -> restore from the object store via ranged
+    reads onto a different sg_size, byte-identical."""
+    state = small_state()
+    spec = CheckpointSpec(backend="objstore", ckpt_dir=str(tmp_path),
+                          sg_size=2, options={"scrub_every_s": 0.0})
+    ck = create_checkpointer(spec, state)
+    try:
+        ck.snapshot(state, 7, extra_meta={"ds": 1}, wait=True)
+        assert ck.persist(wait=True) == 7
+        st = ck.stats()
+        assert st["persist_upload_bytes"] > 0
+        assert object_families(ck.store, ck.store_prefix) == \
+            {7: f"{ck.store_prefix}/step-7"}
+        for p in glob.glob(os.path.join(str(tmp_path), "*.reft")):
+            os.unlink(p)
+        ck.inject_failure(0, "node")
+        ck.inject_failure(1, "node")
+        res = ck.restore(target=RestoreTarget(sg_size=3))
+        assert res.tier == "objstore" and res.load.source == "object"
+        assert res.load.saved_n == 2 and res.load.resharded
+        assert res.step == 7 and res.extra_meta == {"ds": 1}
+        assert_trees_equal(res.state, state)
+    finally:
+        ck.close()
+
+
+def test_tier3_to_tier4_fallthrough_on_corrupt_local(tmp_path):
+    """Corrupt every local `.reft` family: the ladder must reject tier 3
+    and fall through to the remote rung, reporting it in LoadStats."""
+    state = small_state(seed=3)
+    spec = CheckpointSpec(backend="objstore", ckpt_dir=str(tmp_path),
+                          sg_size=2, options={"scrub_every_s": 0.0})
+    ck = create_checkpointer(spec, state)
+    try:
+        ck.snapshot(state, 7, wait=True)
+        ck.persist(wait=True)
+        for p in glob.glob(os.path.join(str(tmp_path), "*.reft")):
+            with open(p, "r+b") as f:      # garbage head: unparseable
+                f.write(b"\x00" * 64)
+        ck.inject_failure(0, "node")
+        ck.inject_failure(1, "node")
+        res = ck.restore()
+        assert res.tier == "objstore" and res.load.source == "object"
+        assert_trees_equal(res.state, state)
+    finally:
+        ck.close()
+
+
+def test_flaky_store_zero_data_loss(tmp_path):
+    """Latency + deterministic transient 5xx faults on every data-path
+    op: uploads and restores complete via bounded retry/backoff with the
+    state byte-identical."""
+    state = small_state(seed=4)
+    store_cfg = {"kind": "flaky",
+                 "inner": {"kind": "local",
+                           "root": str(tmp_path / "obj")},
+                 "latency_s": 0.0005, "fail_every": 3}
+    spec = CheckpointSpec(backend="objstore", ckpt_dir=str(tmp_path),
+                          sg_size=2,
+                          options={"scrub_every_s": 0.0,
+                                   "store": store_cfg,
+                                   "store_retry": {"attempts": 5,
+                                                   "base_s": 0.001}})
+    ck = create_checkpointer(spec, state)
+    try:
+        ck.snapshot(state, 7, wait=True)
+        assert ck.persist(wait=True) == 7
+        assert ck.stats()["persist_upload_retries"] > 0
+        for p in glob.glob(os.path.join(str(tmp_path), "*.reft")):
+            os.unlink(p)
+        ck.inject_failure(0, "node")
+        ck.inject_failure(1, "node")
+        res = ck.restore()
+        assert res.tier == "objstore"
+        assert_trees_equal(res.state, state)
+    finally:
+        ck.close()
+
+
+def test_persist_bw_limit_throttles_and_surfaces(tmp_path):
+    """The token bucket slows the SMP's background writes (throttle time
+    shows up in stats) without failing the persist."""
+    k = jax.random.PRNGKey(5)
+    state = {"w": jax.random.normal(k, (1 << 19,), jnp.float32)}  # 2 MiB
+    # per-node buffer is 2 MiB (1 MiB own + 1 MiB parity); at 4 MB/s the
+    # bucket's burst is 1 MB, so the tail of every write must wait
+    spec = CheckpointSpec(backend="reft", ckpt_dir=str(tmp_path),
+                          sg_size=2,
+                          options={"persist_bw_limit": 4e6})
+    ck = create_checkpointer(spec, state)
+    try:
+        ck.snapshot(state, 1, wait=True)
+        assert ck.persist(wait=True) == 1
+        st = ck.stats()
+        assert st["persist_bw_limit"] == 4e6
+        assert st["persist_throttle_seconds"] > 0.0
+        assert st["persist_errors"] == 0
+    finally:
+        ck.close()
+
+
+def test_object_source_matches_file_source(tmp_path):
+    """Same persisted family through both durable sources: identical
+    bytes, identical meta, ranged reads agree."""
+    from repro.core.coordinator import ReftGroup
+    from repro.core.loader import FileSource
+    from repro.core.snapshot import ReftConfig
+
+    state = small_state(seed=6)
+    store = LocalObjectStore(str(tmp_path / "obj"))
+    g = ReftGroup(2, state, ReftConfig(ckpt_dir=str(tmp_path),
+                                       checkpoint_every_snapshots=10**9))
+    try:
+        g.snapshot(state, 1)
+        g.wait()
+        step = g.checkpoint_async(remote={"store": store.config,
+                                          "prefix": "families"})
+        rounds = g.drain_persists()
+        rnd = next(r for r in rounds if r["step"] == step)
+        assert rnd["ok"], rnd["errors"]
+        put_manifest(store, "families",
+                     build_manifest(g.run, step, 2, g.total_bytes,
+                                    rnd["uploads"]))
+        man = load_manifest(store, "families", step)
+        osrc = ObjectSource(store, man)
+        fsrc = FileSource({nd: os.path.join(
+            str(tmp_path), f"step-{step}-node-{nd}.reft")
+            for nd in range(2)})
+        try:
+            assert (osrc.n, osrc.total_bytes, osrc.step) == \
+                (fsrc.n, fsrc.total_bytes, fsrc.step)
+            for nd in range(2):
+                np.testing.assert_array_equal(
+                    osrc.read_local(nd, 3, 777), fsrc.read_local(nd, 3, 777))
+                assert osrc.meta(nd)["spec"] == fsrc.meta(nd)["spec"]
+            np.testing.assert_array_equal(
+                osrc.read_parity_range(0, 0, 64),
+                fsrc.read_parity_range(0, 0, 64))
+        finally:
+            osrc.close()
+            fsrc.close()
+    finally:
+        g.close()

@@ -1,0 +1,301 @@
+"""Background integrity scrubber: stripe-digest verification and RAIM5
+parity repair over both durable tiers (local `.reft` files and remote
+shard objects), plus the cadenced daemon."""
+import os
+import pickle
+import time
+import zlib
+
+import numpy as np
+
+from repro.core import raim5
+from repro.store import (
+    LocalObjectStore, Scrubber, build_manifest, load_manifest,
+    put_manifest, shard_key, upload_shard,
+)
+from repro.store.scrub import (
+    scrub_family, scrub_local_dir, scrub_object_store, _FileFamily,
+)
+
+
+# ------------------------------------------------- synthetic families
+def make_local_family(ckpt_dir, n=3, bs=512, step=4, seed=0):
+    """Hand-rolled `.reft` family in the exact SMP shard layout: pickled
+    head (with per-block stripe digests) + own region + parity region.
+    Returns (full_state, {node: path}, {node: pristine file bytes})."""
+    total = n * (n - 1) * bs if n > 1 else bs
+    rng = np.random.default_rng(seed)
+    full = rng.integers(0, 256, total, dtype=np.uint8)
+    paths, pristine = {}, {}
+    for node in range(n):
+        if n > 1:
+            own = np.concatenate(
+                [full[slice(*ref.byte_range(bs, n))]
+                 for ref in raim5.data_blocks_of_node(node, n)])
+            parity = raim5.encode_parity(node, n, full)
+            crcs = [zlib.crc32(own[i * bs:(i + 1) * bs].tobytes())
+                    for i in range(n - 1)]
+            crc_parity = zlib.crc32(parity.tobytes())
+        else:
+            own, parity = full, np.zeros(0, np.uint8)
+            crcs, crc_parity = [zlib.crc32(full.tobytes())], None
+        head = {"node": node, "n": n, "total_bytes": total, "step": step,
+                "meta": pickle.dumps({"crc_parity": crc_parity}),
+                "crc_stripes": {"seg": bs, "crcs": crcs}}
+        blob = pickle.dumps(head) + own.tobytes() + parity.tobytes()
+        path = os.path.join(ckpt_dir, f"step-{step}-node-{node}.reft")
+        with open(path, "wb") as f:
+            f.write(blob)
+        paths[node] = path
+        pristine[node] = blob
+    return full, paths, pristine
+
+
+def make_object_family(store, prefix="families", n=3, bs=512, step=4,
+                       seed=0):
+    """Same family uploaded stripe-by-stripe, digests in the manifest."""
+    total = n * (n - 1) * bs
+    rng = np.random.default_rng(seed)
+    full = rng.integers(0, 256, total, dtype=np.uint8)
+    nodes = {}
+    for node in range(n):
+        own = np.concatenate(
+            [full[slice(*ref.byte_range(bs, n))]
+             for ref in raim5.data_blocks_of_node(node, n)])
+        parity = raim5.encode_parity(node, n, full)
+        buf = np.concatenate([own, parity])
+        head = pickle.dumps({"node": node, "n": n, "total_bytes": total,
+                             "step": step, "meta": pickle.dumps({})})
+        rec = upload_shard(store, shard_key(prefix, step, node), head,
+                           buf, seg=bs, own_bytes=own.nbytes)
+        rec["crc_stripes"] = {
+            "seg": bs,
+            "crcs": [zlib.crc32(own[i * bs:(i + 1) * bs].tobytes())
+                     for i in range(n - 1)]}
+        rec["crc_parity"] = zlib.crc32(parity.tobytes())
+        nodes[node] = rec
+    put_manifest(store, prefix,
+                 build_manifest("run", step, n, total, nodes))
+    return full
+
+
+def corrupt_local(path, off, junk=b"\xde\xad\xbe\xef"):
+    """Patch `junk` at byte `off` of the shard's DATA region."""
+    with open(path, "rb") as f:
+        pickle.load(f)
+        base = f.tell()
+    with open(path, "r+b") as f:
+        f.seek(base + off)
+        f.write(junk)
+
+
+def corrupt_remote(store, prefix, step, node, off,
+                   junk=b"\xde\xad\xbe\xef"):
+    ent = load_manifest(store, prefix, step)["nodes"][node]
+    store.write_range(ent["key"], int(ent["data_off"]) + off, junk)
+
+
+# ------------------------------------------------------- local scrubs
+def test_clean_family_verifies_every_segment(tmp_path):
+    make_local_family(str(tmp_path), n=3, bs=512)
+    reports = scrub_local_dir(str(tmp_path))
+    assert len(reports) == 1
+    r = reports[0]
+    assert r.clean and r.kind == "file" and r.members == 3
+    assert r.segments == 3 * 3             # (n-1) data + 1 parity per node
+    assert r.bytes_verified == 3 * 3 * 512
+
+
+def test_data_block_detected_and_parity_repaired(tmp_path):
+    _, paths, pristine = make_local_family(str(tmp_path), n=3, bs=512)
+    corrupt_local(paths[0], 512 + 7)       # node0, local block 1
+    r = scrub_local_dir(str(tmp_path))[0]
+    assert r.corrupt == ["node0:block1"]
+    assert r.repaired == ["node0:block1"] and not r.unrepairable
+    with open(paths[0], "rb") as f:        # byte-identical after repair
+        assert f.read() == pristine[0]
+    assert scrub_local_dir(str(tmp_path))[0].clean
+
+
+def test_parity_region_repaired_from_data(tmp_path):
+    lay_own = 2 * 512                      # n=3: own region = (n-1)*bs
+    _, paths, pristine = make_local_family(str(tmp_path), n=3, bs=512)
+    corrupt_local(paths[2], lay_own + 100)
+    r = scrub_local_dir(str(tmp_path))[0]
+    assert r.corrupt == ["node2:parity"]
+    assert r.repaired == ["node2:parity"]
+    with open(paths[2], "rb") as f:
+        assert f.read() == pristine[2]
+
+
+def test_detect_only_leaves_bytes_alone(tmp_path):
+    _, paths, pristine = make_local_family(str(tmp_path), n=3, bs=512)
+    corrupt_local(paths[1], 3)
+    r = scrub_local_dir(str(tmp_path), repair=False)[0]
+    assert r.corrupt and not r.repaired and not r.unrepairable
+    with open(paths[1], "rb") as f:        # untouched: still corrupt
+        assert f.read() != pristine[1]
+    r2 = scrub_local_dir(str(tmp_path), repair=True)[0]
+    assert r2.repaired == r.corrupt
+    with open(paths[1], "rb") as f:
+        assert f.read() == pristine[1]
+
+
+def test_same_stripe_double_loss_unrepairable(tmp_path):
+    # node1:block0 is stripe-0 data; node0 holds stripe 0's parity —
+    # each reconstruction needs the other clean, so neither heals
+    _, paths, pristine = make_local_family(str(tmp_path), n=3, bs=512)
+    corrupt_local(paths[1], 0)
+    corrupt_local(paths[0], 2 * 512 + 1)   # node0 parity region
+    r = scrub_local_dir(str(tmp_path))[0]
+    assert sorted(r.corrupt) == ["node0:parity", "node1:block0"]
+    assert not r.repaired
+    assert sorted(r.unrepairable) == ["node0:parity", "node1:block0"]
+
+
+def test_two_data_blocks_same_stripe_unrepairable(tmp_path):
+    # stripe 0's two data blocks live on node1 (li 0) and node2 (li 0):
+    # each sibling is the other's reconstruction input
+    _, paths, _ = make_local_family(str(tmp_path), n=3, bs=512)
+    corrupt_local(paths[1], 5)
+    corrupt_local(paths[2], 5)
+    r = scrub_local_dir(str(tmp_path))[0]
+    assert sorted(r.unrepairable) == ["node1:block0", "node2:block0"]
+
+
+def test_independent_stripes_both_heal(tmp_path):
+    _, paths, pristine = make_local_family(str(tmp_path), n=3, bs=512)
+    corrupt_local(paths[1], 5)             # stripe 0
+    corrupt_local(paths[2], 512 + 5)       # node2 block1 -> stripe 1
+    r = scrub_local_dir(str(tmp_path))[0]
+    assert len(r.corrupt) == 2
+    assert sorted(r.repaired) == ["node1:block0", "node2:block1"]
+    for nd in (1, 2):
+        with open(paths[nd], "rb") as f:
+            assert f.read() == pristine[nd]
+
+
+def test_n1_family_has_no_parity_to_repair_from(tmp_path):
+    _, paths, _ = make_local_family(str(tmp_path), n=1, bs=256)
+    corrupt_local(paths[0], 9)
+    r = scrub_local_dir(str(tmp_path))[0]
+    assert r.corrupt and r.unrepairable == r.corrupt and not r.repaired
+
+
+def test_torn_and_skipped_families_left_alone(tmp_path):
+    make_local_family(str(tmp_path), n=3, bs=512, step=4)
+    _, paths5, _ = make_local_family(str(tmp_path), n=3, bs=512, step=5)
+    os.unlink(paths5[2])                   # torn: GC's problem, not ours
+    make_local_family(str(tmp_path), n=3, bs=512, step=6)
+    reports = scrub_local_dir(str(tmp_path), skip_steps=[6])
+    assert [r.step for r in reports] == [4]
+
+
+def test_unreadable_head_is_an_error_not_a_crash(tmp_path):
+    make_local_family(str(tmp_path), n=3, bs=512, step=4)
+    with open(os.path.join(str(tmp_path), "step-6-node-0.reft"),
+              "wb") as f:
+        f.write(b"\x00garbage")
+    reports = {r.step: r for r in scrub_local_dir(str(tmp_path))}
+    assert reports[4].clean
+    assert reports[6].errors and not reports[6].corrupt
+
+
+# ------------------------------------------------------ object scrubs
+def test_object_family_detect_and_repair(tmp_path):
+    store = LocalObjectStore(str(tmp_path))
+    make_object_family(store, n=3, bs=512, step=4)
+    key = shard_key("families", 4, 0)
+    before = bytes(store.read(key))
+    corrupt_remote(store, "families", 4, node=0, off=512 + 3)
+    r = scrub_object_store(store, "families")[0]
+    assert r.kind == "object"
+    assert r.corrupt == ["node0:block1"] == r.repaired
+    assert bytes(store.read(key)) == before
+    assert scrub_object_store(store, "families")[0].clean
+
+
+def test_object_repair_without_write_range_falls_back(tmp_path):
+    class NoWriteRange:
+        """A store that only offers whole-object put: repair must go
+        read-patch-put."""
+        def __init__(self, inner):
+            self._inner = inner
+
+        def __getattr__(self, name):
+            if name == "write_range":
+                raise AttributeError(name)
+            return getattr(self._inner, name)
+
+    store = LocalObjectStore(str(tmp_path))
+    make_object_family(store, n=3, bs=512, step=4)
+    key = shard_key("families", 4, 1)
+    before = bytes(store.read(key))
+    corrupt_remote(store, "families", 4, node=1, off=6)
+    r = scrub_object_store(NoWriteRange(store), "families")[0]
+    assert r.repaired == ["node1:block0"]
+    assert bytes(store.read(key)) == before
+
+
+def test_object_scrub_skips_inflight_steps(tmp_path):
+    store = LocalObjectStore(str(tmp_path))
+    make_object_family(store, n=3, bs=512, step=4)
+    make_object_family(store, n=3, bs=512, step=5)
+    reports = scrub_object_store(store, "families", skip_steps=[5])
+    assert [r.step for r in reports] == [4]
+
+
+# ----------------------------------------------------------- the daemon
+def test_scan_once_covers_both_tiers_and_folds_stats(tmp_path):
+    local = tmp_path / "ckpt"
+    local.mkdir()
+    _, paths, _ = make_local_family(str(local), n=3, bs=512)
+    store = LocalObjectStore(str(tmp_path / "obj"))
+    make_object_family(store, n=3, bs=512, step=7)
+    corrupt_local(paths[0], 1)
+    corrupt_remote(store, "families", 7, node=2, off=2)
+    seen = []
+    sc = Scrubber(ckpt_dir=str(local), store=store, prefix="families",
+                  interval_s=0.0, on_report=seen.append)
+    reports = sc.scan_once()
+    assert {r.kind for r in reports} == {"file", "object"}
+    assert sum(len(r.repaired) for r in reports) == 2
+    assert seen == reports                 # on_report got every family
+    st = sc.stats()
+    assert st["scrub_passes"] == 1 and st["scrub_families"] == 2
+    assert st["scrub_corrupt"] == 2 == st["scrub_repaired"]
+    assert st["scrub_unrepairable"] == 0 == st["scrub_errors"]
+    assert st["scrub_segments"] == 2 * 9 and st["scrub_seconds"] > 0
+    assert all(r.clean for r in sc.scan_once())
+
+
+def test_daemon_cadence_and_stop(tmp_path):
+    _, paths, pristine = make_local_family(str(tmp_path), n=3, bs=512)
+    corrupt_local(paths[1], 4)
+    sc = Scrubber(ckpt_dir=str(tmp_path), interval_s=0.05)
+    sc.start()
+    sc.start()                             # idempotent
+    deadline = time.monotonic() + 5.0
+    while time.monotonic() < deadline:
+        if sc.stats()["scrub_passes"] >= 2:
+            break
+        time.sleep(0.02)
+    sc.stop()
+    st = sc.stats()
+    assert st["scrub_passes"] >= 2
+    assert st["scrub_repaired"] >= 1       # the daemon itself healed it
+    with open(paths[1], "rb") as f:
+        assert f.read() == pristine[1]
+    time.sleep(0.12)                       # no passes after stop
+    assert sc.stats()["scrub_passes"] == st["scrub_passes"]
+
+
+def test_skip_steps_callable_consulted_each_pass(tmp_path):
+    make_local_family(str(tmp_path), n=3, bs=512, step=4)
+    make_local_family(str(tmp_path), n=3, bs=512, step=5)
+    inflight = [5]
+    sc = Scrubber(ckpt_dir=str(tmp_path), interval_s=0.0,
+                  skip_steps=lambda: list(inflight))
+    assert [r.step for r in sc.scan_once()] == [4]
+    inflight.clear()                       # persist landed: scrub it now
+    assert [r.step for r in sc.scan_once()] == [4, 5]
