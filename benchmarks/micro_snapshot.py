@@ -157,6 +157,117 @@ def encode_paths(size: int):
     return rows, checks
 
 
+def moe_state(size: int, experts: int = 8):
+    """Synthetic 8-expert MoE-shaped state: two expert-stacked weight
+    leaves dominate the bytes, plus a small dense router (dirty every
+    step, like real routers/norms)."""
+    import jax.numpy as jnp
+    import numpy as np
+
+    d = max(int((size / (2 * experts * 4)) ** 0.5), 16)
+    rng = np.random.RandomState(0)
+
+    def mk(*sh):
+        return jnp.asarray(rng.rand(*sh), jnp.float32)
+
+    return {"router": mk(256, experts),
+            "wi_gate": mk(experts, d, d), "wo": mk(experts, d, d)}
+
+
+def delta_snapshot(size: int, dirty_experts: int = 2) -> tuple:
+    """Dirty-delta snapshot cost vs the full path (ISSUE 7 acceptance).
+
+    Same MoE-shaped state, same bucket geometry, two backends: delta ON
+    with the router reporting `dirty_experts`/8 experts touched
+    (provider = `expert_dirty_ranges`), and plain full snapshots.  The
+    timed delta flight's d2h bytes and engine L1 seconds must come in at
+    <= 0.5x the full flight's (`delta_le_half` in the JSON artifact /
+    the `--delta-smoke` gate)."""
+    from repro.core.delta import expert_dirty_ranges
+
+    E = 8
+    state = moe_state(size, E)
+    gb = tree_bytes(state) / 2 ** 30
+    touched = [i < dirty_experts for i in range(E)]
+
+    def mutate(st):
+        out = dict(st)
+        for k in ("wi_gate", "wo"):
+            out[k] = st[k].at[:dirty_experts].add(1.0)
+        return out
+
+    probes = {}
+    # identical FIXED probe geometry for both modes: buckets fine enough
+    # that the provider's skip granularity tracks the expert stride
+    # (coarse buckets smear one dirty expert across many clean parity
+    # sources), and sg_size=2 so only two SMP processes contend with the
+    # timed trainer thread on small CI runners
+    bb = 128 << 10
+    reps = 7
+    for mode, opts in (
+            ("full", {}),
+            ("delta", {"delta": True, "delta_keyframe": 10 ** 6,
+                       "delta_dirty_threshold": 0.9})):
+        with tempfile.TemporaryDirectory() as d:
+            spec = CheckpointSpec(backend="reft", ckpt_dir=d, sg_size=2,
+                                  bucket_bytes=bb, resume=False,
+                                  options=opts)
+            with spec.build(state) as ck:
+                if mode == "delta":
+                    fspec = ck.group.engines[0].spec
+                    ck.set_dirty_provider(
+                        lambda: expert_dirty_ranges(fspec, touched))
+                ck.snapshot(state, 1, wait=True)    # warm (delta: keyframe)
+                st2, walls, bts, l1s = state, [], [], []
+                for r in range(reps):
+                    st2 = mutate(st2)
+                    s0 = ck.stats()
+                    t0 = time.perf_counter()
+                    ck.snapshot(st2, 2 + r, wait=True)
+                    walls.append(time.perf_counter() - t0)
+                    s1 = ck.stats()
+                    bts.append(s1["engine_bytes_sent"]
+                               - s0["engine_bytes_sent"])
+                    l1s.append(s1["engine_l1_seconds"]
+                               - s0["engine_l1_seconds"])
+                # bytes are deterministic (median = any rep); timings use
+                # the min over reps — the cost floor — because single-core
+                # CI boxes overlay scheduler noise that medians still carry
+                probes[mode] = {
+                    "seconds": min(walls),
+                    "bytes": statistics.median(bts),
+                    "l1_seconds": min(l1s),
+                    "skipped_buckets": s1.get("skipped_buckets", 0),
+                    "delta_flights": s1.get("delta_flights", 0),
+                }
+        if mode == "delta" and probes[mode]["delta_flights"] < reps:
+            raise RuntimeError("delta probe invalid: not every timed "
+                               "flight was a delta flight")
+    dirty_frac = (dirty_experts / E)
+    byr = probes["delta"]["bytes"] / max(probes["full"]["bytes"], 1)
+    l1r = probes["delta"]["l1_seconds"] \
+        / max(probes["full"]["l1_seconds"], 1e-9)
+    rows = [
+        ("fig_delta_full_seconds", probes["full"]["seconds"],
+         gb / probes["full"]["seconds"]),
+        ("fig_delta_seconds", probes["delta"]["seconds"],
+         gb / probes["delta"]["seconds"]),
+        ("fig_delta_full_bytes", float(probes["full"]["bytes"]), 0.0),
+        ("fig_delta_bytes", float(probes["delta"]["bytes"]), byr),
+        ("fig_delta_dirty_frac", dirty_frac, 0.0),
+    ]
+    checks = {
+        "dirty_experts": dirty_experts,
+        "delta_bytes_ratio": byr,
+        "delta_l1_ratio": l1r,
+        "skipped_buckets": probes["delta"]["skipped_buckets"],
+        # acceptance: <=2/8 dirty experts must at least halve both the
+        # d2h+send bytes and the trainer-side L1 time of a flight
+        "delta_le_half": byr <= 0.5 and l1r <= 0.5,
+    }
+    return rows, checks
+
+
 def persist_overlap(size: int, steps: int = 40,
                     delay_s: float = 0.35) -> tuple:
     """Blocking vs async REFT-Ckpt persist interference on step time.
@@ -307,13 +418,41 @@ def main(argv=None):
                     help="also write rows + interference as JSON "
                          "(CI uploads this as the perf-trajectory artifact)")
     ap.add_argument("--no-interference", action="store_true")
+    ap.add_argument("--delta-smoke", action="store_true",
+                    help="run ONLY the dirty-delta probe and exit "
+                         "non-zero unless a 2/8-dirty-expert delta "
+                         "flight costs <= 0.5x the full flight in d2h "
+                         "bytes AND engine L1 seconds")
     ap.add_argument("--enforce-interference", action="store_true",
                     help="exit non-zero when the pipelined engine's "
                          "interference exceeds the serial baseline's "
                          "(plus the noise guard band)")
     args = ap.parse_args(argv)
     size = args.size or (SMOKE_SIZE if args.smoke else SIZE)
+    if args.delta_smoke:
+        d_rows, d_checks = delta_snapshot(size)
+        print("bench,seconds,derived")
+        for name, s, g in d_rows:
+            print(f"{name},{s:.6f},{g:.4f}")
+        for k in ("delta_bytes_ratio", "delta_l1_ratio"):
+            print(f"delta_{k},{d_checks[k]:.4f},")
+        print(f"delta_le_half,{int(d_checks['delta_le_half'])},")
+        if args.json:
+            payload = {"bench": "delta_snapshot", "size_bytes": size,
+                       "rows": [{"name": n, "seconds": s, "derived": g}
+                                for n, s, g in d_rows],
+                       "delta": d_checks}
+            with open(args.json, "w") as fh:
+                json.dump(payload, fh, indent=2)
+            print(f"[json] wrote {args.json}", file=sys.stderr)
+        if not d_checks["delta_le_half"]:
+            print("[fail] delta flight cost above 0.5x the full flight",
+                  file=sys.stderr)
+            return 2
+        return 0
     rows = run(size)
+    d_rows, d_checks = delta_snapshot(size)
+    rows += d_rows
     enc_rows, enc_checks = encode_paths(size)
     rows += enc_rows
     po_rows, po = persist_overlap(size)
@@ -325,6 +464,7 @@ def main(argv=None):
         print(f"encode_{k},{int(v)},")
     print(f"persist_overlap_async_nonblocking,"
           f"{int(po['async_nonblocking'])},")
+    print(f"delta_le_half,{int(d_checks['delta_le_half'])},")
     inter = None
     if not args.no_interference:
         inter = interference(size)
@@ -342,6 +482,7 @@ def main(argv=None):
                      for n, s, g in rows],
             "encode": enc_checks,
             "persist_overlap": po,
+            "delta": d_checks,
             "interference": inter,
         }
         with open(args.json, "w") as fh:

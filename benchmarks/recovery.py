@@ -272,10 +272,83 @@ def run_objstore(nbytes=LOADER_BYTES) -> list:
     return rows
 
 
-def run(backends=SWEEP_BACKENDS, objstore=False) -> list:
+def run_delta(nbytes=SWEEP_BYTES) -> list:
+    """Delta-family rows: restoring the keyframe step (one `.reft` set)
+    vs restoring the newest step of the same family through its
+    keyframe + delta chain (`.reftd` links), with bytes_read per row —
+    the read cost a delta chain adds to recovery."""
+    from benchmarks.common import make_param_state
+    from repro.core.coordinator import ReftGroup
+    from repro.core.loader import LoadStats
+    from repro.core.recovery import (
+        latest_checkpoint_step, restore_from_checkpoint,
+    )
+    from repro.core.snapshot import ReftConfig
+
+    rows = []
+    chain = 3                     # delta links on top of the keyframe
+    state = make_param_state(nbytes)
+    with tempfile.TemporaryDirectory() as d:
+        cfg = ReftConfig(ckpt_dir=d, bucket_bytes=256 << 10, delta=True,
+                         delta_keyframe=100, delta_dirty_threshold=0.9,
+                         checkpoint_every_snapshots=10 ** 9)
+        g = ReftGroup(4, state, cfg)
+        kinds = []
+        st = state
+        try:
+            leaf = sorted(state)[0]
+            for step in range(chain + 1):
+                if step:                     # sparse mutation -> delta
+                    st = dict(st)
+                    st[leaf] = st[leaf].at[(0,) * st[leaf].ndim].add(1.0)
+                assert g.snapshot(st, step, wait=True)
+                assert g.checkpoint_async(
+                    delta_base=latest_checkpoint_step(d, 4)) is not None
+                rnd = g.drain_persists()[-1]
+                assert rnd["ok"], rnd.get("errors")
+                kinds.append(rnd["kind"])
+        finally:
+            g.close()
+        assert kinds == ["full"] + ["delta"] * chain, kinds
+
+        st_kf = LoadStats()
+        t0 = time.perf_counter()
+        _, at, _ = restore_from_checkpoint(d, 4, state, step=0,
+                                           stats=st_kf)
+        t_kf = time.perf_counter() - t0
+        assert at == 0
+        rows.append(row("delta_restore_keyframe", t_kf, "chain_depth=0",
+                        **_stats_extra(st_kf)))
+
+        st_ch = LoadStats()
+        t0 = time.perf_counter()
+        _, at, _ = restore_from_checkpoint(d, 4, state, step=chain,
+                                           stats=st_ch)
+        t_ch = time.perf_counter() - t0
+        assert at == chain
+        rows.append(row("delta_restore_chain", t_ch,
+                        f"chain_depth={chain}", **_stats_extra(st_ch)))
+        # `bytes_read` counts logical plan bytes, identical for both
+        # restores (chain spans resolve from `.reftd` payloads instead of
+        # the keyframe) — the chain's real surcharge is wall time plus
+        # the on-disk delta footprint
+        import glob
+        kf_bytes = sum(os.path.getsize(p) for p in
+                       glob.glob(os.path.join(d, "step-0-node-*.reft")))
+        reftd_bytes = sum(os.path.getsize(p) for p in
+                          glob.glob(os.path.join(d, "*.reftd")))
+        rows.append(row("delta_restore_chain_overhead",
+                        max(t_ch - t_kf, 0.0),
+                        f"reftd_bytes={reftd_bytes}"
+                        f";keyframe_bytes={kf_bytes}"))
+    return rows
+
+
+def run(backends=SWEEP_BACKENDS, objstore=False, delta=False) -> list:
     return (run_cluster_trade() + run_backend_sweep(backends)
             + run_loader_compare()
-            + (run_objstore() if objstore else []))
+            + (run_objstore() if objstore else [])
+            + (run_delta() if delta else []))
 
 
 def main(argv=None):
@@ -288,9 +361,12 @@ def main(argv=None):
     ap.add_argument("--objstore", action="store_true",
                     help="add tier-4 rows (remote ranged full / decode / "
                          "partial restore vs local tier-3)")
+    ap.add_argument("--delta", action="store_true",
+                    help="add delta-family rows (keyframe-only vs "
+                         "keyframe+delta-chain restore)")
     args = ap.parse_args(argv)
     rows = run(tuple(args.backend) if args.backend else SWEEP_BACKENDS,
-               objstore=args.objstore)
+               objstore=args.objstore, delta=args.delta)
     print("bench,seconds,derived")
     for r in rows:
         extra = ""

@@ -146,6 +146,13 @@ class ReftCheckpointer(Checkpointer):
             # durable tier cannot starve a co-located trainer of IO
             persist_delay_s=opt.get("persist_delay_s", 0.0),
             persist_bw_limit=opt.get("persist_bw_limit", 0.0),
+            # dirty-delta snapshotting (docs/API.md "Delta snapshots &
+            # keyframes"): flights re-send only changed buckets, persists
+            # write `.reftd` chains against the last persisted step
+            delta=opt.get("delta", False),
+            delta_keyframe=opt.get("delta_keyframe", 8),
+            delta_dirty_threshold=opt.get("delta_dirty_threshold", 0.6),
+            delta_digest=opt.get("delta_digest", True),
         )
         self.group = ReftGroup(spec.sg_size, state_template, rcfg)
         self.manager = CheckpointManager(spec.ckpt_dir, spec.sg_size,
@@ -169,6 +176,14 @@ class ReftCheckpointer(Checkpointer):
         self._check_degraded(step)
         return started
 
+    def set_dirty_provider(self, fn) -> None:
+        """Install the delta saving path's dirtiness signal on every
+        member engine (e.g. `repro.core.delta.expert_dirty_ranges` over
+        the MoE router's touched-expert mask); no-op when `delta` is
+        off."""
+        for e in self.group.engines:
+            e.set_dirty_provider(fn)
+
     def poll_persists(self):
         """Collect finished REFT-Ckpt rounds: resolve the manager's
         in-flight registration, commit the manifest (+GC), and emit a
@@ -180,8 +195,11 @@ class ReftCheckpointer(Checkpointer):
             self.manager.resolve_inflight(r["step"])
             if r["ok"]:
                 manifest = self.manager.commit()
+                detail = f"manifest={manifest['complete_steps']}"
+                if r.get("kind") == "delta":
+                    detail += f" delta-from-{r['base_step']}"
                 self.emit("persist", r["step"], seconds=r["seconds"],
-                          detail=f"manifest={manifest['complete_steps']}")
+                          detail=detail)
             else:
                 # the torn family is left to GC (no longer in-flight);
                 # the engine is NOT degraded — a failed durable write
@@ -197,6 +215,21 @@ class ReftCheckpointer(Checkpointer):
         base backend).  `ObjStoreCheckpointer` overrides it."""
         return None
 
+    def _delta_base(self) -> Optional[int]:
+        """Base step for a delta persist round: the newest fully-landed
+        step on EVERY durable tier in play (a local-only base would tear
+        the remote chain), or None for a full round.  The coordinator
+        still falls back to full shards when any member lacks the flight
+        extents, and the engines' snapshot keyframes bound chain length
+        (a keyframe in the span voids the chain)."""
+        if not self.spec.options.get("delta", False):
+            return None
+        steps = set(self.manager.complete_steps())
+        if self.manager.store is not None:
+            steps &= set(self.manager.remote_complete_steps())
+        steps -= set(self.manager.inflight_steps())
+        return max(steps) if steps else None
+
     def persist(self, step=None, wait=True):
         """Fire an SG-consistent REFT-Ckpt round.  `wait=False` returns
         the fired step immediately (the SMPs stream their pinned shards
@@ -206,7 +239,8 @@ class ReftCheckpointer(Checkpointer):
         self.poll_persists()
         if wait:
             self.group.wait()          # capture the newest snapshot
-        s = self.group.checkpoint_async(remote=self._persist_remote())
+        s = self.group.checkpoint_async(remote=self._persist_remote(),
+                                        delta_base=self._delta_base())
         if s is None:
             return None
         self.manager.register_inflight(s)
@@ -288,6 +322,13 @@ class ReftCheckpointer(Checkpointer):
             s.get("persist_throttle_seconds", 0.0) for s in eng)
         out["persist_bw_limit"] = float(
             self.spec.options.get("persist_bw_limit", 0.0))
+        out["skipped_buckets"] = sum(s.get("skipped_buckets", 0)
+                                     for s in eng)
+        out["delta_flights"] = sum(s.get("delta_flights", 0) for s in eng)
+        out["keyframe_flights"] = sum(s.get("keyframe_flights", 0)
+                                      for s in eng)
+        out["delta_base_misses"] = sum(s.get("delta_base_misses", 0)
+                                       for s in eng)
         up_bytes = sum(s.get("persist_upload_bytes", 0) for s in eng)
         if up_bytes:
             out["persist_upload_bytes"] = up_bytes

@@ -96,7 +96,8 @@ class ReftGroup:
             out["l3"] += e.stats.get("l3_seconds", 0.0)
         return out
 
-    def checkpoint_async(self, remote: Optional[dict] = None
+    def checkpoint_async(self, remote: Optional[dict] = None,
+                         delta_base: Optional[int] = None
                          ) -> Optional[int]:
         """REFT-Ckpt, overlapped: every healthy SMP persists its shard on
         its own background thread (no trainer involvement, no trainer
@@ -105,7 +106,14 @@ class ReftGroup:
         SG-consistent and restorable.  Returns the step fired (a round
         ticket); collect with `poll_persists` / `drain_persists`.
         `remote` ({store, prefix, retry}) additionally mirrors each shard
-        to the object store under `<prefix>/step-<S>/node-<N>.reft`."""
+        to the object store under `<prefix>/step-<S>/node-<N>.reft`.
+
+        `delta_base` requests a DELTA round against an already-persisted
+        step: each member writes only the bytes its flights touched since
+        (`step-<S>-from-<B>-node-<N>.reftd`).  All-or-nothing — if any
+        member cannot produce a chain from `delta_base` to the chosen
+        step (keyframe crossed, log trimmed, engine restarted), the whole
+        round falls back to full shards, keeping families uniform."""
         from repro.core.recovery import attach_survivors, common_step
         healthy = [e for e in self.engines
                    if self.states[e.node] == NodeState.HEALTHY
@@ -124,20 +132,35 @@ class ReftGroup:
                 v.close()
         if step is None or step < 0:
             return None
+        base = None
+        if delta_base is not None and int(delta_base) < step:
+            base = int(delta_base)
+            if any(e.delta_extents_since(base, step) is None
+                   for e in healthy):
+                base = None                      # fall back to full shards
         parts = []
         for e in healthy:
-            path = os.path.join(self.cfg.ckpt_dir,
-                                f"step-{step}-node-{e.node}.reft")
+            if base is not None:
+                path = os.path.join(
+                    self.cfg.ckpt_dir,
+                    f"step-{step}-from-{base}-node-{e.node}.reftd")
+            else:
+                path = os.path.join(self.cfg.ckpt_dir,
+                                    f"step-{step}-node-{e.node}.reft")
             rnode = None
             if remote:
-                from repro.store.manifest import shard_key
+                from repro.store.manifest import delta_shard_key, shard_key
                 rnode = {k: v for k, v in remote.items() if k != "prefix"}
-                rnode["key"] = shard_key(remote.get("prefix", ""), step,
-                                         e.node)
-            parts.append((e, e.persist_async(path, step=step,
-                                             remote=rnode)))
+                prefix = remote.get("prefix", "")
+                rnode["key"] = (
+                    delta_shard_key(prefix, step, base, e.node)
+                    if base is not None else
+                    shard_key(prefix, step, e.node))
+            parts.append((e, e.persist_async(path, step=step, remote=rnode,
+                                             delta_base=base)))
         self._persist_rounds.append({"step": step, "parts": parts,
-                                     "t0": time.monotonic()})
+                                     "t0": time.monotonic(),
+                                     "base_step": base})
         return step
 
     def _fold_round(self, rnd: dict) -> Optional[dict]:
@@ -155,6 +178,10 @@ class ReftGroup:
                    if r.get("upload")}
         out = {"step": rnd["step"], "ok": not errors, "errors": errors,
                "seconds": time.monotonic() - rnd["t0"]}
+        base = rnd.get("base_step")
+        out["kind"] = "delta" if base is not None else "full"
+        if base is not None:
+            out["base_step"] = base
         if uploads:
             out["uploads"] = uploads
         return out

@@ -380,6 +380,237 @@ class ObjectSource:
         return False
 
 
+class DeltaLayer:
+    """One `.reftd` delta family as an overlay layer: per node, the
+    buffer-local extents its flight span rewrote plus a reader over the
+    concatenated payload bytes.  The head carries the FULL merged
+    snapshot meta + per-stripe digest table of its step, so the newest
+    layer alone answers every verification question about the chain."""
+
+    def __init__(self, step: int, base_step: int):
+        self.step = int(step)
+        self.base_step = int(base_step)
+        self.extents: Dict[int, List[Tuple[int, int]]] = {}
+        self.prefix: Dict[int, List[int]] = {}   # payload offset per extent
+        self._payload: Dict[int, Callable] = {}  # node -> read(lo, hi)
+        self._head: Dict[int, Any] = {}          # dict, or lazy loader
+        self._files: Dict[int, Any] = {}
+
+    def add_node(self, node: int, extents, read_payload, head) -> None:
+        ext = [(int(a), int(b)) for a, b in extents]
+        pre: List[int] = []
+        acc = 0
+        for a, b in ext:
+            pre.append(acc)
+            acc += b - a
+        self.extents[node] = ext
+        self.prefix[node] = pre
+        self._payload[node] = read_payload
+        self._head[node] = head
+
+    @property
+    def nodes(self) -> List[int]:
+        return sorted(self.extents)
+
+    def head(self, node: int) -> dict:
+        h = self._head[node]
+        if callable(h):
+            h = self._head[node] = h()
+        return h
+
+    def read(self, node: int, off_lo: int, off_hi: int) -> np.ndarray:
+        """Payload bytes [off_lo, off_hi) of `node`'s delta object."""
+        return self._payload[node](off_lo, off_hi)
+
+    def close(self) -> None:
+        for f in self._files.values():
+            try:
+                f.close()
+            except Exception:
+                pass
+
+    @classmethod
+    def from_files(cls, paths: Dict[int, str]) -> "DeltaLayer":
+        """Open one local `.reftd` family ({node: path})."""
+        import os
+        layer = None
+        files: Dict[int, Any] = {}
+        try:
+            for node, path in sorted(paths.items()):
+                f = open(path, "rb")
+                files[node] = f
+                head = pickle.load(f)
+                data_off = f.tell()
+                if layer is None:
+                    layer = cls(head["step"], head["base_step"])
+                fd = f.fileno()
+                layer.add_node(
+                    node, head["extents"],
+                    lambda lo, hi, fd=fd, off=data_off: np.frombuffer(
+                        os.pread(fd, hi - lo, off + lo), np.uint8),
+                    head)
+        except BaseException:
+            for f in files.values():
+                try:
+                    f.close()
+                except Exception:
+                    pass
+            raise
+        layer._files = files
+        return layer
+
+    @classmethod
+    def from_objects(cls, store, manifest: dict, retry=None) -> "DeltaLayer":
+        """Open one remote delta family from its manifest (node records
+        carry `base_step`/`extents`/`data_off`, so only a node's head —
+        needed for `meta()` — is fetched lazily)."""
+        rt = retry if retry is not None else (lambda fn: fn())
+        nodes = {int(k): v for k, v in manifest["nodes"].items()}
+        any_ent = next(iter(nodes.values()))
+        layer = cls(manifest["step"],
+                    manifest.get("base_step", any_ent.get("base_step")))
+        for node, ent in sorted(nodes.items()):
+            off = int(ent["data_off"])
+            key = ent["key"]
+
+            def read_payload(lo, hi, key=key, off=off):
+                return rt(lambda: store.read_range(key, off + lo, off + hi))
+
+            def load_head(key=key, off=off):
+                blob = rt(lambda: store.read_range(key, 0, off))
+                return pickle.loads(bytes(blob))
+
+            layer.add_node(node, ent["extents"], read_payload, load_head)
+        return layer
+
+
+class ChainSource:
+    """Keyframe + delta-chain resolver presenting the standard source
+    interface, so `LoadPlan` executors, RAIM5 decode, and per-stripe
+    verification run unchanged over a delta family.
+
+    `base` is a full-family source (`FileSource`/`ObjectSource`/shm
+    views); `layers` are the `.reftd` deltas oldest -> newest, each
+    linking to its predecessor's step.  A buffer-local read resolves
+    newest layer first (its extents override), falls through older
+    layers, and bottoms out at the keyframe.  `meta()` serves the NEWEST
+    layer's merged table — the digests of the resolved step — which is
+    exactly what makes chain reads verify like full-shard reads."""
+
+    kind = "chain"
+
+    def __init__(self, base, layers: Sequence[DeltaLayer]):
+        from repro.core.smp import NodeLayout
+        self.base = base
+        self.layers = list(layers)
+        prev = int(base.step)
+        for ly in self.layers:
+            if ly.base_step != prev:
+                raise ValueError(
+                    f"broken delta chain: layer for step {ly.step} links "
+                    f"to base {ly.base_step}, expected {prev}")
+            prev = ly.step
+        self.n = base.n
+        self.total_bytes = base.total_bytes
+        self.layout = NodeLayout(self.n, self.total_bytes)
+        self.step = self.layers[-1].step if self.layers else int(base.step)
+        self._meta: Dict[int, dict] = {}
+
+    @property
+    def nodes(self) -> List[int]:
+        return self.base.nodes
+
+    # ----------------------------------------------- overlay resolution
+    def locate_spans(self, node: int, lo: int, hi: int
+                     ) -> List[Tuple[int, int, int, int]]:
+        """Resolve buffer-local [lo, hi) newest-first into
+        `(layer_idx, payload_off, lo2, hi2)` spans sorted by `lo2`;
+        `layer_idx == -1` means the keyframe serves it (and
+        `payload_off == lo2`).  Exposed for the scrubber, which must
+        route repair WRITES to the same layer that serves the bytes."""
+        spans: List[Tuple[int, int, int, int]] = []
+        self._locate(node, lo, hi, len(self.layers) - 1, spans)
+        spans.sort(key=lambda s: s[2])
+        return spans
+
+    def _locate(self, node, lo, hi, li, out) -> None:
+        if lo >= hi:
+            return
+        if li < 0:
+            out.append((-1, lo, lo, hi))
+            return
+        layer = self.layers[li]
+        ext = layer.extents.get(node, [])
+        pos = lo
+        i = bisect.bisect_right([a for a, _ in ext], pos) - 1
+        if i < 0 or ext[i][1] <= pos:
+            i += 1
+        while pos < hi and i < len(ext):
+            a, b = ext[i]
+            if a >= hi:
+                break
+            if a > pos:                       # hole: older layers serve it
+                self._locate(node, pos, min(a, hi), li - 1, out)
+                pos = min(a, hi)
+            c = min(b, hi)
+            if c > pos:
+                off = layer.prefix[node][i] + (pos - a)
+                out.append((li, off, pos, c))
+                pos = c
+            i += 1
+        if pos < hi:
+            self._locate(node, pos, hi, li - 1, out)
+
+    def _read_span(self, node: int, span) -> np.ndarray:
+        li, off, a, b = span
+        if li < 0:
+            return self.base.read_local(node, a, b)
+        return self.layers[li].read(node, off, off + (b - a))
+
+    # ------------------------------------------------- source interface
+    def read_local(self, node: int, lo: int, hi: int) -> np.ndarray:
+        spans = self.locate_spans(node, lo, hi)
+        if len(spans) == 1:
+            return self._read_span(node, spans[0])
+        out = np.empty(hi - lo, np.uint8)
+        for span in spans:
+            out[span[2] - lo:span[3] - lo] = self._read_span(node, span)
+        return out
+
+    def read_block_range(self, node: int, stripe: int, index: int,
+                         o1: int, o2: int) -> np.ndarray:
+        base = raim5.local_block_index(node, stripe, index, self.n) \
+            * self.layout.bs
+        return self.read_local(node, base + o1, base + o2)
+
+    def read_parity_range(self, stripe: int, o1: int, o2: int) -> np.ndarray:
+        base = self.layout.own_bytes
+        return self.read_local(stripe, base + o1, base + o2)
+
+    def meta(self, node: int) -> dict:
+        if node not in self._meta:
+            if self.layers:
+                self._meta[node] = pickle.loads(
+                    self.layers[-1].head(node)["meta"])
+            else:
+                self._meta[node] = self.base.meta(node)
+        return self._meta[node]
+
+    def close(self) -> None:
+        for ly in self.layers:
+            ly.close()
+        close = getattr(self.base, "close", None)
+        if close is not None:
+            close()
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+        return False
+
+
 # ------------------------------------------------------------------ stats
 @dataclass
 class LoadStats:
@@ -1057,7 +1288,8 @@ def resolve_need(spec: FlatSpec, target) -> Optional[List[Tuple[int, int]]]:
 
 __all__ = [
     "CHUNK_BYTES", "CrcMismatch", "RangeReq", "LoadPlan", "LoadStats",
-    "ShmSource", "FileSource", "ObjectSource", "FlatSink", "LeafSink",
+    "ShmSource", "FileSource", "ObjectSource", "ChainSource", "DeltaLayer",
+    "FlatSink", "LeafSink",
     "normalize_ranges",
     "build_plan", "execute_plan", "load_bytes", "load_tree",
     "need_for_leaves", "member_shard_need", "need_for_sharding",

@@ -50,20 +50,30 @@ import pickle
 import queue
 import threading
 import time
+import zlib
 from dataclasses import dataclass
 from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
 from repro.core.crcutil import crc32_concat
+from repro.core.delta import FlightDelta, merge_ranges, task_dirty
 from repro.core.treebytes import FlatSpec, iter_buckets
 
 __all__ = [
     "StepBoundaryGate", "step_boundary", "BucketTask", "build_schedule",
-    "leaf_budget", "LeafReader", "DeviceEncoder", "PipelineResult",
+    "leaf_budget", "leaf_extents", "LeafReader", "DeviceEncoder", "PipelineResult",
     "PipelineFlight", "SnapshotPipeline", "resolve_device_encode",
-    "resolve_affinity", "pin_current_thread",
+    "resolve_ranged_fetch",
+    "resolve_affinity", "pin_current_thread", "task_local_extent",
+    "DeltaBaseMismatch",
 ]
+
+
+class DeltaBaseMismatch(RuntimeError):
+    """The SMP's latest clean buffer is not the delta flight's base step:
+    the flight aborts (nothing published) and the tracker must take a
+    keyframe next."""
 
 
 # ------------------------------------------------------------ L1 yield gate
@@ -121,6 +131,22 @@ def resolve_device_encode(cfg) -> bool:
     host path, "auto" enables it exactly when a real accelerator backs
     the default JAX backend."""
     mode = str(getattr(cfg, "device_encode", "auto")).lower()
+    if mode in ("on", "true", "1"):
+        return True
+    if mode in ("off", "false", "0"):
+        return False
+    import jax
+    return jax.default_backend() != "cpu"
+
+
+def resolve_ranged_fetch(cfg) -> bool:
+    """`ReftConfig.ranged_fetch`: slice each leaf down to the byte extent
+    a sparse delta flight actually reads *on the device* before the d2h
+    copy.  "on"/"off" force it; "auto" enables it exactly when a real
+    accelerator backs the default JAX backend — on the CPU backend
+    `np.asarray` of a leaf is already zero-copy, so device-side slicing
+    is pure dispatch overhead there."""
+    mode = str(getattr(cfg, "ranged_fetch", "auto")).lower()
     if mode in ("on", "true", "1"):
         return True
     if mode in ("off", "false", "0"):
@@ -208,12 +234,22 @@ def _leaf_span(offsets: Sequence[int], spec: FlatSpec,
     return l0, min(l1, len(spec.leaves))
 
 
+def task_local_extent(task: BucketTask, own_bytes: int) -> Tuple[int, int]:
+    """Buffer-local byte extent a task writes: own-region offset for
+    kind 0, parity-region offset (past `own_bytes`) for kinds 1/2."""
+    nb = task.hi - task.lo
+    if task.kind == 0:
+        return (task.dst, task.dst + nb)
+    return (own_bytes + task.dst, own_bytes + task.dst + nb)
+
+
 def build_schedule(spec: FlatSpec,
                    own_plan: Sequence[Tuple[int, int, int]],
                    stripe_plan: Sequence[Tuple[int, int]],
                    bucket_bytes: int, *,
                    opt_first: bool = True,
-                   fuse_parity: bool = False) -> List[BucketTask]:
+                   fuse_parity: bool = False,
+                   dirty: Optional[Sequence[Tuple[int, int]]] = None):
     """Bucket-split both plans into `BucketTask`s.  With `opt_first`, the
     buckets that start inside optimizer-moment leaves drain first: the
     moments are dead weights until the next optimizer update, so saving
@@ -223,7 +259,14 @@ def build_schedule(spec: FlatSpec,
     With `fuse_parity` (device encode path) the stripe plan becomes one
     kind-2 task per *parity-region* bucket, carrying the n-1 source
     ranges the device kernel XOR-folds — the parity leaves the device
-    already encoded, cutting parity d2h traffic by (n-1)x."""
+    already encoded, cutting parity d2h traffic by (n-1)x.
+
+    Delta mode: with `dirty` (merged global byte ranges that may have
+    changed since the base snapshot) the return value becomes
+    ``(tasks, delta_map)`` where `delta_map` maps the index of each
+    DIRTY task in the (full) schedule to the buffer-local extent it
+    rewrites — tasks absent from the map are clean and a delta flight
+    skips them before any read or d2h."""
     offsets = [l.offset for l in spec.leaves]
     tasks: List[BucketTask] = []
     for dst0, lo, hi in own_plan:
@@ -249,7 +292,13 @@ def build_schedule(spec: FlatSpec,
                 tasks.append(BucketTask(1, a - lo, a, b, l0, l1, opt))
     if opt_first:
         tasks.sort(key=lambda t: 0 if t.opt else 1)      # stable
-    return tasks
+    if dirty is None:
+        return tasks
+    own_bytes = sum(hi - lo for _, lo, hi in own_plan)
+    ranges = merge_ranges(dirty)
+    delta_map = {i: task_local_extent(t, own_bytes)
+                 for i, t in enumerate(tasks) if task_dirty(t, ranges)}
+    return tasks, delta_map
 
 
 def leaf_budget(spec: FlatSpec,
@@ -270,28 +319,78 @@ def leaf_budget(spec: FlatSpec,
     return out
 
 
+def leaf_extents(spec: FlatSpec,
+                 ranges: Sequence[Tuple[int, int]]) -> Dict[int, Tuple[int,
+                                                                       int]]:
+    """Per-leaf [lo, hi) byte extent (relative to the leaf start, aligned
+    down/up to the leaf's element size) that covers every plan range — a
+    `LeafReader` given extents d2h-transfers only that flat slice of each
+    leaf instead of the whole array, so a sparse delta flight pays d2h
+    for what changed, not for model size."""
+    offsets = [l.offset for l in spec.leaves]
+    out: Dict[int, Tuple[int, int]] = {}
+    for lo, hi in ranges:
+        l0, l1 = _leaf_span(offsets, spec, lo, min(hi, spec.total_bytes))
+        for i in range(l0, l1):
+            ls = spec.leaves[i]
+            a, b = max(lo, ls.offset) - ls.offset, \
+                min(hi, ls.offset + ls.nbytes) - ls.offset
+            if b <= a:
+                continue
+            cur = out.get(i)
+            out[i] = (a, b) if cur is None else (min(cur[0], a),
+                                                 max(cur[1], b))
+    for i, (a, b) in out.items():
+        ls = spec.leaves[i]
+        isz = max(1, np.dtype(ls.dtype).itemsize)
+        out[i] = ((a // isz) * isz, min(-(-b // isz) * isz, ls.nbytes))
+    return out
+
+
 class LeafReader:
     """Random byte-range access over the flat stream with per-snapshot host
     caching (each leaf is device_get at most once per snapshot).  With a
     `budget` ({leaf_idx: bytes that will be read}), a leaf's host copy is
     evicted as soon as its byte ranges are fully consumed, bounding the
     host-cache footprint to the live working set instead of the entire
-    state.  `fetch` batch-transfers a prefetch window's leaves in one
+    state.  With `extents` ({leaf_idx: (rel_lo, rel_hi)}), only that flat
+    byte slice of a leaf crosses the d2h link — sparse delta flights hand
+    the per-flight extents of their surviving work items here.  `fetch`
+    batch-transfers a prefetch window's leaves in one
     `jax.device_get(list)` instead of a synchronous per-leaf read."""
 
     def __init__(self, spec: FlatSpec, leaves: List[Any],
-                 budget: Optional[Dict[int, int]] = None):
+                 budget: Optional[Dict[int, int]] = None,
+                 extents: Optional[Dict[int, Tuple[int, int]]] = None):
         self.spec = spec
         self.leaves = leaves
         self.offsets = [l.offset for l in spec.leaves]
         self._host: Dict[int, np.ndarray] = {}
+        self._base: Dict[int, int] = {}
         self._budget = budget
+        self._extents = extents
         self._consumed: Dict[int, int] = {}
         self.batched_fetches = 0
 
     @staticmethod
     def _as_bytes(arr) -> np.ndarray:
         return np.ascontiguousarray(arr).reshape(-1).view(np.uint8)
+
+    def _device_slice(self, i: int):
+        """The device array (or flat sub-slice) to transfer for leaf `i`,
+        plus the byte offset of that slice within the leaf."""
+        leaf = self.leaves[i]
+        ext = self._extents.get(i) if self._extents else None
+        if ext is None:
+            return leaf, 0
+        ls = self.spec.leaves[i]
+        lo, hi = ext
+        if lo <= 0 and hi >= ls.nbytes:
+            return leaf, 0
+        isz = max(1, np.dtype(ls.dtype).itemsize)
+        # reshape(-1) is free (row-major); the slice stays on device so
+        # only ext bytes cross the d2h link
+        return leaf.reshape(-1)[lo // isz:hi // isz], lo
 
     def fetch(self, idxs: Sequence[int]) -> None:
         """Batched d2h for every listed leaf not yet cached: pre-warm with
@@ -301,20 +400,26 @@ class LeafReader:
         missing = [i for i in idxs if i not in self._host]
         if not missing:
             return
+        slices = []
         for i in missing:
+            dev, base = self._device_slice(i)
+            slices.append(dev)
+            self._base[i] = base
             try:
-                self.leaves[i].copy_to_host_async()
+                dev.copy_to_host_async()
             except AttributeError:
                 pass
         import jax
-        got = jax.device_get([self.leaves[i] for i in missing])
+        got = jax.device_get(slices)
         for i, arr in zip(missing, got):
             self._host[i] = self._as_bytes(arr)
         self.batched_fetches += 1
 
     def _leaf_bytes(self, i: int) -> np.ndarray:
         if i not in self._host:
-            self._host[i] = self._as_bytes(np.asarray(self.leaves[i]))
+            dev, base = self._device_slice(i)
+            self._base[i] = base
+            self._host[i] = self._as_bytes(np.asarray(dev))
         return self._host[i]
 
     def read(self, lo: int, hi: int, out: np.ndarray) -> None:
@@ -325,13 +430,16 @@ class LeafReader:
             a = max(pos, ls.offset)
             b = min(hi, ls.offset + ls.nbytes)
             if b > a:
-                out[a - lo:b - lo] = self._leaf_bytes(i)[a - ls.offset:
-                                                         b - ls.offset]
+                hb = self._leaf_bytes(i)
+                base = self._base.get(i, 0)
+                out[a - lo:b - lo] = hb[a - ls.offset - base:
+                                        b - ls.offset - base]
                 if self._budget is not None:
                     got = self._consumed.get(i, 0) + (b - a)
                     self._consumed[i] = got
                     if got >= self._budget.get(i, float("inf")):
                         self._host.pop(i, None)
+                        self._base.pop(i, None)
             pos = b
             i += 1
         if pos < hi:                                   # zero-pad past end
@@ -405,22 +513,29 @@ class DeviceEncoder:
         u8 = parts[0] if len(parts) == 1 else jnp.concatenate(parts)
         return self._pack(u8)
 
-    def encode(self, task: BucketTask):
+    def encode(self, task: BucketTask, *, want_crc: Optional[bool] = None,
+               prewarm_payload: bool = True):
         """Dispatch the fused encode for `task`; returns (lanes, crc,
-        nbytes) device arrays with the d2h copy already warming."""
+        nbytes) device arrays with the d2h copy already warming.  The
+        delta path forces `want_crc=True` even for parity buckets (the
+        digest of the XOR fold is the skip signal) and defers the
+        payload pre-warm until the digest compare rules the bucket
+        dirty — a clean bucket then d2h's 4 bytes, not the bucket."""
         jnp = self._jnp
         nb = task.hi - task.lo
         if task.kind == 2:
             rows = jnp.stack([self.gather_lanes(lo, hi)
                               for lo, hi in task.sources])
-            want_crc = False                 # parity carries no checksum
+            if want_crc is None:
+                want_crc = False             # parity carries no checksum
         else:
             rows = self.gather_lanes(task.lo, task.hi)[None]
             want_crc = True
         lanes, crc = self._encode(rows, nbytes=nb, want_crc=want_crc,
                                   interpret=self.interpret,
                                   crc_impl=self.crc_impl)
-        for a in (lanes, crc):
+        warm = (lanes, crc) if prewarm_payload else (crc,)
+        for a in warm:
             try:
                 a.copy_to_host_async()
             except AttributeError:
@@ -445,6 +560,11 @@ class PipelineResult:
     l2_seconds: float            # staging-ring writes incl. slot waits
     l3_seconds: float            # begin/end signaling + SMP clean-ack
     wall_seconds: float
+    # ---- dirty-delta bookkeeping (delta-enabled pipelines only)
+    skipped_buckets: int = 0     # buckets never sent (provider or digest)
+    delta_base: Optional[int] = None    # base step of a delta flight
+    digests: Optional[Dict[int, int]] = None   # task idx -> bucket CRC32
+    sent_extents: Tuple[Tuple[int, int], ...] = ()   # buffer-local, merged
 
 
 _STOP = object()
@@ -467,7 +587,9 @@ class PipelineFlight:
                  prev: "Optional[PipelineFlight]" = None,
                  encoder: Optional[DeviceEncoder] = None,
                  affinity: Optional[Tuple[int, ...]] = None,
-                 pipeline: "Optional[SnapshotPipeline]" = None):
+                 pipeline: "Optional[SnapshotPipeline]" = None,
+                 delta: Optional[FlightDelta] = None,
+                 want_digests: bool = False):
         self.smp, self.spec, self.cfg = smp, spec, cfg
         self.schedule, self.budget = schedule, budget
         self.leaves, self.step, self.extra_meta = leaves, step, extra_meta
@@ -475,6 +597,12 @@ class PipelineFlight:
         self.encoder = encoder
         self.affinity = affinity
         self.pipeline = pipeline
+        self.delta = delta
+        # keyframe flights of a delta-enabled pipeline still digest every
+        # bucket: their table is the next delta's compare base
+        self.want_digests = want_digests or delta is not None
+        self._digests: Dict[int, int] = {}   # full-schedule idx -> CRC32
+        self._skipped = 0
         self.result: Optional[PipelineResult] = None
         self.error: Optional[BaseException] = None
         self.done = threading.Event()
@@ -537,71 +665,150 @@ class PipelineFlight:
             self.pump_done.set()
             self._ready.put(_STOP)
 
+    def _work_items(self) -> List[Tuple[int, BucketTask]]:
+        """(full-schedule idx, task) pairs the pump must actually read —
+        provider-skipped buckets are dropped HERE, before any prefetch
+        or `device_get`, and inherit the base flight's digest."""
+        delta = self.delta
+        if delta is None or not delta.skip:
+            return list(enumerate(self.schedule))
+        out = []
+        for i, task in enumerate(self.schedule):
+            if i in delta.skip:
+                self._digests[i] = delta.prev.get(i, 0)
+                self._skipped += 1
+            else:
+                out.append((i, task))
+        return out
+
     def _pump_host(self):
-        reader = LeafReader(self.spec, self.leaves, self.budget)
-        issued: set = set()
         window = max(1, getattr(self.cfg, "prefetch_window", 4))
         yield_every = max(0, getattr(self.cfg, "yield_every_buckets", 4))
         yield_timeout = getattr(self.cfg, "boundary_timeout_s", 0.005)
-        sched = self.schedule
-        for i, task in enumerate(sched):
+        work = self._work_items()
+        budget, extents = self.budget, None
+        if self.delta is not None and len(work) < len(self.schedule):
+            # sparse flight: rebuild the read plan from the SURVIVING
+            # work items so (a) eviction matches what is actually read
+            # and (b) only the touched byte extents of each leaf cross
+            # the d2h link — pay for what changed, not for model size
+            spans: List[Tuple[int, int]] = []
+            for _, t in work:
+                if t.kind == 2 and t.sources:
+                    spans.extend(t.sources)
+                else:
+                    spans.append((t.lo, t.hi))
+            spans = merge_ranges(spans)
+            budget = leaf_budget(self.spec, spans)
+            if self.pipeline is not None and self.pipeline.ranged_fetch:
+                extents = leaf_extents(self.spec, spans)
+        reader = LeafReader(self.spec, self.leaves, budget, extents)
+        issued: set = set()
+        fold = None               # host XOR scratch for fused kind-2 tasks
+        for w, (i, task) in enumerate(work):
             if self._abort.is_set():
                 raise RuntimeError("snapshot pipeline aborted")
             t0 = time.perf_counter()
             fresh = []
-            for nxt in sched[i:i + window]:        # windowed prefetch
-                for li in range(nxt.leaf_lo, nxt.leaf_hi):
-                    if li not in issued:
-                        issued.add(li)
-                        fresh.append(li)
+            for _, nxt in work[w:w + window]:      # windowed prefetch
+                spans = [(nxt.leaf_lo, nxt.leaf_hi)]
+                if nxt.kind == 2 and nxt.sources:
+                    # fused parity reads every stripe source range, not
+                    # just the first one the task's leaf span covers —
+                    # prefetch them all or each falls back to a
+                    # synchronous per-leaf device_get mid-read
+                    spans = [_leaf_span(reader.offsets, self.spec, lo, hi)
+                             for lo, hi in nxt.sources]
+                for l0, l1 in spans:
+                    for li in range(l0, l1):
+                        if li not in issued:
+                            issued.add(li)
+                            fresh.append(li)
             if fresh:
                 reader.fetch(fresh)     # one batched d2h for the window
             self._l1_read += time.perf_counter() - t0
-            if yield_every and i and i % yield_every == 0 \
+            if yield_every and w and w % yield_every == 0 \
                     and not self._draining.is_set():
                 GATE.wait_boundary(yield_timeout)  # yield to training
             buf = self._get_credit()
             nb = task.hi - task.lo
             t0 = time.perf_counter()
             try:
-                reader.read(task.lo, task.hi, buf[:nb])
+                if task.kind == 2 and task.sources:
+                    # host-side fused parity: fold the n-1 stripe source
+                    # ranges so the ring carries ONE pre-encoded block
+                    reader.read(task.sources[0][0], task.sources[0][1],
+                                buf[:nb])
+                    if fold is None:
+                        fold = np.empty(self.cfg.bucket_bytes, np.uint8)
+                    for lo, hi in task.sources[1:]:
+                        reader.read(lo, hi, fold[:nb])
+                        np.bitwise_xor(buf[:nb], fold[:nb], out=buf[:nb])
+                else:
+                    reader.read(task.lo, task.hi, buf[:nb])
             except BaseException:
                 self._free.put(buf)                # never leak a credit
                 raise
             self._l1_read += time.perf_counter() - t0
-            self._ready.put((task, buf, buf[:nb], nb, None))
+            # host digests (and the digest-compare skip) run in the L2
+            # stager, not here: L1 is the device-read level and stays
+            # read-only — the device path keeps CRC on the accelerator
+            # for the same reason
+            self._ready.put((task, buf, buf[:nb], nb, None, i))
 
     def _pump_device(self):
         enc = self.encoder
         window = max(1, getattr(self.cfg, "prefetch_window", 4))
         yield_every = max(0, getattr(self.cfg, "yield_every_buckets", 4))
         yield_timeout = getattr(self.cfg, "boundary_timeout_s", 0.005)
-        sched = self.schedule
+        delta = self.delta
+        digesting = self.want_digests
+        # digest compare pending: hold the payload d2h until the 4-byte
+        # digest ruled the bucket dirty
+        defer = delta is not None and delta.digest
+        work = self._work_items()
         pending: Dict[int, tuple] = {}
-        for i, task in enumerate(sched):
+        for w, (i, task) in enumerate(work):
             if self._abort.is_set():
                 raise RuntimeError("snapshot pipeline aborted")
             t0 = time.perf_counter()
-            for j in range(i, min(i + window, len(sched))):
+            for x in range(w, min(w + window, len(work))):
+                j, tj = work[x]
                 if j not in pending:       # encode a window ahead; the
-                    pending[j] = enc.encode(sched[j])   # kernels + d2h run
-            self._l1_read += time.perf_counter() - t0   # async under this
-            if yield_every and i and i % yield_every == 0 \
+                    pending[j] = enc.encode(  # kernels + d2h run async
+                        tj, want_crc=True if digesting else None,
+                        prewarm_payload=not defer)
+            self._l1_read += time.perf_counter() - t0   # under this loop
+            if yield_every and w and w % yield_every == 0 \
                     and not self._draining.is_set():
                 GATE.wait_boundary(yield_timeout)
-            buf = self._get_credit()       # token: bounds queued buckets
             lanes, crc, nb = pending.pop(i)
             t0 = time.perf_counter()
+            crc_val = enc.bucket_crc(np.asarray(crc), nb) \
+                if digesting or task.kind == 0 else None
+            if digesting:
+                self._digests[i] = crc_val
+            if defer and delta.prev.get(i) == crc_val:
+                self._skipped += 1         # clean: only the digest d2h'd
+                self._l1_read += time.perf_counter() - t0
+                continue
+            self._l1_read += time.perf_counter() - t0
+            buf = self._get_credit()       # token: bounds queued buckets
+            t0 = time.perf_counter()
             try:
+                if defer:                  # dirty after all: warm it now
+                    try:
+                        lanes.copy_to_host_async()
+                    except AttributeError:
+                        pass
                 host = np.asarray(lanes)               # d2h (pre-warmed)
                 payload = host.view(np.uint8)[:nb]
-                crc_val = enc.bucket_crc(np.asarray(crc), nb) \
-                    if task.kind == 0 else None
             except BaseException:
                 self._free.put(buf)
                 raise
             self._l1_read += time.perf_counter() - t0
-            self._ready.put((task, buf, payload, nb, crc_val))
+            self._ready.put((task, buf, payload, nb,
+                             crc_val if task.kind == 0 else None, i))
 
     # ------------------------------------------------------------- L2
     def _stage(self):
@@ -612,6 +819,9 @@ class PipelineFlight:
             t_l2 = 0.0
             sent = 0
             crcs: List[Tuple[int, int, int]] = []      # (dst, nbytes, crc)
+            extents: List[Tuple[int, int]] = []        # buffer-local, sent
+            own_bytes = self.smp.layout.own_bytes
+            delta = self.delta
             prev = self.prev
             if prev is not None:
                 # the SMP holds at most one dirty buffer: begin only after
@@ -619,14 +829,39 @@ class PipelineFlight:
                 # pipe, so the conn is ours alone from here)
                 self._wait_event(prev.done, "predecessor clean-ack")
             t0 = time.perf_counter()
-            self.smp.begin(self.step)
+            if delta is not None:
+                # confirmed exchange: the SMP seeds the new shard buffer
+                # by copying the base (latest clean) buffer — if the base
+                # rotated away the delta would publish garbage, so a miss
+                # aborts the flight (nothing published)
+                if not self.smp.begin(self.step, base_step=delta.base_step):
+                    raise DeltaBaseMismatch(
+                        f"delta base step {delta.base_step} is not the "
+                        f"SMP's latest clean buffer")
+            else:
+                self.smp.begin(self.step)
             t_l3 = time.perf_counter() - t0
+            host_digesting = self.want_digests and self.encoder is None
             while True:
                 item = self._ready.get()
                 if item is _STOP:
                     break
-                task, buf, payload, nb, crc_val = item
+                task, buf, payload, nb, crc_val, idx = item
                 t0 = time.perf_counter()
+                if host_digesting:
+                    # host digests (and the bit-identical skip) happen at
+                    # this level: the pump hands raw reads over and never
+                    # pays the CRC pass on the device-read path
+                    crc_val = zlib.crc32(payload) & 0xFFFFFFFF
+                    self._digests[idx] = crc_val
+                    if delta is not None and delta.digest \
+                            and delta.prev.get(idx) == crc_val:
+                        self._skipped += 1     # bit-identical: skip send
+                        self._free.put(buf)
+                        t_l2 += time.perf_counter() - t0
+                        continue
+                    if task.kind != 0:
+                        crc_val = None
                 try:
                     self.smp.send_bucket(task.kind, task.dst, payload)
                 finally:
@@ -635,11 +870,21 @@ class PipelineFlight:
                 sent += nb
                 if crc_val is not None:
                     crcs.append((task.dst, nb, crc_val))
+                if self.want_digests:
+                    extents.append(task_local_extent(task, own_bytes))
             if self._abort.is_set():                   # no `end`: dirty
                 return                                 # buffer stays unseen
             meta = {"spec": self.spec.to_json(), "step": self.step,
                     "extra": self.extra_meta}
             t0 = time.perf_counter()
+            if self.want_digests:
+                # delta-enabled pipeline: the full-schedule digest table
+                # covers every own-data bucket (fresh for read buckets,
+                # inherited for skipped ones), so the own-region CRC and
+                # the per-stripe table are derived trainer-side even when
+                # only a handful of buckets were re-sent
+                crcs = [(t.dst, t.hi - t.lo, self._digests[i])
+                        for i, t in enumerate(self.schedule) if t.kind == 0]
             if crcs:
                 # device encode path: per-bucket digests -> one combined
                 # own-region CRC plus the per-stripe table (one digest per
@@ -665,7 +910,12 @@ class PipelineFlight:
                 step=self.step, clean_step=clean, bytes_sent=sent,
                 l1_seconds=self._l1_read, l1_stall_seconds=self._l1_stall,
                 l2_seconds=t_l2, l3_seconds=t_l3,
-                wall_seconds=time.perf_counter() - self._t0)
+                wall_seconds=time.perf_counter() - self._t0,
+                skipped_buckets=self._skipped,
+                delta_base=None if delta is None else delta.base_step,
+                digests=dict(self._digests) if self.want_digests else None,
+                sent_extents=tuple(merge_ranges(extents))
+                if self.want_digests else ())
         except BaseException as e:
             if self.error is None:
                 self.error = e
@@ -725,12 +975,18 @@ class SnapshotPipeline:
                  stripe_plan: Sequence[Tuple[int, int]]):
         self.smp, self.spec, self.cfg = smp, spec, cfg
         self.device_encode = resolve_device_encode(cfg)
+        self.ranged_fetch = resolve_ranged_fetch(cfg)
         self.crc_impl = getattr(cfg, "crc_impl", "pallas")
         self.max_flights = max(1, int(getattr(cfg, "max_flights", 1)))
+        self.delta_enabled = bool(getattr(cfg, "delta", False))
+        # delta mode always fuses parity (host path included): a delta
+        # flight refreshes affected parity extents with fully-folded plain
+        # writes — XOR-accumulate (kind 1) would need the base parity
+        # zeroed first, which the base-copy begin precisely must not do
         self.schedule = build_schedule(
             spec, own_plan, stripe_plan, cfg.bucket_bytes,
             opt_first=getattr(cfg, "opt_first", True),
-            fuse_parity=self.device_encode)
+            fuse_parity=self.device_encode or self.delta_enabled)
         self.budget = leaf_budget(
             spec, [(lo, hi) for _, lo, hi in own_plan] + list(stripe_plan))
         self.scratch_buffers = max(1, getattr(cfg, "scratch_buffers", 2))
@@ -760,8 +1016,8 @@ class SnapshotPipeline:
             f = f.prev
         return n
 
-    def start(self, leaves: List[Any], step: int,
-              extra_meta: dict) -> PipelineFlight:
+    def start(self, leaves: List[Any], step: int, extra_meta: dict,
+              delta: Optional[FlightDelta] = None) -> PipelineFlight:
         if self.live_flights() >= self.max_flights:
             # the engine refuses before calling; this is the backstop for
             # direct callers — the flight chain (and the SMP's triple
@@ -779,6 +1035,7 @@ class SnapshotPipeline:
         flight = PipelineFlight(
             self.smp, self.spec, self.cfg, self.schedule, self.budget,
             leaves, step, extra_meta, free=self._free, prev=prev,
-            encoder=encoder, affinity=self.affinity, pipeline=self)
+            encoder=encoder, affinity=self.affinity, pipeline=self,
+            delta=delta, want_digests=self.delta_enabled)
         self._last = flight
         return flight.launch()

@@ -27,8 +27,8 @@ from typing import Any, Dict, List, Optional, Sequence, Tuple
 import numpy as np
 
 from repro.core.loader import (
-    CHUNK_BYTES, CrcMismatch, FileSource, LoadStats, ShmSource, build_plan,
-    load_bytes, load_tree, probe_crc, stream_crc,
+    CHUNK_BYTES, ChainSource, CrcMismatch, DeltaLayer, FileSource, LoadStats,
+    ShmSource, build_plan, load_bytes, load_tree, probe_crc, stream_crc,
 )
 from repro.core.smp import ReadOnlyNode
 from repro.core.treebytes import FlatSpec
@@ -242,6 +242,7 @@ def _spec_of(views, holders, step) -> FlatSpec:
 
 # --------------------------------------------------------------- tier 3
 _CKPT_RE = re.compile(r"^step-(\d+)-node-(\d+)\.reft$")
+_DELTA_RE = re.compile(r"^step-(\d+)-from-(\d+)-node-(\d+)\.reftd$")
 
 
 def checkpoint_families(ckpt_dir: str) -> Dict[int, set]:
@@ -257,13 +258,85 @@ def checkpoint_families(ckpt_dir: str) -> Dict[int, set]:
     return families
 
 
-def latest_checkpoint_step(ckpt_dir: str,
-                           n: Optional[int] = None) -> Optional[int]:
-    """Newest persisted step; with `n`, newest COMPLETE family (all n
-    member shards on disk) — torn families are not restorable."""
+def delta_families(ckpt_dir: str) -> Dict[int, Dict[int, set]]:
+    """{step: {base_step: {nodes on disk}}} from `.reftd` filenames.  The
+    base step rides in the NAME (`step-S-from-B-node-N.reftd`) so chain
+    resolution and GC liveness never open a file."""
+    fams: Dict[int, Dict[int, set]] = {}
+    for p in glob.glob(os.path.join(ckpt_dir, "step-*-from-*-node-*.reftd")):
+        m = _DELTA_RE.match(os.path.basename(p))
+        if not m:
+            continue
+        step, base, node = (int(m.group(1)), int(m.group(2)),
+                            int(m.group(3)))
+        fams.setdefault(step, {}).setdefault(base, set()).add(node)
+    return fams
+
+
+def resolve_chain(ckpt_dir: str, step: int,
+                  full: Optional[Dict[int, set]] = None,
+                  deltas: Optional[Dict[int, Dict[int, set]]] = None
+                  ) -> Optional[Tuple[int, List[Tuple[int, int]]]]:
+    """Resolve `step` against the on-disk delta chains: returns
+    `(keyframe_step, links)` with links `[(step, base_step), ...]`
+    oldest -> newest ending at `step`, or None when no chain bottoms out
+    at a full `.reft` family.  A full family at `step` itself resolves
+    to `(step, [])`.  Cycles and dangling bases fall through to None."""
+    if full is None:
+        full = checkpoint_families(ckpt_dir)
+    if deltas is None:
+        deltas = delta_families(ckpt_dir)
+
+    def walk(s: int, seen: frozenset
+             ) -> Optional[Tuple[int, List[Tuple[int, int]]]]:
+        if s in full:
+            return s, []
+        if s in seen or s not in deltas:
+            return None
+        for base in sorted(deltas[s], reverse=True):
+            r = walk(base, seen | {s})
+            if r is not None:
+                kf, links = r
+                return kf, links + [(s, base)]
+        return None
+
+    return walk(int(step), frozenset())
+
+
+def _chain_complete(links: Sequence[Tuple[int, int]],
+                    deltas: Dict[int, Dict[int, set]], n: int) -> bool:
+    want = set(range(n))
+    return all(deltas.get(s, {}).get(b, set()) & want == want
+               for s, b in links)
+
+
+def restorable_steps(ckpt_dir: str, n: Optional[int] = None) -> List[int]:
+    """Sorted steps with a restorable on-disk family; with `n`, only
+    COMPLETE ones (all n member shards).  A delta step counts when its
+    whole chain — every `.reftd` link plus the keyframe it bottoms out
+    at — is complete; a torn link poisons every dependent step."""
     families = checkpoint_families(ckpt_dir)
+    deltas = delta_families(ckpt_dir)
     steps = [s for s, nodes in families.items()
              if n is None or nodes == set(range(n))]
+    for s in deltas:
+        if s in families:
+            continue
+        res = resolve_chain(ckpt_dir, s, families, deltas)
+        if res is None:
+            continue
+        kf, links = res
+        if n is None or (families.get(kf) == set(range(n))
+                         and _chain_complete(links, deltas, n)):
+            steps.append(s)
+    return sorted(steps)
+
+
+def latest_checkpoint_step(ckpt_dir: str,
+                           n: Optional[int] = None) -> Optional[int]:
+    """Newest persisted step; with `n`, newest COMPLETE (chain-
+    resolvable) family — torn families are not restorable."""
+    steps = restorable_steps(ckpt_dir, n)
     return max(steps) if steps else None
 
 
@@ -292,6 +365,53 @@ def _open_family(ckpt_dir: str, step: int, nodes: set) -> FileSource:
     return FileSource(_family_paths(ckpt_dir, step, sorted(want)))
 
 
+def _delta_paths(ckpt_dir: str, step: int, base: int, nodes) -> Dict[int, str]:
+    return {node: os.path.join(
+        ckpt_dir, f"step-{step}-from-{base}-node-{node}.reftd")
+        for node in nodes}
+
+
+def _open_chain(ckpt_dir: str, step: int,
+                full: Optional[Dict[int, set]] = None,
+                deltas: Optional[Dict[int, Dict[int, set]]] = None):
+    """Attach `step`, resolving a delta chain back to its keyframe when
+    `step` has no full family of its own.  Returns a source with the
+    standard interface (`FileSource` for a full family, `ChainSource`
+    over `DeltaLayer`s otherwise); completeness of every link is checked
+    against the keyframe's OWN saved layout, so an n-member chain
+    restores under any current group size."""
+    if full is None:
+        full = checkpoint_families(ckpt_dir)
+    if deltas is None:
+        deltas = delta_families(ckpt_dir)
+    if step in full:
+        return _open_family(ckpt_dir, step, full[step])
+    res = resolve_chain(ckpt_dir, step, full, deltas)
+    if res is None:
+        raise RecoveryError(
+            f"no resolvable delta chain for step {step} in {ckpt_dir}")
+    kf, links = res
+    base = _open_family(ckpt_dir, kf, full[kf])
+    layers: List[DeltaLayer] = []
+    try:
+        want = set(range(base.n))
+        for s, b in links:
+            have = deltas.get(s, {}).get(b, set())
+            if have & want != want:
+                missing = sorted(want - have)[0]
+                raise RecoveryError(
+                    f"delta family step {s} (base {b}) is torn: missing "
+                    f"step-{s}-from-{b}-node-{missing}.reftd")
+            layers.append(DeltaLayer.from_files(
+                _delta_paths(ckpt_dir, s, b, sorted(want))))
+        return ChainSource(base, layers)
+    except BaseException:
+        for ly in layers:
+            ly.close()
+        base.close()
+        raise
+
+
 def restore_from_checkpoint(ckpt_dir: str, n: int, template: Any,
                             step: Optional[int] = None,
                             need: Optional[Sequence[Tuple[int, int]]] = None,
@@ -306,17 +426,21 @@ def restore_from_checkpoint(ckpt_dir: str, n: int, template: Any,
     if not st.target_n:       # the ladder presets target.sg_size; keep it
         st.target_n = n
     families = checkpoint_families(ckpt_dir)
+    deltas = delta_families(ckpt_dir)
+    resolvable = set(families) | {
+        s for s in deltas
+        if resolve_chain(ckpt_dir, s, families, deltas) is not None}
     if step is not None:
-        if step not in families:
+        if step not in resolvable:
             raise RecoveryError(f"no checkpoint for step {step} "
                                 f"in {ckpt_dir}")
         candidates = [step]
     else:
-        candidates = sorted(families, reverse=True)
+        candidates = sorted(resolvable, reverse=True)
     last_err: Optional[Exception] = None
     for cand in candidates:
         try:
-            src = _open_family(ckpt_dir, cand, families[cand])
+            src = _open_chain(ckpt_dir, cand, families, deltas)
         except (RecoveryError, FileNotFoundError, EOFError, KeyError,
                 TypeError, pickle.UnpicklingError) as e:
             last_err = e                # malformed head = unusable family
@@ -355,6 +479,43 @@ def restore_from_checkpoint(ckpt_dir: str, n: int, template: Any,
 
 
 # --------------------------------------------------------------- tier 4
+def _open_remote_chain(store, prefix: str, step: int, retry=None):
+    """Attach a remote family at `step`, following manifest `base_step`
+    links back to a full keyframe family.  Returns `(src, holders)`:
+    the chain (or plain) source plus the members whose shard objects all
+    exist at EVERY link — a member missing any link of its chain cannot
+    serve reads and is left to RAIM5 reconstruction."""
+    from repro.core.loader import ObjectSource
+    from repro.store.base import retrier
+    from repro.store.manifest import load_manifest, manifest_base_step
+
+    wrap = retrier(retry)
+    man = load_manifest(store, prefix, step, retry=retry)
+    link_mans: List[dict] = []           # newest -> oldest delta manifests
+    seen = {int(step)}
+    while True:
+        base = manifest_base_step(man)
+        if base is None:
+            break
+        link_mans.append(man)
+        if base in seen:
+            raise RecoveryError(
+                f"remote delta chain for step {step} cycles at {base}")
+        seen.add(base)
+        man = load_manifest(store, prefix, base, retry=retry)
+    base_man = man
+    src = ObjectSource(store, base_man, retry=wrap)
+    if link_mans:
+        src = ChainSource(src, [DeltaLayer.from_objects(store, m, retry=wrap)
+                                for m in reversed(link_mans)])
+    holders = []
+    for nd in range(src.n):
+        if all(nd in m["nodes"] and store.exists(m["nodes"][nd]["key"])
+               for m in [base_man] + link_mans):
+            holders.append(nd)
+    return src, holders
+
+
 def restore_from_objstore(store, prefix: str, n: int, template: Any,
                           step: Optional[int] = None,
                           need: Optional[Sequence[Tuple[int, int]]] = None,
@@ -368,14 +529,12 @@ def restore_from_objstore(store, prefix: str, n: int, template: Any,
     is the same `_load_with_demotion` machinery every other tier uses.
     Only manifest-complete families are candidates, so a torn upload can
     never be surfaced."""
-    from repro.core.loader import ObjectSource
-    from repro.store.base import StoreError, retrier
-    from repro.store.manifest import load_manifest, object_families
+    from repro.store.base import StoreError
+    from repro.store.manifest import object_families
 
     st = stats if stats is not None else LoadStats()
     if not st.target_n:
         st.target_n = n
-    wrap = retrier(retry)
     try:
         families = object_families(store, prefix)
     except StoreError as e:
@@ -390,17 +549,16 @@ def restore_from_objstore(store, prefix: str, n: int, template: Any,
     last_err: Optional[Exception] = None
     for cand in candidates:
         try:
-            man = load_manifest(store, prefix, cand, retry=retry)
-            src = ObjectSource(store, man, retry=wrap)
+            # a manifest-complete family names all saved_n shards; a
+            # shard object deleted since (GC race, remote loss) becomes
+            # a missing member the RAIM5 demotion path reconstructs.
+            # Delta manifests chain through `base_step` links back to a
+            # full keyframe family, served as one overlay source.
+            src, holders = _open_remote_chain(store, prefix, cand,
+                                              retry=retry)
             saved_n = src.n
             st.saved_n = saved_n
             st.resharded = bool(n) and saved_n != n
-            # a manifest-complete family names all saved_n shards; a
-            # shard object deleted since (GC race, remote loss) becomes
-            # a missing member the RAIM5 demotion path reconstructs
-            holders = [nd for nd in range(saved_n)
-                       if nd in man["nodes"]
-                       and store.exists(man["nodes"][nd]["key"])]
             absent = [nd for nd in range(saved_n) if nd not in holders]
             meta = spec = None
             for nd in holders:

@@ -197,22 +197,48 @@ def _smp_main(conn, run: str, node: int, n: int, total_bytes: int,
                 throttle = bucket.consume if bucket else None
                 head_blob, digests = _head_and_meta(node, lay, idx, step,
                                                     meta_shm)
-                _persist_buffer(path, node, lay, idx, step, buf_np,
-                                meta_shm, seq, head_blob=head_blob,
-                                throttle=throttle)
+                delta = opts.get("delta")
+                if delta is not None:
+                    # dirty-delta persist: the shard object carries only
+                    # the buffer-local extents rewritten since
+                    # `base_step`, but the head keeps the FULL merged
+                    # meta + per-stripe digest table, so a chain-resolved
+                    # read verifies exactly like a full shard
+                    extents = [(int(a), int(b))
+                               for a, b in delta.get("extents", ())]
+                    head = pickle.loads(head_blob)
+                    head["base_step"] = int(delta["base_step"])
+                    head["extents"] = extents
+                    head_blob = pickle.dumps(head)
+                    digests["base_step"] = int(delta["base_step"])
+                    digests["extents"] = extents
+                    _persist_delta_buffer(path, buf_np[idx], extents, seq,
+                                          head_blob, throttle=throttle)
+                else:
+                    _persist_buffer(path, node, lay, idx, step, buf_np,
+                                    meta_shm, seq, head_blob=head_blob,
+                                    throttle=throttle)
                 info = {}
                 remote = opts.get("remote")
                 if remote:
                     # tier-4: stream the same pinned buffer to the object
                     # store, one multipart part per RAIM5 stripe block —
                     # still on this worker thread, snapshots keep flowing
-                    from repro.store import store_from_config, upload_shard
+                    from repro.store import store_from_config
                     store = store_from_config(remote["store"])
-                    seg = lay.bs if lay.n > 1 else lay.own_bytes
-                    up = upload_shard(store, remote["key"], head_blob,
-                                      buf_np[idx], seg, lay.own_bytes,
-                                      retry=remote.get("retry"),
-                                      throttle=throttle)
+                    if delta is not None:
+                        from repro.store import upload_delta
+                        up = upload_delta(store, remote["key"], head_blob,
+                                          buf_np[idx], extents,
+                                          retry=remote.get("retry"),
+                                          throttle=throttle)
+                    else:
+                        from repro.store import upload_shard
+                        seg = lay.bs if lay.n > 1 else lay.own_bytes
+                        up = upload_shard(store, remote["key"], head_blob,
+                                          buf_np[idx], seg, lay.own_bytes,
+                                          retry=remote.get("retry"),
+                                          throttle=throttle)
                     up.update(digests)
                     info["upload"] = up
                 if bucket:
@@ -243,7 +269,8 @@ def _smp_main(conn, run: str, node: int, n: int, total_bytes: int,
             msg = conn.recv()
             op = msg[0]
             if op == "begin":
-                _, step = msg
+                step = msg[1]
+                base_step = msg[2] if len(msg) > 2 else None
                 # pick the oldest non-clean-latest, non-pinned buffer as
                 # dirty; with one persist in flight at least one candidate
                 # always exists (NBUF=3), but queued-up persists may pin
@@ -260,7 +287,22 @@ def _smp_main(conn, run: str, node: int, n: int, total_bytes: int,
                 dirty = min(cands)[1]
                 ctl[2 + 2 * dirty] = step
                 ctl[3 + 2 * dirty] = ST_DIRTY
-                if lay.parity_bytes:
+                if base_step is not None:
+                    # delta flight: seed the new shard from the base
+                    # (latest clean) buffer so unchanged bytes — own AND
+                    # parity — carry over; only the delta buckets will be
+                    # rewritten.  Copying (not writing the clean buffer in
+                    # place) preserves the 3-buffer rotation invariant: an
+                    # aborted delta never damages the published base.  A
+                    # base miss is acked False — the trainer aborts the
+                    # flight and takes a keyframe instead.
+                    ok = (latest >= 0
+                          and int(ctl[3 + 2 * latest]) == ST_CLEAN
+                          and int(ctl[2 + 2 * latest]) == int(base_step))
+                    if ok:
+                        buf_np[dirty][:] = buf_np[latest]
+                    _send(("base", step, bool(ok)))
+                elif lay.parity_bytes:
                     buf_np[dirty][lay.own_bytes:] = 0
             elif op == "bucket":
                 _, slot, kind, dst, nb = msg
@@ -458,6 +500,29 @@ def _head_and_meta(node, lay, idx, step, meta_shm):
     return pickle.dumps(head), digests
 
 
+def _persist_delta_buffer(path, buf, extents, tag, head_blob,
+                          throttle=None):
+    """Stream a `.reftd` delta shard atomically: head blob (which
+    records `base_step` + `extents`) followed by the raw bytes of each
+    buffer-local extent, concatenated in order."""
+    tmp = _tmp_name(path, tag)
+    try:
+        with open(tmp, "wb") as f:
+            if throttle is not None:
+                throttle(len(head_blob))
+            f.write(head_blob)
+            for lo, hi in extents:
+                _stream_write(f, buf[lo:hi], throttle=throttle)
+            f.flush()
+            os.fsync(f.fileno())
+        os.replace(tmp, path)
+    finally:
+        try:
+            os.unlink(tmp)                 # no-op after a clean replace
+        except FileNotFoundError:
+            pass
+
+
 def _persist_buffer(path, node, lay, idx, step, buf_np, meta_shm, tag,
                     head_blob=None, throttle=None):
     """Stream buffer `idx` (already persist-pinned by the caller) to
@@ -516,6 +581,7 @@ class SMPHandle:
         self._rx_lock = threading.Lock()
         self._rx_clean: deque = deque()
         self._rx_pong: deque = deque()
+        self._rx_base: deque = deque()
         self._rx_persist: Dict[int, tuple] = {}
         self._stale_persists: set = set()      # timed-out seqs: drop late
         self._pending_persists: List[int] = []  # fire order
@@ -552,6 +618,8 @@ class SMPHandle:
             self._rx_clean.append(msg)
         elif tag == "pong":
             self._rx_pong.append(msg)
+        elif tag == "base":
+            self._rx_base.append(msg)
         elif tag in ("persisted", "persist-error"):
             seq = msg[1]
             if seq in self._stale_persists:
@@ -591,8 +659,19 @@ class SMPHandle:
             self._conn.send(msg)
 
     # -- snapshot protocol -------------------------------------------------
-    def begin(self, step: int):
-        self._send(("begin", int(step)))
+    def begin(self, step: int, base_step: Optional[int] = None) -> bool:
+        """Open a snapshot flight.  With `base_step`, open a *delta*
+        flight: the SMP seeds the dirty buffer from the clean shard of
+        `base_step` and acks whether that base is still its latest clean
+        step — False means the caller must abort and take a keyframe."""
+        if base_step is None:
+            self._send(("begin", int(step)))
+            return True
+        self._send(("begin", int(step), int(base_step)))
+        msg = self._await(
+            lambda: self._rx_base.popleft() if self._rx_base else None,
+            60.0, "SMP delta-begin ack timeout")
+        return bool(msg[2])
 
     def send_bucket(self, kind: int, dst: int, payload: np.ndarray):
         # ring-slot credit: the cross-process BoundedSemaphore the SMP

@@ -27,7 +27,9 @@ from typing import Any, Dict, List, Optional, Tuple
 import numpy as np
 
 from repro.core import raim5
-from repro.core.pipeline import (LeafReader, PipelineFlight, SnapshotPipeline,
+from repro.core.delta import DeltaLog, DeltaTracker
+from repro.core.pipeline import (DeltaBaseMismatch, LeafReader,
+                                 PipelineFlight, SnapshotPipeline,
                                  leaf_budget, resolve_affinity,
                                  resolve_device_encode)
 from repro.core.smp import NodeLayout, SMPHandle
@@ -67,6 +69,17 @@ class ReftConfig:
     persist_bw_limit: float = 0.0    # token-bucket cap (bytes/s) on the
                                      # SMP's background persist + upload
                                      # writes; 0 = unlimited
+    # --- dirty-delta snapshots (docs/API.md "Delta snapshots") ---
+    delta: bool = False              # delta flights between full keyframes
+                                     # (requires pipeline=True, max_flights=1)
+    delta_keyframe: int = 8          # force a full keyframe every N flights
+    delta_dirty_threshold: float = 0.6   # dirty fraction above which a
+                                     # delta saves nothing -> keyframe
+    delta_digest: bool = True        # per-bucket CRC compare vs the base
+                                     # (off: provider ranges only)
+    ranged_fetch: str = "auto"       # sparse delta flights d2h only the
+                                     # touched leaf extents: "auto" (on iff
+                                     # a real accelerator) | "on" | "off"
 
 
 class SnapshotEngine:
@@ -96,6 +109,24 @@ class SnapshotEngine:
                                               self._own, self._stripe)
         self._max_flights = max(1, int(getattr(cfg, "max_flights", 1))) \
             if cfg.pipeline else 1
+        # dirty-delta snapshotting: only meaningful on the pipelined path
+        # with a single flight in the air (a delta's base must be the
+        # SMP's latest clean step, which overlap would race)
+        self._tracker: Optional[DeltaTracker] = None
+        self._delta_log: Optional[DeltaLog] = None
+        self._dirty_provider = None
+        if getattr(cfg, "delta", False) and cfg.pipeline \
+                and self._max_flights == 1:
+            self._tracker = DeltaTracker(
+                keyframe_every=max(1, int(getattr(cfg, "delta_keyframe",
+                                                  8))),
+                dirty_threshold=float(getattr(cfg, "delta_dirty_threshold",
+                                              0.6)),
+                digest=bool(getattr(cfg, "delta_digest", True)))
+            self._delta_log = DeltaLog()
+        self._flight_bytes = sum(t.hi - t.lo
+                                 for t in self._pipeline.schedule) \
+            if self._pipeline is not None else self.spec.total_bytes
         self._flights: List[PipelineFlight] = []
         self._thread: Optional[threading.Thread] = None    # serial mode
         self._err: Optional[BaseException] = None
@@ -116,7 +147,9 @@ class SnapshotEngine:
                       "persist_upload_retries": 0,
                       "device_encode": (self._pipeline.device_encode
                                         if self._pipeline else False),
-                      "stager_affinity": None}
+                      "stager_affinity": None,
+                      "skipped_buckets": 0, "delta_flights": 0,
+                      "keyframe_flights": 0, "delta_base_misses": 0}
 
     @property
     def _flight(self) -> Optional[PipelineFlight]:
@@ -168,8 +201,17 @@ class SnapshotEngine:
         leaves = leaf_arrays(state)                    # pin the references
         if self._pipeline is not None:
             overlapped = any(f.in_flight() for f in self._flights)
+            plan = None
+            if self._tracker is not None:
+                ranges = None
+                if self._dirty_provider is not None:
+                    ranges = self._dirty_provider()
+                plan = self._tracker.plan(self.last_clean_step,
+                                          self._pipeline.schedule, ranges,
+                                          self.spec.total_bytes)
             self._flights.append(self._pipeline.start(leaves, int(step),
-                                                      extra_meta or {}))
+                                                      extra_meta or {},
+                                                      delta=plan))
             if overlapped:
                 self.stats["overlapped_flights"] += 1
             return True
@@ -179,6 +221,15 @@ class SnapshotEngine:
             daemon=True, name=f"snap-n{self.node}")
         self._thread.start()
         return True
+
+    def set_dirty_provider(self, fn) -> None:
+        """Install the delta saving path's dirtiness signal: a callable
+        returning the merged GLOBAL byte ranges that may have changed
+        since the previous flight (or None for "unknown — digest-compare
+        everything").  E.g. `repro.core.delta.expert_dirty_ranges` over
+        the MoE router's `TOUCHED.consume()` mask.  Consumed once per
+        launched flight; no-op for non-delta engines."""
+        self._dirty_provider = fn
 
     def snapshot_sync(self, state: Any, step: int,
                       extra_meta: dict = None) -> int:
@@ -228,13 +279,11 @@ class SnapshotEngine:
                 res = flight.wait(0.0)         # collect its real outcome
             except BaseException as e:
                 self._flights.pop(0)
-                if self._err is None:
-                    self._err = e
+                self._flight_failed(e)
                 return                         # surfaced by _raise_pending
         except BaseException as e:
             self._flights.pop(0)
-            if self._err is None:
-                self._err = e
+            self._flight_failed(e)
             return                             # surfaced by _raise_pending
         self._flights.pop(0)
         self.last_clean_step = res.clean_step
@@ -248,10 +297,39 @@ class SnapshotEngine:
         st["l3_seconds"] += res.l3_seconds
         if self._pipeline is not None:
             st["stager_affinity"] = self._pipeline.applied_affinity
+        if self._tracker is not None:
+            was_delta = res.delta_base is not None
+            frac = (res.bytes_sent / self._flight_bytes
+                    if self._flight_bytes else 1.0)
+            self._tracker.commit(res.clean_step, res.digests, was_delta,
+                                 frac)
+            self._delta_log.record(res.clean_step,
+                                   res.sent_extents if was_delta else None)
+            st["skipped_buckets"] += res.skipped_buckets
+            st["delta_flights" if was_delta else "keyframe_flights"] += 1
+
+    def _flight_failed(self, e: BaseException) -> None:
+        """A flight died without publishing: remember the error AND drop
+        the delta base — provider dirty ranges consumed by the dead
+        flight are lost, so the next flight must be a full keyframe."""
+        if self._tracker is not None:
+            self._tracker.invalidate()
+        if self._err is None:
+            self._err = e
 
     def _raise_pending(self):
         if self._err is not None:
             err, self._err = self._err, None
+            if isinstance(err, DeltaBaseMismatch):
+                # the SMP's clean buffer rotated away from the planned
+                # base (e.g. under persist-pin pressure): the flight
+                # aborted cleanly, nothing was published, and the tracker
+                # was already invalidated — next flight keyframes.  Not a
+                # fault: training and snapshotting both continue.
+                if self._tracker is not None:
+                    self._tracker.base_misses += 1
+                self.stats["delta_base_misses"] += 1
+                return
             if isinstance(err, (BrokenPipeError, EOFError, ConnectionError,
                                 TimeoutError, OSError)):
                 # SMP process is gone: the paper's stance is that training
@@ -322,20 +400,41 @@ class SnapshotEngine:
             self._err = e
 
     # ------------------------------------------------------------ ckpt
+    def delta_extents_since(self, base: Optional[int],
+                            step: int) -> Optional[List[Tuple[int, int]]]:
+        """Buffer-local extents a `.reftd` persisted at `step` must carry
+        relative to a base persisted at `base`, or None when no valid
+        chain exists (keyframe in the span, unknown base, delta off) and
+        the persist must be a full `.reft`."""
+        if self._delta_log is None or base is None:
+            return None
+        return self._delta_log.extents_since(int(base), int(step))
+
     def persist_async(self, path: str, step: Optional[int] = None,
-                      remote: Optional[dict] = None) -> int:
+                      remote: Optional[dict] = None,
+                      delta_base: Optional[int] = None) -> int:
         """REFT-Ckpt, overlapped: fire the persist and return a ticket
         (the SMP streams the pinned shard to disk on its own background
         thread while snapshots keep flowing).  Collect with
         `poll_persists` / `persist_join` / `persist_wait_all`.
         `remote` ({store, key, retry}) asks the SMP worker to mirror the
-        shard to an object store — tier 4 — after the local write."""
+        shard to an object store — tier 4 — after the local write.
+        `delta_base` (with an explicit `step`) asks for a `.reftd` delta
+        shard carrying only the extents rewritten since that base — the
+        caller must have verified the chain via `delta_extents_since`."""
         opts = {}
         bw = float(getattr(self.cfg, "persist_bw_limit", 0.0) or 0.0)
         if bw > 0:
             opts["bw_limit"] = bw
         if remote:
             opts["remote"] = remote
+        if delta_base is not None and step is not None:
+            ext = self.delta_extents_since(delta_base, step)
+            if ext is None:
+                raise ValueError(
+                    f"no delta chain from step {delta_base} to {step}")
+            opts["delta"] = {"base_step": int(delta_base),
+                             "extents": [(int(a), int(b)) for a, b in ext]}
         seq = self.smp.persist_send(
             path, step, delay_s=getattr(self.cfg, "persist_delay_s", 0.0),
             opts=opts or None)

@@ -10,6 +10,16 @@ written against the ideal production mesh.
 Megatron-style tensor parallelism over "model": column-parallel input
 projections shard their fan-out dim, row-parallel output projections their
 fan-in dim.  Batch dims shard over ("pod", "data").
+
+Two opt-in rule tables compose on top:
+  * FSDP (`cfg.fsdp`): every table-ruled param additionally shards one
+    replicated trailing dim over the "data" axis (ZeRO-3 style weight
+    sharding — the batch axes double as the weight-shard axes);
+  * expert parallelism (`cfg.moe_ep`): stacked MoE expert leaves
+    (`wi_gate`/`wi_up`/`wo` with a leading experts dim) shard experts
+    over "model" and, under FSDP, their fan-in dim over the batch axes —
+    matching `repro.models.moe.moe_ffn_ep`'s `w_spec` exactly, so the
+    shard_map path consumes the params without a relayout.
 """
 from __future__ import annotations
 
@@ -37,6 +47,20 @@ _PARAM_TAILS: Dict[str, tuple] = {
 
 _BATCH_AXES = ("pod", "data")
 
+# stacked expert leaves (leading dim = num_experts) under cfg.moe_ep
+_EP_LEAVES = ("wi_gate", "wi_up", "wo")
+
+
+def _with_fsdp(tail: tuple, axis) -> tuple:
+    """FSDP rule: shard the first replicated dim of the tail over the
+    data axis (the tensor-parallel dim keeps "model")."""
+    out = list(tail)
+    for i, e in enumerate(out):
+        if e is None:
+            out[i] = axis
+            return tuple(out)
+    return tail
+
 
 def _leaf_name(path) -> str:
     for entry in reversed(path):
@@ -57,11 +81,27 @@ def _pad(tail: tuple, ndim: int) -> P:
 def param_specs(cfg, shapes) -> Any:
     """PartitionSpec pytree matching the params pytree (leaf-for-leaf)."""
     flat, treedef = jax.tree_util.tree_flatten_with_path(shapes)
+    ep = bool(getattr(cfg, "moe_ep", False))
+    n_exp = int(getattr(cfg, "num_experts", 0) or 0)
+    fsdp = _BATCH_AXES if getattr(cfg, "fsdp", False) else None
     specs = []
     for path, leaf in flat:
-        tail = _PARAM_TAILS.get(_leaf_name(path))
+        name = _leaf_name(path)
         nd = len(leaf.shape)
-        specs.append(_pad(tail, nd) if tail and nd else P())
+        if (ep and n_exp > 1 and name in _EP_LEAVES and nd >= 3
+                and leaf.shape[nd - 3] == n_exp):
+            # stacked expert leaf (E, fan-in, fan-out): experts over
+            # "model", fan-in over the data axes under FSDP — the exact
+            # w_spec `moe_ffn_ep`'s shard_map consumes
+            specs.append(_pad(("model", fsdp, None), nd))
+            continue
+        tail = _PARAM_TAILS.get(name)
+        if not (tail and nd):
+            specs.append(P())
+            continue
+        if fsdp:
+            tail = _with_fsdp(tail, fsdp)
+        specs.append(_pad(tail, nd))
     return jax.tree_util.tree_unflatten(treedef, specs)
 
 

@@ -62,6 +62,11 @@ def main(argv=None):
     ap.add_argument("--blocking-persist", action="store_true",
                     help="run cadence persists inline (the pre-overlap "
                          "behavior) instead of fire-and-poll")
+    ap.add_argument("--delta", action="store_true",
+                    help="dirty-delta snapshotting: for MoE archs the "
+                         "router's touched-expert mask feeds the dirty "
+                         "provider; dense archs fall back to the "
+                         "per-bucket digest compare")
     ap.add_argument("--inject", action="append", default=[],
                     help="step:kind  (kind: software|node)")
     ap.add_argument("--no-reft", action="store_true",
@@ -92,9 +97,17 @@ def main(argv=None):
             ap.error(f"--inject kind must be software|node, got {kind!r}")
     if injections and args.backend == "null":
         ap.error("--inject needs a backend that can restore (not null)")
+    if args.delta and args.backend not in ("reft", "objstore"):
+        ap.error("--delta needs the reft backend family")
 
     print(f"[train] arch={cfg.name} params={cfg.param_count():,} "
-          f"batch={args.batch}x{args.seq} backend={args.backend}")
+          f"batch={args.batch}x{args.seq} backend={args.backend}"
+          + (" delta" if args.delta else ""))
+    if args.delta and cfg.num_experts:
+        # enable BEFORE the step function traces, so the router's
+        # touched-expert debug callback is staged into the jaxpr
+        from repro.models.moe import TOUCHED
+        TOUCHED.enable(cfg.num_experts)
     state = init_train_state(cfg, 0).tree()
     ds = SyntheticDataset(cfg, shape, seed=0)
     # no with_step_boundary wrapper here: sess.after_step runs every step
@@ -109,13 +122,23 @@ def main(argv=None):
         checkpoint_every_steps=args.ckpt_every,
         resume=args.resume,
         auto_tune=args.auto_tune,
-        options={"persist_blocking": True} if args.blocking_persist else {},
+        options=dict(
+            **({"persist_blocking": True} if args.blocking_persist else {}),
+            **({"delta": True} if args.delta else {}),
+        ),
     )
 
     losses = []
     t0 = time.time()
     step = int(state["step"])
     with CheckpointSession(spec, state) as sess:
+        if args.delta and cfg.num_experts \
+                and hasattr(sess.checkpointer, "set_dirty_provider"):
+            from repro.core.delta import expert_dirty_ranges
+            from repro.models.moe import TOUCHED
+            fspec = sess.checkpointer.group.engines[0].spec
+            sess.checkpointer.set_dirty_provider(
+                lambda: expert_dirty_ranges(fspec, TOUCHED.consume()))
         if sess.restored is not None:
             res = sess.restored
             print(f"[resume] tier={res.tier} step={res.step}"
@@ -170,6 +193,12 @@ def main(argv=None):
                   f"retries={st.get('persist_upload_retries', 0)} "
                   f"throttle_s="
                   f"{st.get('persist_throttle_seconds', 0.0):.3f}")
+        if st.get("delta_flights") or st.get("keyframe_flights"):
+            print(f"[{args.backend}] "
+                  f"delta_flights={st.get('delta_flights', 0)} "
+                  f"keyframes={st.get('keyframe_flights', 0)} "
+                  f"skipped_buckets={st.get('skipped_buckets', 0)} "
+                  f"base_misses={st.get('delta_base_misses', 0)}")
         if st.get("scrub_passes"):
             print(f"[{args.backend}] scrub_passes={st['scrub_passes']} "
                   f"families={st.get('scrub_families', 0)} "

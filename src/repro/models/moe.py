@@ -12,6 +12,9 @@ in tests (including the drop rule).
 from __future__ import annotations
 
 import math
+import threading
+
+import numpy as np
 
 import jax
 import jax.numpy as jnp
@@ -82,11 +85,66 @@ def _dispatch_compute(xf, probs, w, sel, wi_gate, wi_up, wo, C):
     return jax.ops.segment_sum(rows * wsorted[:, None], tok, num_segments=T)
 
 
+class ExpertTouchTracker:
+    """Aggregates which experts the router selected since the last
+    snapshot flight (the dirty-delta saving path's provider signal).
+
+    Disabled by default (zero overhead: the debug callback is only
+    staged into the jaxpr when `enable()` ran before tracing).  The
+    router feeds every `sel` through `record`; the snapshot driver calls
+    `consume()` at flight time for the touched mask and resets it.
+    """
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._mask: np.ndarray = np.zeros(0, bool)
+        self.enabled = False
+
+    def enable(self, num_experts: int) -> "ExpertTouchTracker":
+        with self._lock:
+            self._mask = np.zeros(int(num_experts), bool)
+            self.enabled = True
+        return self
+
+    def disable(self) -> None:
+        with self._lock:
+            self.enabled = False
+            self._mask = np.zeros(0, bool)
+
+    def record(self, sel) -> None:
+        """Fold a (T, k) routed-expert id array into the mask (host
+        side; also the target of the in-jit debug callback)."""
+        with self._lock:
+            if not self.enabled:
+                return
+            ids = np.asarray(sel).reshape(-1)
+            ids = ids[(ids >= 0) & (ids < self._mask.size)]
+            self._mask[np.unique(ids)] = True
+
+    def consume(self) -> np.ndarray:
+        """Return-and-reset the aggregated touched mask."""
+        with self._lock:
+            m = self._mask.copy()
+            self._mask[:] = False
+            return m
+
+    def peek(self) -> np.ndarray:
+        with self._lock:
+            return self._mask.copy()
+
+
+# module-level singleton: the router is pure-functional, so dirtiness
+# aggregation has to live beside it rather than in model state
+TOUCHED = ExpertTouchTracker()
+
+
 def _route(p, cfg, xf):
     logits = (xf.astype(jnp.float32) @ p["router"])          # (T, E)
     probs = jax.nn.softmax(logits, axis=-1)
     w, sel = jax.lax.top_k(probs, cfg.experts_per_token)     # (T, k)
     w = w / jnp.sum(w, axis=-1, keepdims=True)
+    if TOUCHED.enabled:
+        jax.debug.callback(TOUCHED.record, sel)
     return probs, w, sel
 
 

@@ -14,24 +14,25 @@ from repro.store.base import (
 from repro.store.flaky import FlakyStore
 from repro.store.local import LocalObjectStore
 from repro.store.manifest import (
-    MANIFEST_NAME, build_manifest, delete_family, family_prefix,
-    list_step_prefixes, load_manifest, manifest_key, object_families,
-    put_manifest, shard_key,
+    MANIFEST_NAME, build_manifest, delete_family, delta_shard_key,
+    family_prefix, list_step_prefixes, load_manifest, manifest_base_step,
+    manifest_key, object_families, put_manifest, shard_key,
 )
 from repro.store.scrub import (
     ScrubReport, Scrubber, scrub_family, scrub_local_dir,
     scrub_object_store,
 )
-from repro.store.upload import upload_shard
+from repro.store.upload import upload_delta, upload_shard
 
 __all__ = [
     "ObjectStore", "LocalObjectStore", "FlakyStore",
     "StoreError", "NotFoundError", "TransientStoreError",
     "RetryPolicy", "retry_policy", "call_with_retries", "retrier",
-    "store_from_config", "upload_shard",
-    "MANIFEST_NAME", "family_prefix", "shard_key", "manifest_key",
-    "build_manifest", "put_manifest", "load_manifest",
-    "object_families", "list_step_prefixes", "delete_family",
+    "store_from_config", "upload_shard", "upload_delta",
+    "MANIFEST_NAME", "family_prefix", "shard_key", "delta_shard_key",
+    "manifest_key", "build_manifest", "put_manifest", "load_manifest",
+    "manifest_base_step", "object_families", "list_step_prefixes",
+    "delete_family",
     "ScrubReport", "Scrubber", "scrub_family", "scrub_local_dir",
     "scrub_object_store",
 ]

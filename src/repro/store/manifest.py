@@ -40,6 +40,15 @@ def shard_key(prefix: str, step: int, node: int) -> str:
     return f"{family_prefix(prefix, step)}/node-{node}.reft"
 
 
+def delta_shard_key(prefix: str, step: int, base_step: int,
+                    node: int) -> str:
+    """Key of a delta shard object: the base step rides in the name
+    (mirroring the local `step-S-from-B-node-N.reftd` layout) so chain
+    resolution and GC never have to open the object."""
+    return (f"{family_prefix(prefix, step)}/"
+            f"node-{node}-from-{int(base_step)}.reftd")
+
+
 def manifest_key(prefix: str, step: int) -> str:
     return f"{family_prefix(prefix, step)}/{MANIFEST_NAME}"
 
@@ -49,7 +58,7 @@ def build_manifest(run: str, step: int, n: int, total_bytes: int,
     """Assemble the family manifest from per-node upload records (the
     `upload` info each persist round carries back: key, nbytes,
     data_off, parts, crc_stripes, crc_own, crc_parity)."""
-    return {
+    man = {
         "version": MANIFEST_VERSION,
         "run": run,
         "step": int(step),
@@ -57,6 +66,24 @@ def build_manifest(run: str, step: int, n: int, total_bytes: int,
         "total_bytes": int(total_bytes),
         "nodes": {str(node): dict(rec) for node, rec in nodes.items()},
     }
+    bases = {rec.get("base_step") for rec in nodes.values()} if nodes \
+        else {None}
+    if len(bases) == 1 and None not in bases:
+        # uniform delta family (persist rounds are all-or-nothing): lift
+        # the chain edge to the manifest top level so GC and chain
+        # resolution read it without touching shard records
+        man["kind"] = "delta"
+        man["base_step"] = int(bases.pop())
+    else:
+        man["kind"] = "full"
+    return man
+
+
+def manifest_base_step(man: dict) -> Optional[int]:
+    """The family's chain parent step, or None for a full family."""
+    if man.get("kind") == "delta" and man.get("base_step") is not None:
+        return int(man["base_step"])
+    return None
 
 
 def put_manifest(store: ObjectStore, prefix: str, man: dict,

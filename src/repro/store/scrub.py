@@ -166,6 +166,157 @@ class _ObjectFamily:
             lambda: self._store.put(ent["key"], bytes(whole)), self._pol)
 
 
+class _ChainFamily:
+    """A delta family resolved against its keyframe: reads go through
+    `ChainSource` (newest layer first, holes fall through), so the bytes
+    verified are the RESOLVED step's — checked against the NEWEST delta
+    head's merged stripe table, exactly what a restore would verify.
+    Repair WRITES are routed via `ChainSource.locate_spans` to whichever
+    layer actually serves each span (a keyframe hole's reconstruction IS
+    the keyframe's original bytes — nothing newer overlays it — so
+    patching in place is sound at every link)."""
+
+    kind = "chain"
+
+    def __init__(self, src, write_base, write_layer):
+        # write_base(node, local_off, data);
+        # write_layer(layer_idx, node, payload_off, data)
+        self._src = src
+        self.step = src.step
+        self.n = src.n
+        self.total_bytes = src.total_bytes
+        self.layout = src.layout
+        self._write_base = write_base
+        self._write_layer = write_layer
+
+    @property
+    def nodes(self) -> List[int]:
+        return self._src.nodes
+
+    def stripe_digests(self, node: int) -> Optional[dict]:
+        return self._src.layers[-1].head(node).get("crc_stripes")
+
+    def parity_digest(self, node: int) -> Optional[int]:
+        try:
+            return self._src.meta(node).get("crc_parity")
+        except Exception:
+            return None
+
+    def read(self, node: int, lo: int, hi: int) -> np.ndarray:
+        return self._src.read_local(node, lo, hi)
+
+    def write(self, node: int, off: int, data) -> None:
+        view = memoryview(data).cast("B")
+        end = off + len(view)
+        for li, poff, a, b in self._src.locate_spans(node, off, end):
+            chunk = bytes(view[a - off:b - off])
+            if li < 0:
+                self._write_base(node, a, chunk)
+            else:
+                self._write_layer(li, node, poff, chunk)
+
+    def close(self) -> None:
+        self._src.close()
+
+
+def _pwrite_at(path: str, off: int, blob: bytes) -> None:
+    fd = os.open(path, os.O_WRONLY)
+    try:
+        os.pwrite(fd, blob, off)
+        os.fsync(fd)
+    finally:
+        os.close(fd)
+
+
+def _head_off(path: str) -> int:
+    with open(path, "rb") as f:
+        pickle.load(f)
+        return f.tell()
+
+
+def _chain_file_family(ckpt_dir: str, step: int, full, deltas
+                       ) -> Optional[_ChainFamily]:
+    """Build the scrub adapter for one local delta step, or None when
+    its chain does not resolve."""
+    from repro.core.recovery import (
+        _delta_paths, _family_paths, _open_chain, resolve_chain,
+    )
+    res = resolve_chain(ckpt_dir, step, full, deltas)
+    if res is None:
+        return None
+    kf, links = res
+    src = _open_chain(ckpt_dir, step, full, deltas)
+    try:
+        nodes = sorted(range(src.n))
+        base_paths = _family_paths(ckpt_dir, kf, nodes)
+        base_off = {nd: _head_off(p) for nd, p in base_paths.items()}
+        layer_paths = [_delta_paths(ckpt_dir, s, b, nodes)
+                       for s, b in links]
+        layer_off = [{nd: _head_off(p) for nd, p in lp.items()}
+                     for lp in layer_paths]
+    except BaseException:
+        src.close()
+        raise
+
+    def write_base(node, off, blob):
+        _pwrite_at(base_paths[node], base_off[node] + off, blob)
+
+    def write_layer(li, node, poff, blob):
+        _pwrite_at(layer_paths[li][node], layer_off[li][node] + poff, blob)
+
+    return _ChainFamily(src, write_base, write_layer)
+
+
+def _chain_object_family(store: ObjectStore, prefix: str, step: int,
+                         retry=None) -> _ChainFamily:
+    """Build the scrub adapter for one remote delta step by walking its
+    manifest `base_step` links down to the full keyframe manifest."""
+    from repro.core.loader import ChainSource, DeltaLayer, ObjectSource
+    from repro.store.base import retrier
+    from repro.store.manifest import load_manifest, manifest_base_step
+
+    pol = retry_policy(retry)
+    wrap = retrier(retry)
+    man = load_manifest(store, prefix, step, retry=retry)
+    link_mans: List[dict] = []
+    seen = {int(step)}
+    while True:
+        base = manifest_base_step(man)
+        if base is None:
+            break
+        link_mans.append(man)
+        if base in seen:
+            raise ValueError(f"delta chain for step {step} cycles at {base}")
+        seen.add(base)
+        man = load_manifest(store, prefix, base, retry=retry)
+    link_mans.reverse()                              # oldest -> newest
+    src = ChainSource(ObjectSource(store, man, retry=wrap),
+                      [DeltaLayer.from_objects(store, m, retry=wrap)
+                       for m in link_mans])
+
+    def put_at(key, off, blob):
+        if hasattr(store, "write_range"):
+            call_with_retries(lambda: store.write_range(key, off, blob), pol)
+            return
+        whole, _ = call_with_retries(lambda: bytearray(store.read(key)), pol)
+        whole[off:off + len(blob)] = blob
+        call_with_retries(lambda: store.put(key, bytes(whole)), pol)
+
+    base_nodes = {int(k): v for k, v in man["nodes"].items()}
+    layer_nodes = [{int(k): v for k, v in m["nodes"].items()}
+                   for m in link_mans]
+
+    def write_base(node, off, blob):
+        ent = base_nodes[node]
+        put_at(ent["key"], int(ent["data_off"]) + off, blob)
+
+    def write_layer(li, node, poff, blob):
+        ent = layer_nodes[li][node]
+        put_at(ent["key"], int(ent["data_off"]) + poff, blob)
+
+    return _ChainFamily(src, write_base, write_layer)
+
+
 # ----------------------------------------------------------- family scrub
 def _crc(arr: np.ndarray) -> int:
     return zlib.crc32(memoryview(arr).cast("B")) & 0xFFFFFFFF
@@ -269,10 +420,12 @@ def scrub_local_dir(ckpt_dir: str, repair: bool = True,
     """Scrub every COMPLETE local family under `ckpt_dir` (a family is
     complete when all shards of its own saved n are on disk — torn ones
     belong to GC, in-flight ones to `skip_steps`)."""
-    from repro.core.recovery import checkpoint_families
+    from repro.core.recovery import checkpoint_families, delta_families
     skip = {int(s) for s in skip_steps}
     out: List[ScrubReport] = []
-    for step, nodes in sorted(checkpoint_families(ckpt_dir).items()):
+    full = checkpoint_families(ckpt_dir)
+    deltas = delta_families(ckpt_dir)
+    for step, nodes in sorted(full.items()):
         if step in skip:
             continue
         paths = {nd: os.path.join(ckpt_dir, f"step-{step}-node-{nd}.reft")
@@ -286,6 +439,22 @@ def scrub_local_dir(ckpt_dir: str, repair: bool = True,
             rep = ScrubReport(step=step, kind="file")
             rep.errors.append(repr(e))
             out.append(rep)
+    for step in sorted(set(deltas) - set(full)):
+        if step in skip:
+            continue
+        fam = None
+        try:
+            fam = _chain_file_family(ckpt_dir, step, full, deltas)
+            if fam is None:
+                continue                       # torn chain: GC's problem
+            out.append(scrub_family(fam, repair=repair))
+        except Exception as e:
+            rep = ScrubReport(step=step, kind="chain")
+            rep.errors.append(repr(e))
+            out.append(rep)
+        finally:
+            if fam is not None:
+                fam.close()
     return out
 
 
@@ -300,12 +469,16 @@ def scrub_object_store(store: ObjectStore, prefix: str = "families",
         families = object_families(store, prefix)
     except StoreError:
         return out
+    from repro.store.manifest import manifest_base_step
     for step in sorted(families):
         if step in skip:
             continue
         try:
             man = load_manifest(store, prefix, step, retry=retry)
-            fam = _ObjectFamily(store, man, retry=retry)
+            if manifest_base_step(man) is not None:
+                fam = _chain_object_family(store, prefix, step, retry=retry)
+            else:
+                fam = _ObjectFamily(store, man, retry=retry)
             out.append(scrub_family(fam, repair=repair))
         except (StoreError, NotFoundError, KeyError, ValueError) as e:
             rep = ScrubReport(step=step, kind="object")

@@ -59,3 +59,45 @@ def upload_shard(store: ObjectStore, key: str, head_blob: bytes, buf,
         "upload_s": time.perf_counter() - t0,
         "retries": retries,
     }
+
+
+_DELTA_PART_BYTES = 8 << 20
+
+
+def upload_delta(store: ObjectStore, key: str, head_blob: bytes, buf,
+                 extents, *, retry=None,
+                 throttle: Optional[Callable[[int], None]] = None) -> dict:
+    """Upload one member's `.reftd` delta shard: head (which records
+    `base_step` + `extents`) followed by the raw bytes of each
+    buffer-local extent, concatenated — byte-identical to the local
+    `.reftd` file, so the chain loader parses either through one path.
+    Extents are sliced into bounded parts; the object is usually tiny
+    (that is the point), but a near-dense delta still streams."""
+    t0 = time.perf_counter()
+    pol = retry_policy(retry)
+    view = memoryview(buf).cast("B")
+    parts = [bytes(head_blob)]
+    for lo, hi in extents:
+        for a in range(int(lo), int(hi), _DELTA_PART_BYTES):
+            parts.append(view[a:min(a + _DELTA_PART_BYTES, int(hi))])
+
+    nbytes = 0
+    retries = 0
+    for i, data in enumerate(parts):
+        if throttle is not None:
+            throttle(len(data))
+        _, r = call_with_retries(
+            lambda i=i, data=data: store.put_part(key, i, data), pol)
+        retries += r
+        nbytes += len(data)
+    _, r = call_with_retries(lambda: store.compose(key, len(parts)), pol)
+    retries += r
+    return {
+        "key": key,
+        "nbytes": nbytes,
+        "data_off": len(head_blob),
+        "parts": len(parts),
+        "upload_bytes": nbytes,
+        "upload_s": time.perf_counter() - t0,
+        "retries": retries,
+    }
