@@ -1,88 +1,137 @@
-"""Empirical reliability sweep: does the real system match §5's math?
+"""Per-scenario failure sweep: the full taxonomy under the supervisor.
 
-Runs many short LocalCluster episodes; in each, every node independently
-fails with probability p per round (random software-or-node failure).  We
-record which recovery tier the real system needs and compare the measured
-rates against the analytical predictions:
+One supervised episode per scenario kind (software, node, smp, laggard,
+corrupt-stripe, slow-persist, preempt, plus an elastic n->m preempt):
+inject -> detect -> heal/reshard -> verify byte-exact, with every second
+attributed in the goodput ledger.  Rows report per-kind recovery tier,
+detect/restore latency, and bit-exactness; the aggregate section folds in
+the analytic survival model (Fig. 8 safe horizons, formerly
+`benchmarks/survival.py`) so one report covers both the measured and the
+predicted reliability story.
 
-  P(in-memory survivable)  = (1-p_node)^n           (no node loss)
-  P(raim5 survivable)      = + n p_node (1-p_node)^(n-1)   (<=1 loss)
-  P(needs checkpoint)      = Eq. 7: 1 - above
-
-Recovery is additionally asserted bit-exact in every episode.
+  PYTHONPATH=src python -m benchmarks.failure_sweep \\
+      [--episodes-per-kind 1] [--json BENCH_failure_sweep.json]
 """
 from __future__ import annotations
 
+import argparse
+import json
+import sys
 import tempfile
 
-import numpy as np
-
 from repro.api import CheckpointSpec
-from repro.core.cluster import LocalCluster
-from repro.core.policy import reft_fail_rate
+from repro.core import policy
+from repro.core.cluster import make_state, update_state
+from repro.supervise import KINDS, Scenario, Supervisor
 
 N = 4
-EPISODES = 12
-ROUNDS = 3
-P_NODE = 0.25        # high rate so a dozen episodes see every tier
+STEPS = 10
+FAIL_STEP = 5
+NBYTES = 1 << 14
 
 
-def run(episodes: int = EPISODES, seed: int = 0) -> list:
-    rng = np.random.default_rng(seed)
-    tiers = {"in-memory": 0, "raim5": 0, "checkpoint": 0}
-    exact = 0
-    for ep in range(episodes):
-        with tempfile.TemporaryDirectory() as d:
-            spec = CheckpointSpec(backend="reft", ckpt_dir=d,
-                                  snapshot_every_steps=1,
-                                  bucket_bytes=1 << 20)
-            c = LocalCluster(N, seed=100 + ep, nbytes=1 << 14, spec=spec)
-            try:
-                c.run_rounds(ROUNDS)
-                c.checkpoint()
-                c.run_rounds(1)
-                # random failure pattern
-                killed_nodes = [i for i in range(N)
-                                if rng.random() < P_NODE]
-                soft = [i for i in range(N)
-                        if i not in killed_nodes and rng.random() < P_NODE]
-                for i in killed_nodes:
-                    c.kill_node(i)
-                for i in soft:
-                    c.kill_trainer(i)
-                state, step, tier = c.recover()
-                tiers[tier] += 1
-                if np.all([np.array_equal(np.asarray(a), np.asarray(b))
-                           for a, b in zip(
-                               _leaves(state),
-                               _leaves(c.expected_state(step)))]):
-                    exact += 1
-            finally:
-                c.close()
+def episode(kind: str, seed: int, *, new_sg: int = 0) -> dict:
+    """One supervised run with a single mid-flight scenario of `kind`."""
+    params = {"new_sg": new_sg} if new_sg else {}
+    scen = Scenario(kind, step=FAIL_STEP, node=1 + seed % (N - 1),
+                    graceful=False, params=params)
+    with tempfile.TemporaryDirectory() as d:
+        spec = CheckpointSpec(backend="reft", ckpt_dir=d, sg_size=N,
+                              snapshot_every_steps=1,
+                              checkpoint_every_steps=4,
+                              bucket_bytes=1 << 20, resume=False)
+        sup = Supervisor(spec, make_state(100 + seed, nbytes_approx=NBYTES),
+                         lambda st, s: update_state(st, s),
+                         scenarios=[scen])
+        out = sup.run(STEPS)
+    ev = out["events"][0] if out["events"] else {}
+    g = out["goodput"]
+    return {
+        "kind": kind + (f"-elastic-{N}to{new_sg}" if new_sg else ""),
+        "recovered": bool(ev.get("recovered", False)),
+        "bit_exact": ev.get("bit_exact"),
+        "tier": ev.get("tier"),
+        "perf_only": bool(ev.get("perf_only", False)),
+        "detect_s": ev.get("detect_s"),
+        "restore_s": ev.get("restore_s"),
+        "rolled_back": ev.get("rolled_back"),
+        "unrecovered": out["unrecovered"],
+        "goodput_frac": g["goodput_frac"],
+        "wall_s": g["wall_seconds"],
+        "accounting_error": g["accounting_error"],
+    }
 
-    p_ck_pred = reft_fail_rate(P_NODE, N)
-    rows = [
-        ("sweep_episodes", episodes, ""),
-        ("sweep_bitexact", exact, f"of {episodes}"),
-        ("sweep_tier_inmemory", tiers["in-memory"],
-         f"pred~{(1-P_NODE)**N * episodes:.1f}"),
-        ("sweep_tier_raim5", tiers["raim5"],
-         f"pred~{N*P_NODE*(1-P_NODE)**(N-1) * episodes:.1f}"),
-        ("sweep_tier_checkpoint", tiers["checkpoint"],
-         f"pred~{p_ck_pred * episodes:.1f} (Eq.7)"),
-    ]
+
+def survival_rows() -> list:
+    """Fig. 8 safe horizons (analytic): REFT vs checkpoint-only on a
+    3072-GPU system (768 4-GPU nodes, SGs of 6), Weibull shape swept."""
+    rows = []
+    k = (3072 // 4 // 6) * 6
+    n, lam = 6, 1e-4
+    for c in (1.0, 1.3, 1.5, 2.0):
+        t_re = policy.safe_horizon(
+            lambda t: policy.reft_survival(k, n, t, lam_hw=lam, c=c))
+        t_ck = policy.safe_horizon(
+            lambda t: policy.ckpt_survival(k, t, lam_hw=lam, lam_sw=lam,
+                                           c=c))
+        rows.append({"shape_c": c, "reft_horizon_s": t_re,
+                     "ckpt_horizon_s": t_ck,
+                     "ratio": t_re / max(t_ck, 1e-9)})
     return rows
 
 
-def _leaves(tree):
-    import jax
-    return jax.tree.leaves(tree)
+def run(episodes_per_kind: int = 1) -> dict:
+    rows = []
+    for rep in range(episodes_per_kind):
+        for kind in KINDS:
+            rows.append(episode(kind, seed=rep))
+        rows.append(episode("preempt", seed=rep, new_sg=N // 2))
+    failures = [r for r in rows if not r["perf_only"]]
+    return {
+        "rows": rows,
+        "survival_fig8": survival_rows(),
+        "aggregate": {
+            "episodes": len(rows),
+            "unrecovered": sum(r["unrecovered"] for r in rows),
+            "bit_exact": sum(1 for r in failures if r["bit_exact"]),
+            "bit_exact_of": len(failures),
+            "mean_goodput_frac": (sum(r["goodput_frac"] for r in rows)
+                                  / max(len(rows), 1)),
+            "max_accounting_error": max(r["accounting_error"]
+                                        for r in rows),
+        },
+    }
 
 
-def main():
-    print("bench,count,derived")
-    for name, v, d in run():
-        print(f"{name},{v},{d}")
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--episodes-per-kind", type=int, default=1)
+    ap.add_argument("--json", default=None, metavar="PATH")
+    args = ap.parse_args(argv)
+    out = run(args.episodes_per_kind)
+    print("bench,kind,recovered,bit_exact,tier,detect_s,restore_s,goodput")
+    for r in out["rows"]:
+        det = "" if r["detect_s"] is None else f"{r['detect_s']:.3f}"
+        res = "" if r["restore_s"] is None else f"{r['restore_s']:.3f}"
+        print(f"sweep,{r['kind']},{r['recovered']},{r['bit_exact']},"
+              f"{r['tier']},{det},{res},{r['goodput_frac']:.3f}")
+    for s in out["survival_fig8"]:
+        print(f"fig8_safe_horizon,c={s['shape_c']},"
+              f"{s['reft_horizon_s']:.2f},{s['ckpt_horizon_s']:.2f},"
+              f"{s['ratio']:.1f}x")
+    agg = out["aggregate"]
+    print(f"aggregate,episodes={agg['episodes']},"
+          f"unrecovered={agg['unrecovered']},"
+          f"bitexact={agg['bit_exact']}/{agg['bit_exact_of']},"
+          f"goodput={agg['mean_goodput_frac']:.3f},"
+          f"acct_err={agg['max_accounting_error']:.4f}")
+    assert agg["unrecovered"] == 0, "sweep left unrecovered failures"
+    assert agg["bit_exact"] == agg["bit_exact_of"], \
+        "a recovery was not bit-exact"
+    if args.json:
+        with open(args.json, "w") as fh:
+            json.dump(out, fh, indent=2, default=str)
+        print(f"[json] wrote {args.json}", file=sys.stderr)
 
 
 if __name__ == "__main__":

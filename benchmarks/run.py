@@ -13,13 +13,13 @@ import traceback
 
 
 SECTIONS = [
-    ("survival (Fig. 8)", "benchmarks.survival"),
     ("micro snapshot (Fig. 9)", "benchmarks.micro_snapshot"),
     ("weak scaling (§6.2a)", "benchmarks.weak_scaling"),
     ("strong scaling (Figs. 10-11)", "benchmarks.strong_scaling"),
     ("restart/recompute (§6.2)", "benchmarks.recovery"),
     ("optimal intervals (Appx. A)", "benchmarks.intervals"),
-    ("empirical failure sweep (§5 validation)", "benchmarks.failure_sweep"),
+    ("failure-scenario sweep + survival (Fig. 8)",
+     "benchmarks.failure_sweep"),
     ("kernels", "benchmarks.kernels_bench"),
     ("roofline (dry-run)", "benchmarks.roofline"),
 ]

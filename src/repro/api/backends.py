@@ -158,6 +158,8 @@ class ReftCheckpointer(Checkpointer):
         self.manager = CheckpointManager(spec.ckpt_dir, spec.sg_size,
                                          keep=spec.keep)
         self._degraded_emitted: set = set()
+        self._preempts: dict = {}       # node -> monotonic eviction deadline
+        self._preempted: list = []      # nodes whose grace window expired
 
     # ------------------------------------------------------------- save
     def snapshot(self, state, step, extra_meta=None, wait=False):
@@ -188,6 +190,7 @@ class ReftCheckpointer(Checkpointer):
         """Collect finished REFT-Ckpt rounds: resolve the manager's
         in-flight registration, commit the manifest (+GC), and emit a
         `persist` (or `persist-error`) event per round."""
+        self._tick_preempts()
         return self._emit_rounds(self.group.poll_persists())
 
     def _emit_rounds(self, out):
@@ -264,7 +267,16 @@ class ReftCheckpointer(Checkpointer):
         if target is None:
             target = RestoreTarget(sg_size=self.spec.sg_size)
         t0 = time.perf_counter()
-        self.group.wait()                       # drain healthy members
+        # drain each member best-effort: one dying member's flight error
+        # (e.g. its SMP was killed mid-send) must never abort recovery —
+        # mark it degraded so the ladder excludes it and RAIM5 repairs it
+        for e in self.group.engines:
+            if self.group.states[e.node] != NodeState.HEALTHY:
+                continue
+            try:
+                e.wait()
+            except Exception:
+                e.degraded = True
         # a degraded member's SMP is gone: its segments (if any survive)
         # hold STALE steps that would drag the common step backwards —
         # treat it like a failed node and let RAIM5 repair it instead
@@ -290,23 +302,45 @@ class ReftCheckpointer(Checkpointer):
                 self._degraded_emitted.add(e.node)
                 self.emit("degraded", step, detail=f"node{e.node}:smp-lost")
 
+    def _tick_preempts(self):
+        """Fire pending spot reclaims whose grace window has expired: the
+        node is gone exactly as if it had hard-failed (SMP killed, shm
+        unlinked, OFFLINE)."""
+        if not self._preempts:
+            return
+        now = time.monotonic()
+        for node, deadline in list(self._preempts.items()):
+            if now >= deadline:
+                del self._preempts[node]
+                self._preempted.append(node)
+                self.group.inject_node_failure(node)
+                self.emit("preempted", -1, detail=f"node{node}")
+
     def health(self):
         from repro.core.coordinator import NodeState
+        self._tick_preempts()
+        now = time.monotonic()
         members = {}
         degraded = []
         for e in self.group.engines:
             st = self.group.states[e.node]
-            bad = e.degraded or st != NodeState.HEALTHY
+            smp_alive = e.smp.alive()
+            # a dead SMP is degradation even before a send notices it
+            # (killed between snapshots: `e.degraded` has not flipped yet)
+            bad = e.degraded or st != NodeState.HEALTHY or not smp_alive
             members[e.node] = {
                 "state": st.value,
                 "degraded": e.degraded,
-                "smp_alive": e.smp.alive(),
+                "smp_alive": smp_alive,
                 "last_clean_step": e.last_clean_step,
             }
             if bad:
                 degraded.append(e.node)
         return {"healthy": not degraded, "degraded": degraded,
-                "members": members}
+                "members": members,
+                "preempting": {n: max(d - now, 0.0)
+                               for n, d in self._preempts.items()},
+                "preempted": list(self._preempted)}
 
     def stats(self):
         out = super().stats()
@@ -341,19 +375,91 @@ class ReftCheckpointer(Checkpointer):
         return out
 
     # ----------------------------------------------------------- faults
-    def inject_failure(self, node=0, kind="software"):
+    def inject_failure(self, node=0, kind="software", **params):
+        """Knock out a real member.  Beyond the classic `software`/`node`
+        kinds, the supervisor's scenario taxonomy is supported:
+
+          smp             kill only the fault-tolerance sidecar process
+                          (segments survive; the engine degrades on its
+                          next send, or `health()` notices sooner)
+          laggard         SIGSTOP the member's SMP for `lag_s` seconds
+                          (delayed acks / credit stalls), auto-SIGCONT
+          corrupt-stripe  flip `nbytes` bytes inside the member's newest
+                          CLEAN shm snapshot buffer (`seed` deterministic)
+          slow-persist    raise the member's durable-tier write latency
+                          to `delay_s` per shard, effective immediately
+          preempt         spot reclaim notice: after `grace_s` seconds the
+                          node hard-fails (health()/poll ticks fire it)
+        """
+        e = self.group.engines[node]
         if kind == "software":
             self.group.inject_software_failure(node)
         elif kind == "node":
             self.group.inject_node_failure(node)
+        elif kind == "smp":
+            e.smp.kill()
+        elif kind == "laggard":
+            import os
+            import signal
+            import threading
+            lag = float(params.get("lag_s", 0.4))
+            pid = e.smp.proc.pid
+            try:
+                os.kill(pid, signal.SIGSTOP)
+            except (ProcessLookupError, PermissionError):
+                pass                      # already gone: nothing to stall
+            else:
+                def _cont():
+                    try:
+                        os.kill(pid, signal.SIGCONT)
+                    except (ProcessLookupError, PermissionError):
+                        pass
+                # a real timer thread: the trainer may be *blocked* on this
+                # SMP's ring credits, so a poll-based resume would deadlock
+                t = threading.Timer(lag, _cont)
+                t.daemon = True
+                t.start()
+        elif kind == "corrupt-stripe":
+            from repro.supervise.inject import corrupt_shm_stripe
+            kw = dict(seed=int(params.get("seed", 0)),
+                      nbytes=int(params.get("nbytes", 16)),
+                      step=params.get("step"),
+                      region=params.get("region", "own"))
+            try:
+                info = corrupt_shm_stripe(
+                    self.group.run, node, self.group.n,
+                    self.group.total_bytes, **kw)
+            except RuntimeError:
+                # no CLEAN buffer yet (all flights in the air): land one,
+                # then corrupt it
+                e.wait()
+                info = corrupt_shm_stripe(
+                    self.group.run, node, self.group.n,
+                    self.group.total_bytes, **kw)
+            self.emit("corrupt", info["step"],
+                      detail=f"node{node}:off{info['offset']}"
+                             f"+{info['nbytes']}")
+        elif kind == "slow-persist":
+            e.persist_delay_s = float(params.get("delay_s", 0.25))
+        elif kind == "preempt":
+            grace = float(params.get("grace_s", 0.3))
+            self._preempts[node] = time.monotonic() + grace
         else:
             raise ValueError(f"unknown failure kind {kind!r}")
         self.emit("inject", -1, detail=f"{kind}:node{node}")
+
+    def evict(self, node):
+        """Remediate a member whose live stripe is known-corrupt: take it
+        OFFLINE so the next restore RAIM5-decodes it from the survivors'
+        parity instead of trusting its segments."""
+        self.group.inject_node_failure(node)
+        self.emit("evict", -1, detail=f"node{node}")
 
     def heal(self):
         for i in range(self.group.n):
             self.group.heal(i)
         self._degraded_emitted.clear()        # healed members report anew
+        self._preempted.clear()
         self.emit("heal", -1)
 
     def wait(self):

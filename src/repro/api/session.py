@@ -39,10 +39,18 @@ from repro.core.recovery import RecoveryError
 class CheckpointSession:
     def __init__(self, spec: CheckpointSpec, state_template: Any, *,
                  on_event: Optional[Callable[[CkptEvent], None]] = None,
-                 restore_target: Optional[RestoreTarget] = None):
+                 restore_target: Optional[RestoreTarget] = None,
+                 observer: Optional[Any] = None):
         if spec.run_id is None:
             spec = spec.with_run_id(CheckpointSpec.alloc_run_id())
         self.spec = spec
+        # MTBF + restore-cost feedback into the Appendix-A tuner: pass a
+        # shared FailureObserver to carry observations across elastic
+        # session rebuilds (the supervisor does); default is per-session
+        if observer is None:
+            from repro.core.policy import FailureObserver
+            observer = FailureObserver()
+        self.observer = observer
         self.run_id = spec.run_id
         self.checkpointer: Checkpointer = spec.build(state_template)
         self.checkpointer.on_event = on_event
@@ -166,9 +174,17 @@ class CheckpointSession:
                       st.get("snapshot_seconds", 0.0)) / n_snap
         t_ck = (st.get("persist_seconds", 0.0) / st["persist"]
                 if st.get("persist") else t_sn)
-        plan = plan_frequencies(t_snapshot=t_sn, t_checkpoint=t_ck,
-                                t_comp=t_comp, lam_node=self.spec.lam_node,
-                                n=self.spec.sg_size)
+        # closed loop: observed failures move lam off the static prior
+        # (Gamma posterior), and observed per-tier restore costs inflate
+        # the effective rate — a failure-heavy run snapshots more often,
+        # a quiet one relaxes back toward the prior-derived cadence
+        lam = self.observer.lam_node(prior=self.spec.lam_node,
+                                     n=self.spec.sg_size)
+        plan = plan_frequencies(
+            t_snapshot=t_sn, t_checkpoint=t_ck,
+            t_comp=t_comp, lam_node=lam, n=self.spec.sg_size,
+            t_restore_snapshot=self.observer.restore_cost("snapshot"),
+            t_restore_checkpoint=self.observer.restore_cost("checkpoint"))
         self.snapshot_every = max(
             1, int(plan.snapshot_interval / max(t_comp, 1e-9)))
         if plan.checkpoint_interval != float("inf"):
@@ -189,15 +205,28 @@ class CheckpointSession:
         training can continue with full protection.  `target` overrides
         the session's restore target for this one call (partial loads,
         explicit reshard)."""
+        t0 = time.monotonic()
         res = self._restore_call(step, target or self.restore_target)
+        self.observer.record_restore(time.monotonic() - t0,
+                                     tier=res.tier, load=res.load)
         self.checkpointer.heal()
         self._degraded_seen.clear()
         return res
 
-    def inject(self, kind: str, node: int = 0):
-        """Drain in-flight saves, then simulate a failure."""
-        self.checkpointer.wait()
-        self.checkpointer.inject_failure(node, kind)
+    def inject(self, kind: str, node: int = 0, graceful: bool = True,
+               **params):
+        """Simulate a failure.  `graceful=True` (the historical behavior)
+        drains in-flight saves first, so the fault lands at a quiesced
+        step boundary; `graceful=False` injects MID-FLIGHT — whatever
+        snapshots/persists are in the air stay in the air, which is what
+        real failures look like.  Kind-specific `params` (grace_s, lag_s,
+        delay_s, nbytes, seed) pass through to the backend."""
+        if graceful:
+            self.checkpointer.wait()
+        self.checkpointer.inject_failure(node, kind, **params)
+        from repro.supervise.inject import FAILURE_KINDS
+        if kind in FAILURE_KINDS:      # perf faults aren't MTBF arrivals
+            self.observer.record_failure()
 
     # ------------------------------------------------------ passthrough
     def snapshot(self, state, step, extra_meta=None, wait=False):

@@ -189,10 +189,13 @@ class Checkpointer(abc.ABC):
         Backends without overlapped persistence return []."""
         return []
 
-    def inject_failure(self, node: int = 0, kind: str = "software") -> None:
+    def inject_failure(self, node: int = 0, kind: str = "software",
+                       **params) -> None:
         """Simulate a failure for drills.  Disk backends interpret any kind
         as 'the training process lost its in-memory state' (a no-op on the
-        backend itself); memory-tier backends knock out real members."""
+        backend itself); memory-tier backends knock out real members.
+        `params` carry kind-specific knobs (grace_s, lag_s, delay_s,
+        nbytes, seed — see `repro.supervise.inject.DEFAULT_PARAMS`)."""
         self.emit("inject", -1, detail=f"{kind}:node{node}")
 
     def heal(self) -> None:

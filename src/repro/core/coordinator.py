@@ -273,9 +273,12 @@ class ReftGroup:
 
     def heal(self, node: int):
         """Elastic replacement node rejoins (new SMP).  A degraded member
-        (its SMP died under it) needs a respawn just like an offline one."""
+        (its SMP died under it) needs a respawn just like an offline one —
+        as does one whose SMP is dead but not yet *noticed* (killed between
+        snapshots, so no send ever raised and `degraded` never flipped)."""
         e = self.engines[node]
-        if self.states[node] == NodeState.OFFLINE or e.degraded:
+        if self.states[node] == NodeState.OFFLINE or e.degraded \
+                or not e.smp.alive():
             try:
                 e.close()                     # drop stale segments/handles
             except Exception:

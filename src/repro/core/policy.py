@@ -12,7 +12,8 @@ Implements:
 from __future__ import annotations
 
 import math
-from dataclasses import dataclass
+import time
+from dataclasses import dataclass, field
 
 
 def weibull_survival(lam: float, t: float, c: float = 1.0) -> float:
@@ -87,23 +88,114 @@ class FrequencyPlan:
     lam_unrecoverable: float
 
 
+def failure_load_rate(lam: float, t_restore: float) -> float:
+    """Failure rate per *useful* second.  Each failure burns ~t_restore
+    seconds of wall clock that produce no progress, so per useful second
+    failures arrive faster than per wall second: lam / (1 - lam*t_restore).
+    Clamped so a pathological restore cost cannot send the rate negative
+    or unbounded."""
+    if lam <= 0:
+        return lam
+    return lam / max(1.0 - lam * t_restore, 0.05)
+
+
 def plan_frequencies(*, t_snapshot: float, t_checkpoint: float,
-                     t_comp: float, lam_node: float, n: int
-                     ) -> FrequencyPlan:
+                     t_comp: float, lam_node: float, n: int,
+                     t_restore_snapshot: float = 0.0,
+                     t_restore_checkpoint: float = 0.0) -> FrequencyPlan:
     """Appendix A, Eqs. 9-11: snapshot interval against single-node failures
     (REFT-Sn repairs those); checkpoint interval against the rare >=2-per-SG
-    event (Eq. 7)."""
+    event (Eq. 7).
+
+    `t_restore_*` fold observed per-tier restore costs (LoadStats read +
+    decode + h2d seconds) into the plan: restore time is pure badput, so the
+    effective failure rate per useful second rises with it and the optimal
+    interval shrinks accordingly."""
     o_sn = effective_save_overhead(t_snapshot, t_comp)
     o_ck = effective_save_overhead(t_checkpoint, t_comp)
-    lam_un = reft_fail_rate(lam_node, n)
+    lam_sn = failure_load_rate(lam_node, t_restore_snapshot)
+    lam_un = failure_load_rate(reft_fail_rate(lam_node, n),
+                               t_restore_checkpoint)
     return FrequencyPlan(
-        snapshot_interval=optimal_interval(o_sn, lam_node),
-        checkpoint_interval=optimal_interval(o_sn, lam_un),
+        snapshot_interval=optimal_interval(o_sn, lam_sn),
+        checkpoint_interval=optimal_interval(o_ck, lam_un),
         o_snapshot=o_sn,
         o_checkpoint=o_ck,
-        lam_node=lam_node,
+        lam_node=lam_sn,
         lam_unrecoverable=lam_un,
     )
+
+
+# Tiers whose restore reads live shm (cheap, snapshot-class) vs tiers that
+# hit durable media (expensive, checkpoint-class).  Used to bucket observed
+# LoadStats when feeding restore costs back into plan_frequencies.
+SNAPSHOT_TIERS = frozenset({"in-memory", "raim5"})
+
+
+@dataclass
+class FailureObserver:
+    """Online MTBF + restore-cost estimator feeding plan_frequencies.
+
+    Failure arrivals are modelled as Poisson with a Gamma(w, w/prior)
+    conjugate prior, so the posterior rate after observing k failures over
+    T node-seconds is (k + w) / (T*n + w/prior): with no evidence it
+    returns the static prior (spec.lam_node), and each observed failure
+    pulls it toward the measured rate.  `weight` is the prior's
+    pseudo-failure count — higher means slower to move off the prior.
+
+    Restore costs are bucketed by recovery tier into snapshot-class
+    (in-memory / raim5: shm reads) and checkpoint-class (disk / object
+    store) and averaged over the most recent `window` observations.
+    """
+    weight: float = 2.0
+    window: int = 16
+    clock: object = time.monotonic       # injectable for tests
+    failures: list = field(default_factory=list)     # timestamps
+    restores: dict = field(default_factory=lambda: {"snapshot": [],
+                                                    "checkpoint": []})
+    _t0: float = None
+
+    def __post_init__(self):
+        if self._t0 is None:
+            self._t0 = self.clock()
+
+    def record_failure(self, when: float = None) -> None:
+        self.failures.append(self.clock() if when is None else when)
+
+    def record_restore(self, seconds: float, tier: str = "in-memory",
+                       load=None) -> None:
+        """Log one restore's cost.  `load` (a LoadStats) refines the
+        wall-clock `seconds` with per-phase read/decode/h2d attribution
+        when available."""
+        if load is not None:
+            phased = (getattr(load, "read_seconds", 0.0)
+                      + getattr(load, "decode_seconds", 0.0)
+                      + getattr(load, "h2d_seconds", 0.0))
+            seconds = max(seconds, phased)
+        cls = "snapshot" if tier in SNAPSHOT_TIERS else "checkpoint"
+        bucket = self.restores[cls]
+        bucket.append(float(seconds))
+        del bucket[:-self.window]
+
+    def observed_span(self) -> float:
+        return max(self.clock() - self._t0, 1e-9)
+
+    def lam_node(self, prior: float, n: int = 1) -> float:
+        """Posterior per-node failure rate (per second)."""
+        prior = max(prior, 1e-12)
+        k = len(self.failures)
+        t_node = self.observed_span() * max(n, 1)
+        return (k + self.weight) / (t_node + self.weight / prior)
+
+    def restore_cost(self, cls: str) -> float:
+        bucket = self.restores.get(cls, ())
+        return sum(bucket) / len(bucket) if bucket else 0.0
+
+    def mtbf(self) -> float:
+        """Observed mean time between failures (inf when none seen)."""
+        if not self.failures:
+            return math.inf
+        return self.observed_span() / len(self.failures)
 
 
 def total_overhead(t_total: float, t_save_interval: float, o_save: float,

@@ -688,7 +688,14 @@ class SMPHandle:
         slot = self._slot
         self._slot = (self._slot + 1) % self.stage_slots
         nb = payload.nbytes
-        self._stage_np[slot, :nb] = payload.reshape(-1).view(np.uint8)
+        # local ref: kill()/release() nulls _stage_np concurrently with an
+        # in-flight send; a closed handle must read as "SMP gone" (degrade),
+        # not TypeError (fatal)
+        stage = self._stage_np
+        if stage is None:
+            raise BrokenPipeError(
+                f"SMP handle for node {self.node} closed mid-snapshot")
+        stage[slot, :nb] = payload.reshape(-1).view(np.uint8)
         self._send(("bucket", slot, kind, int(dst), nb))
 
     def end(self, step: int, meta_blob: bytes, want_crc: bool = False,

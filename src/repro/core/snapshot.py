@@ -131,6 +131,10 @@ class SnapshotEngine:
         self._thread: Optional[threading.Thread] = None    # serial mode
         self._err: Optional[BaseException] = None
         self.degraded = False      # SMP unreachable: snapshots paused, not fatal
+        # mutable copy of cfg.persist_delay_s: ReftConfig is frozen, but
+        # fault injection (slow-persist / slow-NFS scenarios) must be able
+        # to raise durable-tier latency mid-run
+        self.persist_delay_s = float(getattr(cfg, "persist_delay_s", 0.0))
         self.last_clean_step = -1
         self._persists: Dict[int, dict] = {}    # seq -> in-flight record
         self.stats = {"snapshots": 0, "bytes_sent": 0, "seconds": 0.0,
@@ -436,7 +440,7 @@ class SnapshotEngine:
             opts["delta"] = {"base_step": int(delta_base),
                              "extents": [(int(a), int(b)) for a, b in ext]}
         seq = self.smp.persist_send(
-            path, step, delay_s=getattr(self.cfg, "persist_delay_s", 0.0),
+            path, step, delay_s=self.persist_delay_s,
             opts=opts or None)
         self._persists[seq] = {"path": path, "step": step,
                                "t0": time.monotonic(), "blocked": 0.0}

@@ -68,7 +68,11 @@ def main(argv=None):
                          "provider; dense archs fall back to the "
                          "per-bucket digest compare")
     ap.add_argument("--inject", action="append", default=[],
-                    help="step:kind  (kind: software|node)")
+                    help="STEP:KIND[:NODE]  (kind: software|node|smp|"
+                         "laggard|corrupt-stripe|slow-persist|preempt)")
+    ap.add_argument("--graceful-inject", action="store_true",
+                    help="drain in-flight saves before each injection "
+                         "(default: mid-flight, like a real failure)")
     ap.add_argument("--no-reft", action="store_true",
                     help="legacy alias for --backend null")
     args = ap.parse_args(argv)
@@ -86,15 +90,14 @@ def main(argv=None):
     if args.reduced:
         cfg = cfg.reduced()
     shape = InputShape("cli", args.seq, args.batch, "train")
+    from repro.supervise.inject import parse_scenario
     injections = {}
     for item in args.inject:
         try:
-            at, kind = item.split(":")
-            injections[int(at)] = kind
-        except ValueError:
-            ap.error(f"--inject wants STEP:KIND (software|node), got {item!r}")
-        if kind not in ("software", "node"):
-            ap.error(f"--inject kind must be software|node, got {kind!r}")
+            sc = parse_scenario(item, default_node=-1)
+        except ValueError as e:
+            ap.error(str(e))
+        injections[sc.step] = sc
     if injections and args.backend == "null":
         ap.error("--inject needs a backend that can restore (not null)")
     if args.delta and args.backend not in ("reft", "objstore"):
@@ -154,9 +157,28 @@ def main(argv=None):
             sess.after_step(state, step, extra_meta=ds.state())
 
             if step in injections:
-                kind = injections.pop(step)
-                print(f"[inject] {kind} failure at step {step}")
-                sess.inject(kind, node=0 if kind == "software" else 1)
+                sc = injections.pop(step)
+                kind = sc.kind
+                node = sc.node if sc.node >= 0 \
+                    else (0 if kind == "software" else 1)
+                print(f"[inject] {kind} failure at step {step} "
+                      f"(node {node}"
+                      + ("" if args.graceful_inject else ", mid-flight")
+                      + ")")
+                sess.inject(kind, node=node,
+                            graceful=args.graceful_inject,
+                            **sc.merged_params())
+                if kind in ("laggard", "slow-persist"):
+                    continue           # perf faults: nothing to restore
+                if kind == "preempt":
+                    # ride out the grace window; health() ticks the
+                    # deadline and hard-fails the node when it expires
+                    deadline = time.monotonic() + 5.0
+                    while node not in sess.health().get("preempted",
+                                                        [node]):
+                        if time.monotonic() > deadline:
+                            ap.error("preempt grace window never expired")
+                        time.sleep(0.05)
                 try:
                     res = sess.restore()
                 except RecoveryError as e:

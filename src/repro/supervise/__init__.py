@@ -1,0 +1,15 @@
+"""Goodput-driven elastic supervision: fault injection, auto-heal/reshard,
+and wall-clock accounting (docs/API.md "Supervisor & goodput accounting")."""
+from repro.supervise.goodput import CATEGORIES, GoodputLedger
+from repro.supervise.inject import (
+    DEFAULT_PARAMS, FAILURE_KINDS, KINDS, Scenario, corrupt_reft_file,
+    corrupt_shm_stripe, ensure_coverage, parse_scenario, plan_scenarios,
+)
+from repro.supervise.supervisor import Supervisor, trees_equal
+
+__all__ = [
+    "CATEGORIES", "GoodputLedger", "DEFAULT_PARAMS", "FAILURE_KINDS",
+    "KINDS", "Scenario", "corrupt_reft_file", "corrupt_shm_stripe",
+    "ensure_coverage", "parse_scenario", "plan_scenarios", "Supervisor",
+    "trees_equal",
+]

@@ -1,0 +1,270 @@
+"""Supervisor subsystem: seeded injection, detection + auto-heal, elastic
+reshard, goodput accounting, and the MTBF-fed cadence feedback loop."""
+import time
+
+import numpy as np
+import pytest
+
+from repro.api import CheckpointSession, CheckpointSpec
+from repro.core.cluster import make_state, state_at, update_state
+from repro.core.policy import FailureObserver, plan_frequencies
+from repro.supervise import (
+    GoodputLedger, Scenario, Supervisor, ensure_coverage, parse_scenario,
+    plan_scenarios, trees_equal,
+)
+
+SG = 4
+NBYTES = 1 << 14
+
+
+def _spec(tmp_path, **kw):
+    kw.setdefault("backend", "reft")
+    kw.setdefault("sg_size", SG)
+    kw.setdefault("snapshot_every_steps", 1)
+    kw.setdefault("checkpoint_every_steps", 5)
+    kw.setdefault("bucket_bytes", 1 << 20)
+    kw.setdefault("resume", False)
+    return CheckpointSpec(ckpt_dir=str(tmp_path), **kw)
+
+
+def _supervise(tmp_path, scenarios, steps=12, seed=5, **spec_kw):
+    sup = Supervisor(_spec(tmp_path, **spec_kw),
+                     make_state(seed, nbytes_approx=NBYTES),
+                     lambda st, s: update_state(st, s),
+                     scenarios=scenarios)
+    return sup, sup.run(steps)
+
+
+# ------------------------------------------------------------- injector
+def test_plan_scenarios_deterministic():
+    a = plan_scenarios(7, n=4, total_steps=40, count=6)
+    b = plan_scenarios(7, n=4, total_steps=40, count=6)
+    assert a == b
+    assert len(a) == 6
+    assert all(s.step < s2.step for s, s2 in zip(a, a[1:]))
+    # a different seed perturbs the schedule
+    c = plan_scenarios(8, n=4, total_steps=40, count=6)
+    assert [(s.step, s.kind, s.node) for s in a] != \
+           [(s.step, s.kind, s.node) for s in c]
+
+
+def test_ensure_coverage_hits_required_kinds():
+    plan = [Scenario("node", step=s, node=0) for s in (3, 6, 9, 12)]
+    out = ensure_coverage(plan, kinds=("node", "smp", "preempt"), n=4)
+    kinds = {s.kind for s in out}
+    assert {"node", "smp", "preempt"} <= kinds
+    assert [s.step for s in out] == [3, 6, 9, 12]   # schedule untouched
+
+
+def test_parse_scenario_grammar():
+    sc = parse_scenario("12:smp:2")
+    assert (sc.step, sc.kind, sc.node) == (12, "smp", 2)
+    assert parse_scenario("5:preempt").node == 0
+    with pytest.raises(ValueError):
+        parse_scenario("5:meteor-strike")
+    with pytest.raises(ValueError):
+        parse_scenario("nope:node")
+    with pytest.raises(ValueError):
+        Scenario("meteor-strike", step=1)
+
+
+# -------------------------------------------------------------- ledger
+def test_goodput_ledger_accounts_every_second():
+    t = [10.0]
+    led = GoodputLedger(clock=lambda: t[0])
+    t[0] += 3.0
+    assert led.mark("compute") == 3.0
+    t[0] += 0.5
+    led.mark("detect")
+    t[0] += 1.5
+    led.mark("restore")
+    led.transfer("compute", "lost_steps", 1.0)
+    led.close()
+    s = led.summary()
+    assert s["seconds"] == {"compute": 2.0, "lost_steps": 1.0,
+                            "checkpoint_stall": 0.0, "detect": 0.5,
+                            "restore": 1.5, "overhead": 0.0}
+    assert s["wall_seconds"] == 5.0
+    assert led.check(tol=1e-9)
+    assert s["goodput_frac"] == pytest.approx(0.4)
+    with pytest.raises(ValueError):
+        led.mark("vibes")
+
+
+# ------------------------------------------------- MTBF feedback (policy)
+def test_observer_posterior_tracks_failures():
+    t = [0.0]
+    obs = FailureObserver(clock=lambda: t[0], weight=2.0)
+    prior = 1e-4
+    # no evidence: posterior sits at the prior
+    assert obs.lam_node(prior, n=4) == pytest.approx(prior, rel=0.01)
+    # a burst of failures over a short window pulls the rate way up
+    for _ in range(6):
+        t[0] += 10.0
+        obs.record_failure()
+    lam_burst = obs.lam_node(prior, n=4)
+    assert lam_burst > 3 * prior
+    assert obs.mtbf() == pytest.approx(10.0)
+    # a long quiet stretch relaxes it back down
+    t[0] += 200_000.0
+    assert obs.lam_node(prior, n=4) < lam_burst / 10
+
+
+def test_plan_frequencies_restore_cost_shortens_interval():
+    base = dict(t_snapshot=2.0, t_checkpoint=30.0, t_comp=1.0,
+                lam_node=1e-4, n=4)
+    cheap = plan_frequencies(**base)
+    costly = plan_frequencies(**base, t_restore_snapshot=500.0,
+                              t_restore_checkpoint=5000.0)
+    assert costly.snapshot_interval < cheap.snapshot_interval
+    assert costly.checkpoint_interval < cheap.checkpoint_interval
+    # checkpoint overhead now uses o_ck (was o_sn): a costly checkpoint
+    # tier must space checkpoints FURTHER apart than snapshots
+    assert cheap.o_checkpoint > cheap.o_snapshot
+
+
+def test_session_retune_follows_observed_mtbf(tmp_path):
+    """Satellite regression: a failure burst shortens the snapshot
+    interval; a quiet stretch relaxes it back (vs the same session tuned
+    only by the static prior)."""
+    t = [0.0]
+    obs = FailureObserver(clock=lambda: t[0])
+    spec = CheckpointSpec(backend="sync_disk", ckpt_dir=str(tmp_path),
+                          resume=False, auto_tune=True, lam_node=1e-5)
+    state = make_state(1, nbytes_approx=NBYTES)
+    with CheckpointSession(spec, state, observer=obs) as sess:
+        for s in range(1, 7):
+            state = update_state(state, s)
+            sess.snapshot(state, s, wait=True)
+            # tiny "measured" compute time so the disk write dominates
+            # (o_snapshot > 0 -> the optimal interval is finite and the
+            # cadence actually responds to lambda)
+            sess._step_times.append(1e-6)
+        sess._retune()
+        quiet_every = sess.snapshot_every
+        # burst: 5 failures in 50 simulated seconds
+        for _ in range(5):
+            t[0] += 10.0
+            obs.record_failure()
+        obs.record_restore(2.0, tier="in-memory")
+        sess._retune()
+        burst_every = sess.snapshot_every
+        assert burst_every < quiet_every
+        # quiet again: rate decays toward the prior, cadence relaxes
+        t[0] += 500_000.0
+        sess._retune()
+        assert sess.snapshot_every > burst_every
+
+
+# ------------------------------------------------------ session surface
+def test_session_inject_new_kinds(tmp_path):
+    state = make_state(2, nbytes_approx=NBYTES)
+    with CheckpointSession(_spec(tmp_path), state) as sess:
+        state = update_state(state, 1)
+        assert sess.snapshot(state, 1, wait=True)
+        # slow-persist: latency lands on the engine immediately
+        sess.inject("slow-persist", node=1, delay_s=0.05)
+        assert sess.checkpointer.group.engines[1].persist_delay_s == 0.05
+        # laggard: member stalls and auto-resumes; training never wedges
+        sess.inject("laggard", node=2, graceful=False, lag_s=0.2)
+        state = update_state(state, 2)
+        assert sess.snapshot(state, 2, wait=True)
+        # perf faults are not failures: the observer saw none
+        assert sess.observer.failures == []
+        with pytest.raises(ValueError):
+            sess.inject("meteor-strike")
+
+
+def test_dead_smp_detected_and_healed(tmp_path):
+    """dead SMP -> health() flags it even before a send notices ->
+    restore + heal respawns the sidecar -> full protection again."""
+    state = make_state(3, nbytes_approx=NBYTES)
+    with CheckpointSession(_spec(tmp_path), state) as sess:
+        state = update_state(state, 1)
+        assert sess.snapshot(state, 1, wait=True)
+        sess.inject("smp", node=2, graceful=False)
+        h = sess.health()
+        assert 2 in h["degraded"] and not h["healthy"]
+        assert not h["members"][2]["smp_alive"]
+        assert len(sess.observer.failures) == 1    # MTBF observation
+        res = sess.restore()
+        assert trees_equal(res.state, state)
+        h = sess.health()                          # heal respawned it
+        assert h["healthy"] and h["members"][2]["smp_alive"]
+        state = update_state(state, 2)
+        assert sess.snapshot(state, 2, wait=True)
+
+
+# ------------------------------------------------------- supervised runs
+def test_midflight_corrupt_stripe_healed_byte_exact(tmp_path):
+    """Mid-flight (non-graceful) stripe corruption: the CRC probe finds
+    the flipped bytes, the member is evicted, and RAIM5 decodes it back
+    byte-identical."""
+    scen = [Scenario("corrupt-stripe", step=4, node=1, graceful=False)]
+    sup, out = _supervise(tmp_path, scen, steps=8)
+    assert out["unrecovered"] == 0
+    ev = next(e for e in out["events"] if e["kind"] == "corrupt-stripe")
+    assert ev["graceful"] is False
+    assert ev["evicted"] == [1]            # detection earned, not assumed
+    assert ev["tier"] == "raim5"           # decoded from survivors' parity
+    assert ev["bit_exact"] is True
+    # the healed member's final state equals the deterministic oracle
+    assert trees_equal(out["final_state"],
+                       state_at(5, 8, nbytes_approx=NBYTES))
+
+
+def test_preempt_elastic_reshard_resumes(tmp_path):
+    """preempt with a grace window -> durable family persisted -> elastic
+    4->2 session rebuild restores it resharded, byte-exact."""
+    scen = [Scenario("preempt", step=5, node=3, graceful=False,
+                     params={"grace_s": 0.3, "new_sg": 2})]
+    sup, out = _supervise(tmp_path, scen, steps=9)
+    assert out["unrecovered"] == 0
+    ev = next(e for e in out["events"] if e["kind"] == "preempt")
+    assert ev["elastic"] == "4->2"
+    assert ev["bit_exact"] is True
+    assert sup.spec.sg_size == 2
+    assert sup.sess.checkpointer.group.n == 2
+    assert trees_equal(out["final_state"],
+                       state_at(5, 9, nbytes_approx=NBYTES))
+
+
+def test_compound_smp_death_during_slow_persist_no_wedge(tmp_path):
+    """SMP death while a slowed persist is in flight must neither wedge
+    the trainer nor lose recoverability."""
+    scen = [
+        Scenario("slow-persist", step=3, node=1, graceful=False,
+                 params={"delay_s": 0.3, "duration_steps": 8}),
+        Scenario("smp", step=5, node=1, graceful=False),
+    ]
+    t0 = time.monotonic()
+    sup, out = _supervise(tmp_path, scen, steps=10,
+                          checkpoint_every_steps=3)
+    assert time.monotonic() - t0 < 120          # no wedge
+    assert out["unrecovered"] == 0
+    ev = next(e for e in out["events"] if e["kind"] == "smp")
+    assert ev["recovered"] and ev["bit_exact"] is True
+    assert trees_equal(out["final_state"],
+                       state_at(5, 10, nbytes_approx=NBYTES))
+
+
+def test_supervised_run_goodput_sums_to_wall_clock(tmp_path):
+    """Every second of a multi-failure supervised run lands in exactly
+    one ledger bucket (sum == wall within 5%), failures feed the MTBF
+    posterior, and rolled-back steps are re-attributed as lost."""
+    scen = [
+        Scenario("smp", step=3, node=2, graceful=False),
+        Scenario("node", step=6, node=0, graceful=True),
+    ]
+    sup, out = _supervise(tmp_path, scen, steps=9)
+    assert out["unrecovered"] == 0
+    g = out["goodput"]
+    assert g["accounting_error"] <= 0.05
+    assert abs(sum(g["seconds"].values()) - g["wall_seconds"]) \
+        <= 0.05 * g["wall_seconds"]
+    assert g["seconds"]["restore"] > 0.0
+    assert out["mtbf_s"] < float("inf")
+    assert out["lam_node_posterior"] > sup.spec.lam_node
+    rolled = sum(e.get("rolled_back", 0) for e in out["events"])
+    if rolled:
+        assert g["seconds"]["lost_steps"] > 0.0
