@@ -44,6 +44,10 @@ SWEEP_BYTES = 8 << 20
 SWEEP_BACKENDS = ("reft", "sync_disk", "async_disk")
 LOADER_BYTES = 32 << 20
 
+LAGGARD_NODE = 2
+LAGGARD_FAST_BW = 64 << 20       # healthy member bandwidth (bytes/s)
+LAGGARD_SLOW_FACTOR = 8          # laggard runs at fast / this
+
 
 def row(name: str, seconds: float, detail: str = "", **extra) -> dict:
     out = {"name": name, "seconds": seconds, "detail": detail}
@@ -54,12 +58,21 @@ def row(name: str, seconds: float, detail: str = "", **extra) -> dict:
 def _stats_extra(ld) -> dict:
     if ld is None:
         return {}
-    return {"tier": ld.tier, "bytes_read": ld.bytes_read,
-            "decoded_bytes": ld.decoded_bytes,
-            "read_seconds": ld.read_seconds,
-            "decode_seconds": ld.decode_seconds,
-            "h2d_seconds": ld.h2d_seconds,
-            "resharded": ld.resharded}
+    out = {"tier": ld.tier, "bytes_read": ld.bytes_read,
+           "decoded_bytes": ld.decoded_bytes,
+           "read_seconds": ld.read_seconds,
+           "decode_seconds": ld.decode_seconds,
+           "h2d_seconds": ld.h2d_seconds,
+           "resharded": ld.resharded}
+    if getattr(ld, "sched", ""):
+        out.update(sched=ld.sched,
+                   overlap_seconds=ld.overlap_seconds,
+                   stolen_chunks=ld.stolen_chunks,
+                   parity_rerouted_bytes=ld.parity_rerouted_bytes,
+                   rerouted_members=list(ld.rerouted_members),
+                   hedged_reads=ld.hedged_reads,
+                   hedged_wins=ld.hedged_wins)
+    return out
 
 
 def run_cluster_trade() -> list:
@@ -344,11 +357,101 @@ def run_delta(nbytes=SWEEP_BYTES) -> list:
     return rows
 
 
-def run(backends=SWEEP_BACKENDS, objstore=False, delta=False) -> list:
+def run_laggard(nbytes=LOADER_BYTES) -> list:
+    """Straggler rows: one survivor at 1/8 bandwidth, FCFS vs chunked
+    work-stealing vs stealing + parity-alternative routing, over the SAME
+    snapshot — every row's buffer is checked byte-identical, and the
+    smoke gates assert (a) adaptive beats FCFS by >= 1.5x under the
+    laggard and (b) adaptive costs nothing without one."""
+    import numpy as np
+
+    from benchmarks.common import make_param_state
+    from repro.core.coordinator import ReftGroup
+    from repro.core.loader import LoadStats, ShmSource, build_plan, \
+        load_bytes
+    from repro.core.readsched import SchedConfig, ThrottledSource
+    from repro.core.recovery import attach_survivors
+    from repro.core.snapshot import ReftConfig
+
+    fast = float(LAGGARD_FAST_BW)
+    slow = fast / LAGGARD_SLOW_FACTOR
+    cfgs = {"fcfs": SchedConfig(mode="fcfs"),
+            "steal": SchedConfig(mode="steal", chunk_bytes=1 << 20),
+            "adaptive": SchedConfig(mode="adaptive", chunk_bytes=1 << 20)}
+
+    rows = []
+    state = make_param_state(nbytes)
+    with tempfile.TemporaryDirectory() as d:
+        g = ReftGroup(4, state, ReftConfig(ckpt_dir=d,
+                                           checkpoint_every_snapshots=10**9))
+        try:
+            g.snapshot(state, 1)
+            total = g.total_bytes
+            views = attach_survivors(g.run, [0, 1, 2, 3], 4, total)
+            try:
+                def timed(tag, bws, cfg):
+                    src = ThrottledSource(ShmSource(views, 1), bws)
+                    st = LoadStats()
+                    plan = build_plan(4, total)
+                    t0 = time.perf_counter()
+                    buf, _ = load_bytes(plan, src, verify=False,
+                                        stats=st, sched=cfg)
+                    dt = time.perf_counter() - t0
+                    rows.append(row(tag, dt, f"sched={cfg.mode}",
+                                    **_stats_extra(st)))
+                    return dt, buf
+
+                uniform = {i: fast for i in range(4)}
+                lagged = dict(uniform)
+                lagged[LAGGARD_NODE] = slow
+                wall, oracle = {}, None
+                for name, cfg in cfgs.items():
+                    wall[name], buf = timed(f"laggard_restore_{name}",
+                                            lagged, cfg)
+                    if oracle is None:
+                        oracle = buf
+                    elif not np.array_equal(buf, oracle):
+                        raise SystemExit(
+                            f"laggard_restore_{name}: NOT byte-identical "
+                            f"to the FCFS oracle")
+                t_uf, buf_uf = timed("uniform_restore_fcfs", uniform,
+                                     cfgs["fcfs"])
+                t_ua, buf_ua = timed("uniform_restore_adaptive", uniform,
+                                     cfgs["adaptive"])
+                if not np.array_equal(buf_ua, buf_uf):
+                    raise SystemExit(
+                        "uniform_restore_adaptive: NOT byte-identical")
+                speedup = wall["fcfs"] / max(wall["adaptive"], 1e-9)
+                ratio = t_ua / max(t_uf, 1e-9)
+                rows.append(row("laggard_adaptive_speedup", speedup,
+                                f"gate>=1.5;slow_factor="
+                                f"{LAGGARD_SLOW_FACTOR}"))
+                rows.append(row("uniform_adaptive_ratio", ratio,
+                                "gate<=1.15"))
+                if wall["adaptive"] > 0.67 * wall["fcfs"]:
+                    raise SystemExit(
+                        f"laggard gate FAILED: adaptive "
+                        f"{wall['adaptive']:.3f}s > 0.67 x fcfs "
+                        f"{wall['fcfs']:.3f}s (speedup {speedup:.2f}x)")
+                if t_ua > 1.15 * t_uf + 0.05:
+                    raise SystemExit(
+                        f"uniform gate FAILED: adaptive {t_ua:.3f}s vs "
+                        f"fcfs {t_uf:.3f}s (ratio {ratio:.2f})")
+            finally:
+                for v in views.values():
+                    v.close()
+        finally:
+            g.close()
+    return rows
+
+
+def run(backends=SWEEP_BACKENDS, objstore=False, delta=False,
+        laggard=False) -> list:
     return (run_cluster_trade() + run_backend_sweep(backends)
             + run_loader_compare()
             + (run_objstore() if objstore else [])
-            + (run_delta() if delta else []))
+            + (run_delta() if delta else [])
+            + (run_laggard() if laggard else []))
 
 
 def main(argv=None):
@@ -364,9 +467,14 @@ def main(argv=None):
     ap.add_argument("--delta", action="store_true",
                     help="add delta-family rows (keyframe-only vs "
                          "keyframe+delta-chain restore)")
+    ap.add_argument("--laggard", action="store_true",
+                    help="add straggler rows (one survivor at 1/8 "
+                         "bandwidth: fcfs vs steal vs adaptive) with "
+                         "speedup smoke gates")
     args = ap.parse_args(argv)
     rows = run(tuple(args.backend) if args.backend else SWEEP_BACKENDS,
-               objstore=args.objstore, delta=args.delta)
+               objstore=args.objstore, delta=args.delta,
+               laggard=args.laggard)
     print("bench,seconds,derived")
     for r in rows:
         extra = ""

@@ -40,7 +40,7 @@ def reft_recovery_ladder(run: str, n: int, total_bytes: int, template: Any,
                          step: Optional[int] = None,
                          target: Optional[RestoreTarget] = None,
                          store=None, store_prefix: str = "families",
-                         store_retry=None) -> RestoreResult:
+                         store_retry=None, sched=None) -> RestoreResult:
     """Tiered recovery (paper §3 step 5 + the tier-4 remote rung):
       in-memory  — every member's SMP segments reachable, plain reassembly;
       raim5      — exactly one member missing, decode it from parity;
@@ -62,7 +62,8 @@ def reft_recovery_ladder(run: str, n: int, total_bytes: int, template: Any,
         info: dict = {}
         state, got_step, extra = restore_state(
             run, n, total_bytes, template, alive_nodes, info=info,
-            step=step, need=need, device_put=device_put, stats=stats)
+            step=step, need=need, device_put=device_put, stats=stats,
+            sched=sched)
         # tier reflects what the restore actually did: any member that had
         # to be decoded from parity (gone, corrupt, OR a laggard whose
         # buffers rotated past the chosen step) makes it raim5
@@ -80,7 +81,7 @@ def reft_recovery_ladder(run: str, n: int, total_bytes: int, template: Any,
         stats.target_n = target_n
         state, got_step, extra = restore_from_checkpoint(
             ckpt_dir, n, template, step=step, need=need,
-            device_put=device_put, stats=stats)
+            device_put=device_put, stats=stats, sched=sched)
         stats.tier = "checkpoint"
         stats.resharded = stats.saved_n != stats.target_n
         return RestoreResult(state=state, step=got_step, extra_meta=extra,
@@ -93,7 +94,7 @@ def reft_recovery_ladder(run: str, n: int, total_bytes: int, template: Any,
     stats.target_n = target_n
     state, got_step, extra = restore_from_objstore(
         store, store_prefix, n, template, step=step, need=need,
-        device_put=device_put, stats=stats, retry=store_retry)
+        device_put=device_put, stats=stats, retry=store_retry, sched=sched)
     stats.tier = "objstore"
     stats.resharded = stats.saved_n != stats.target_n
     return RestoreResult(state=state, step=got_step, extra_meta=extra,
@@ -153,6 +154,11 @@ class ReftCheckpointer(Checkpointer):
             delta_keyframe=opt.get("delta_keyframe", 8),
             delta_dirty_threshold=opt.get("delta_dirty_threshold", 0.6),
             delta_digest=opt.get("delta_digest", True),
+            # straggler-aware loading (docs/API.md "Straggler-aware
+            # loading"): restore-side read scheduler mode and token-bucket
+            # rate cap mirroring persist_bw_limit on the write side
+            restore_sched=opt.get("restore_sched", "adaptive"),
+            restore_bw_limit=opt.get("restore_bw_limit", 0.0),
         )
         self.group = ReftGroup(spec.sg_size, state_template, rcfg)
         self.manager = CheckpointManager(spec.ckpt_dir, spec.sg_size,
@@ -160,6 +166,9 @@ class ReftCheckpointer(Checkpointer):
         self._degraded_emitted: set = set()
         self._preempts: dict = {}       # node -> monotonic eviction deadline
         self._preempted: list = []      # nodes whose grace window expired
+        # optional FailureObserver attached by the session; its learned
+        # per-source bandwidths seed the read scheduler's EWMA priors
+        self.observer = None
 
     # ------------------------------------------------------------- save
     def snapshot(self, state, step, extra_meta=None, wait=False):
@@ -262,6 +271,28 @@ class ReftCheckpointer(Checkpointer):
         `ObjStoreCheckpointer` overrides it."""
         return {}
 
+    def _restore_sched(self):
+        """Build the read-scheduler config for this restore.
+
+        Mode and the token-bucket cap come from the spec options (via
+        `ReftConfig`); EWMA bandwidth priors come from the attached
+        `FailureObserver`'s per-source history when a session wired one
+        in, so a source that dragged the last restore starts this one
+        already marked slow.  Returns None for mode "fcfs" so the legacy
+        executor runs untouched.
+        """
+        from repro.core.readsched import SchedConfig
+        rcfg = self.group.cfg
+        if rcfg.restore_sched == "fcfs" and rcfg.restore_bw_limit <= 0:
+            return None
+        priors = {}
+        obs = getattr(self, "observer", None)
+        if obs is not None:
+            priors = dict(getattr(obs, "source_bw", {}) or {})
+        return SchedConfig(mode=rcfg.restore_sched,
+                           restore_bw_limit=rcfg.restore_bw_limit,
+                           priors=priors)
+
     def restore(self, step=None, target=None):
         from repro.core.coordinator import NodeState
         if target is None:
@@ -286,7 +317,8 @@ class ReftCheckpointer(Checkpointer):
         res = reft_recovery_ladder(
             self.group.run, self.group.n, self.group.total_bytes,
             self.group.template, alive, self.spec.ckpt_dir,
-            step=step, target=target, **self._ladder_extra())
+            step=step, target=target, sched=self._restore_sched(),
+            **self._ladder_extra())
         ld = res.load
         self.emit("restore", res.step, seconds=time.perf_counter() - t0,
                   tier=res.tier, nbytes=ld.bytes_read if ld else 0,
@@ -356,6 +388,10 @@ class ReftCheckpointer(Checkpointer):
             s.get("persist_throttle_seconds", 0.0) for s in eng)
         out["persist_bw_limit"] = float(
             self.spec.options.get("persist_bw_limit", 0.0))
+        out["restore_bw_limit"] = float(
+            self.spec.options.get("restore_bw_limit", 0.0))
+        out["restore_sched"] = self.spec.options.get(
+            "restore_sched", "adaptive")
         out["skipped_buckets"] = sum(s.get("skipped_buckets", 0)
                                      for s in eng)
         out["delta_flights"] = sum(s.get("delta_flights", 0) for s in eng)

@@ -21,6 +21,11 @@ spec.options (on top of the reft backend's):
   scrub_every_s  scrubber cadence; 0 disables the daemon (manual
                  `scrub()` still works)                      [300.0]
   scrub_repair   let the scrubber rewrite repaired blocks     [True]
+
+The reft backend's `restore_sched` / `restore_bw_limit` options are
+inherited and apply to every rung here too — remote ranged reads go
+through the same straggler-aware chunk scheduler and token bucket as
+shm and tier-3 file reads (docs/API.md "Straggler-aware loading").
 """
 from __future__ import annotations
 

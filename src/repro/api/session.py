@@ -54,6 +54,9 @@ class CheckpointSession:
         self.run_id = spec.run_id
         self.checkpointer: Checkpointer = spec.build(state_template)
         self.checkpointer.on_event = on_event
+        # hand the observer to the backend so restores can seed the read
+        # scheduler's bandwidth priors from cross-restore history
+        self.checkpointer.observer = observer
         # restore-on-entry (and every sess.restore()) declares the CURRENT
         # layout so a checkpoint saved under a different sg_size/mesh is
         # resharded by the distributed loader (elastic n->m restart)

@@ -629,9 +629,14 @@ class LoadStats:
     bytes_needed: int = 0          # plan coverage of the flat stream
     bytes_read: int = 0            # bytes copied out of sources
     decoded_bytes: int = 0         # failed-member bytes rebuilt from parity
-    read_seconds: float = 0.0      # parallel read phase (wall; decode runs
-                                   # on the same pool, inside this window)
-    decode_seconds: float = 0.0    # decode task's overlapped share
+    read_seconds: float = 0.0      # direct-read span: first read start to
+                                   # last read completion (plus CRC probe
+                                   # traffic, which precedes the plan)
+    decode_seconds: float = 0.0    # decode span: first decode start to
+                                   # last decode end (overlaps reads)
+    overlap_seconds: float = 0.0   # intersection of the two spans, so
+                                   # read + decode - overlap never
+                                   # double-counts concurrent phases
     h2d_seconds: float = 0.0       # overlapped jax.device_put drain
     wall_seconds: float = 0.0
     members: Tuple[int, ...] = ()  # members actually read
@@ -639,6 +644,15 @@ class LoadStats:
     probe_segments: int = 0        # per-stripe digests verified (partial
                                    # plans: segments read, not whole shards)
     parallel_readers: int = 0
+    # adaptive scheduler accounting (readsched.ChunkScheduler)
+    sched: str = ""                # "" = legacy FCFS executor
+    stolen_chunks: int = 0         # chunks run off their home affinity
+    parity_rerouted_bytes: int = 0  # live-member bytes served via parity
+    rerouted_members: Tuple[int, ...] = ()
+    hedged_reads: int = 0          # duplicate tail reads issued
+    hedged_wins: int = 0           # duplicates that beat the original
+    source_bandwidth: Dict[str, float] = field(
+        default_factory=dict)      # "kind:node" -> EWMA bytes/s
 
     def to_dict(self) -> dict:
         return {k: (list(v) if isinstance(v, tuple) else v)
@@ -900,25 +914,50 @@ def execute_plan(plan: LoadPlan, source, sink, *,
                  verify: bool = True,
                  workers: Optional[int] = None,
                  chunk_bytes: int = CHUNK_BYTES,
-                 stats: Optional[LoadStats] = None) -> LoadStats:
+                 stats: Optional[LoadStats] = None,
+                 sched=None) -> LoadStats:
     """Run the plan: parallel per-member ranged reads (with the member's
     own-region CRC folded into the pass when the plan covers its full
     shard), plus range-limited RAIM5 decode of the failed member.
 
+    `sched` (a `readsched.SchedConfig`) selects the executor: None or
+    mode "fcfs" runs the legacy one-task-per-member path below; "steal" /
+    "adaptive" route through `readsched.ChunkScheduler` (chunked work
+    stealing, EWMA bandwidth model, parity-alternative routing, hedged
+    tail reads, pipelined decode).  A non-zero `sched.restore_bw_limit`
+    throttles EITHER path through a shared token bucket, mirroring the
+    persist side's `persist_bw_limit`.
+
     Raises `CrcMismatch` when a fully-read member's streamed digest does
     not match its recorded `crc_own` — callers demote that member and
-    re-plan (RAIM5's single-member budget permitting)."""
+    re-plan (RAIM5's single-member budget permitting).  The adaptive
+    path may also raise `readsched.SourceLost` (a member died mid-read
+    and could not be cleanly rerouted to parity); the ladder demotes it
+    the same way."""
     st = stats if stats is not None else LoadStats()
+    if sched is not None and getattr(sched, "restore_bw_limit", 0.0) > 0:
+        from .readsched import BucketedSource
+        from .smp import _TokenBucket
+        if not isinstance(source, BucketedSource):
+            source = BucketedSource(
+                source, _TokenBucket(sched.restore_bw_limit,
+                                     threadsafe=True))
+    if sched is not None and sched.mode != "fcfs":
+        from .readsched import ChunkScheduler
+        return ChunkScheduler(plan, source, sink, verify=verify,
+                              cfg=sched, stats=st).run()
     st.source = getattr(source, "kind", "")
     st.saved_n = plan.n
     st.bytes_needed = plan.bytes_needed
     st.members = tuple(sorted(plan.reads))
+    st.sched = "fcfs"
     if verify:
         st.crc_members = ()    # only the attempt that produced the result
                                # counts (a CrcMismatch retry re-enters here);
                                # verify=False keeps a prior probe's record
     lock = threading.Lock()
     t_wall = time.perf_counter()
+    marks = {"read_end": 0.0, "d0": 0.0, "d1": 0.0}
 
     expected: Dict[int, Any] = {}
     if verify:
@@ -996,6 +1035,8 @@ def execute_plan(plan: LoadPlan, source, sink, *,
                         sink.write(g, data)
         with lock:
             st.bytes_read += nread
+            marks["read_end"] = max(marks["read_end"],
+                                    time.perf_counter())
 
     def run_decode():
         if plan.failed is None or not plan.decode:
@@ -1046,7 +1087,7 @@ def execute_plan(plan: LoadPlan, source, sink, *,
                     st.decoded_bytes += o2 - o1
         with lock:
             st.bytes_read += nread[0]
-            st.decode_seconds += time.perf_counter() - t0
+            marks["d0"], marks["d1"] = t0, time.perf_counter()
 
     tasks: List[Callable[[], None]] = [
         (lambda nd=node: read_member(nd)) for node in plan.reads]
@@ -1074,29 +1115,37 @@ def execute_plan(plan: LoadPlan, source, sink, *,
             if err is not None:
                 raise err
     st.crc_members = tuple(sorted(st.crc_members))
-    # read_seconds is the WALL of the parallel read phase; the decode task
-    # runs on the same pool, so decode_seconds is its (overlapped) share,
-    # not a disjoint addend
-    st.read_seconds += time.perf_counter() - t0
+    # consistent phase attribution: read_seconds is the direct-read span,
+    # decode_seconds the decode task's span, overlap_seconds their
+    # intersection — read + decode - overlap never double-counts the
+    # decode work that ran inside the read window
+    if marks["read_end"]:
+        st.read_seconds += marks["read_end"] - t0
+    if marks["d1"]:
+        st.decode_seconds += marks["d1"] - marks["d0"]
+        r_end = marks["read_end"] or t0
+        st.overlap_seconds += max(
+            0.0, min(r_end, marks["d1"]) - max(t0, marks["d0"]))
     st.wall_seconds += time.perf_counter() - t_wall
     return st
 
 
 def load_bytes(plan: LoadPlan, source, *, verify: bool = True,
                workers: Optional[int] = None,
-               stats: Optional[LoadStats] = None
-               ) -> Tuple[np.ndarray, LoadStats]:
+               stats: Optional[LoadStats] = None,
+               sched=None) -> Tuple[np.ndarray, LoadStats]:
     """Plan -> one contiguous flat buffer (zeros outside `plan.need`)."""
     sink = FlatSink(plan.total_bytes)
     st = execute_plan(plan, source, sink, verify=verify, workers=workers,
-                      stats=stats)
+                      stats=stats, sched=sched)
     return sink.buf, st
 
 
 def load_tree(plan: LoadPlan, source, template: Any, spec: FlatSpec, *,
               verify: bool = True, device_put: bool = False,
               workers: Optional[int] = None,
-              stats: Optional[LoadStats] = None) -> Tuple[Any, LoadStats]:
+              stats: Optional[LoadStats] = None,
+              sched=None) -> Tuple[Any, LoadStats]:
     """Plan -> pytree, assembled leaf-streamed: each leaf's array is
     built directly from its ranged reads (no full-state buffer), and with
     `device_put=True` finished leaves start their h2d transfer while
@@ -1129,7 +1178,7 @@ def load_tree(plan: LoadPlan, source, template: Any, spec: FlatSpec, *,
     sink = LeafSink(spec, plan.need, on_leaf=finish,
                     template_bytes=template_bytes)
     execute_plan(plan, source, sink, verify=verify, workers=workers,
-                 stats=st)
+                 stats=st, sched=sched)
     out = []
     for i, ls in enumerate(spec.leaves):
         arr = done.get(i)

@@ -153,6 +153,10 @@ class FailureObserver:
     failures: list = field(default_factory=list)     # timestamps
     restores: dict = field(default_factory=lambda: {"snapshot": [],
                                                     "checkpoint": []})
+    # learned per-source effective bandwidth (bytes/s) keyed "kind:node",
+    # harvested from each restore's LoadStats; seeds the next restore's
+    # read-scheduler EWMA priors so a known-slow source starts slow
+    source_bw: dict = field(default_factory=dict)
     _t0: float = None
 
     def __post_init__(self):
@@ -166,16 +170,30 @@ class FailureObserver:
                        load=None) -> None:
         """Log one restore's cost.  `load` (a LoadStats) refines the
         wall-clock `seconds` with per-phase read/decode/h2d attribution
-        when available."""
+        when available.  Read and decode are span-based and may overlap
+        (pipelined decode), so the phased total subtracts the measured
+        intersection instead of double-counting it."""
         if load is not None:
             phased = (getattr(load, "read_seconds", 0.0)
                       + getattr(load, "decode_seconds", 0.0)
+                      - getattr(load, "overlap_seconds", 0.0)
                       + getattr(load, "h2d_seconds", 0.0))
             seconds = max(seconds, phased)
+            for key, bw in (getattr(load, "source_bandwidth", None)
+                            or {}).items():
+                self.record_source_bw(key, bw)
         cls = "snapshot" if tier in SNAPSHOT_TIERS else "checkpoint"
         bucket = self.restores[cls]
         bucket.append(float(seconds))
         del bucket[:-self.window]
+
+    def record_source_bw(self, key: str, bw: float) -> None:
+        """Blend one observed effective bandwidth (bytes/s) for a restore
+        source into the cross-restore estimate (equal-weight EWMA)."""
+        if bw is None or bw <= 0:
+            return
+        prev = self.source_bw.get(key)
+        self.source_bw[key] = bw if prev is None else 0.5 * prev + 0.5 * bw
 
     def observed_span(self) -> float:
         return max(self.clock() - self._t0, 1e-9)

@@ -30,6 +30,7 @@ from repro.core.loader import (
     CHUNK_BYTES, ChainSource, CrcMismatch, DeltaLayer, FileSource, LoadStats,
     ShmSource, build_plan, load_bytes, load_tree, probe_crc, stream_crc,
 )
+from repro.core.readsched import SourceLost
 from repro.core.smp import ReadOnlyNode
 from repro.core.treebytes import FlatSpec
 
@@ -90,13 +91,14 @@ def verify_crc(view: ReadOnlyNode, step: int, n: int, total_bytes: int,
 def restore_bytes(views: Dict[int, ReadOnlyNode], n: int, total_bytes: int,
                   step: int, failed: Optional[int] = None,
                   need: Optional[Sequence[Tuple[int, int]]] = None,
-                  stats: Optional[LoadStats] = None) -> np.ndarray:
+                  stats: Optional[LoadStats] = None,
+                  sched=None) -> np.ndarray:
     """State bytes at `step` via the ranged loader; RAIM5-decodes exactly
     the plan-intersecting sub-ranges of `failed` if set.  With `need`,
     bytes outside the requested ranges stay zero."""
     plan = build_plan(n, total_bytes, need=need, failed=failed)
     buf, _ = load_bytes(plan, ShmSource(views, step), verify=False,
-                        stats=stats)
+                        stats=stats, sched=sched)
     return buf
 
 
@@ -104,8 +106,8 @@ def _load_with_demotion(n: int, total_bytes: int, template: Any,
                         spec: FlatSpec, source_of, holders: List[int],
                         absent: List[int],
                         need: Optional[Sequence[Tuple[int, int]]],
-                        device_put: bool, stats: LoadStats
-                        ) -> Tuple[Any, List[int], List[int]]:
+                        device_put: bool, stats: LoadStats,
+                        sched=None) -> Tuple[Any, List[int], List[int]]:
     """Execute the plan for one candidate step, folding each fully-read
     member's CRC into its read pass (full plans) or streaming a probe of
     the members the plan reads first (partial plans — `crc_own` is a
@@ -114,7 +116,10 @@ def _load_with_demotion(n: int, total_bytes: int, template: Any,
 
     `source_of(usable)` builds the range source over the given members.
     Returns (tree, usable, corrupt); raises `RecoveryError` when the
-    demotions exceed the parity budget."""
+    demotions exceed the parity budget.  The adaptive scheduler's
+    `SourceLost` (a member died mid-read and its chunks could not be
+    cleanly rerouted to parity) demotes exactly like a digest mismatch —
+    this loop is the ladder's mid-flight re-plan acceptance."""
     corrupt: List[int] = []
     probed_ok: set = set()
     while True:
@@ -138,14 +143,20 @@ def _load_with_demotion(n: int, total_bytes: int, template: Any,
             if bad:
                 corrupt.extend(bad)
                 continue
-            tree, _ = load_tree(plan, src, template, spec, verify=False,
-                                device_put=device_put, stats=stats)
-            return tree, usable, corrupt
+            try:
+                tree, _ = load_tree(plan, src, template, spec,
+                                    verify=False, device_put=device_put,
+                                    stats=stats, sched=sched)
+                return tree, usable, corrupt
+            except SourceLost as e:
+                corrupt.append(e.node)
+                continue
         try:
             tree, _ = load_tree(plan, src, template, spec, verify=True,
-                                device_put=device_put, stats=stats)
+                                device_put=device_put, stats=stats,
+                                sched=sched)
             return tree, usable, corrupt
-        except CrcMismatch as e:
+        except (CrcMismatch, SourceLost) as e:
             corrupt.append(e.node)
 
 
@@ -155,8 +166,8 @@ def restore_state(run: str, n: int, total_bytes: int, template: Any,
                   step: Optional[int] = None,
                   need: Optional[Sequence[Tuple[int, int]]] = None,
                   device_put: bool = False,
-                  stats: Optional[LoadStats] = None
-                  ) -> Tuple[Any, int, dict]:
+                  stats: Optional[LoadStats] = None,
+                  sched=None) -> Tuple[Any, int, dict]:
     """End-to-end in-memory restore. Returns (state_tree, step, extra_meta).
 
     Raises RecoveryError when more than one node per SG is gone (tier 3
@@ -194,7 +205,7 @@ def restore_state(run: str, n: int, total_bytes: int, template: Any,
                     _spec_of(views, holders, cand),
                     lambda members, c=cand: ShmSource(
                         {nd: views[nd] for nd in members}, c),
-                    holders, absent, need, device_put, st)
+                    holders, absent, need, device_put, st, sched=sched)
             except RecoveryError:
                 continue
             chosen = (cand, tree, usable, corrupt)
@@ -416,8 +427,8 @@ def restore_from_checkpoint(ckpt_dir: str, n: int, template: Any,
                             step: Optional[int] = None,
                             need: Optional[Sequence[Tuple[int, int]]] = None,
                             device_put: bool = False,
-                            stats: Optional[LoadStats] = None
-                            ) -> Tuple[Any, int, dict]:
+                            stats: Optional[LoadStats] = None,
+                            sched=None) -> Tuple[Any, int, dict]:
     """Rebuild from REFT-Ckpt files through the same `LoadPlan` executors
     as the in-memory tiers: per-member-parallel ranged file reads, CRC
     folded into the pass, RAIM5 demotion of a corrupt shard, and elastic
@@ -463,7 +474,8 @@ def restore_from_checkpoint(ckpt_dir: str, n: int, template: Any,
             holders = list(src.nodes)
             tree, usable, corrupt = _load_with_demotion(
                 saved_n, src.total_bytes, template, spec,
-                lambda members: src, holders, [], need, device_put, st)
+                lambda members: src, holders, [], need, device_put, st,
+                sched=sched)
             return tree, src.step, meta.get("extra", {})
         except (RecoveryError, KeyError, TypeError, ValueError, EOFError,
                 pickle.UnpicklingError) as e:
@@ -521,7 +533,7 @@ def restore_from_objstore(store, prefix: str, n: int, template: Any,
                           need: Optional[Sequence[Tuple[int, int]]] = None,
                           device_put: bool = False,
                           stats: Optional[LoadStats] = None,
-                          retry=None) -> Tuple[Any, int, dict]:
+                          retry=None, sched=None) -> Tuple[Any, int, dict]:
     """Rebuild from a remote object-store family: the manifest names the
     shard objects and saved topology, `ObjectSource` turns `LoadPlan`
     ranges into positioned remote reads (no local staging copy), and the
@@ -573,7 +585,8 @@ def restore_from_objstore(store, prefix: str, n: int, template: Any,
                     f"remote family step {cand}: no member meta parseable")
             tree, usable, corrupt = _load_with_demotion(
                 saved_n, src.total_bytes, template, spec,
-                lambda members: src, holders, absent, need, device_put, st)
+                lambda members: src, holders, absent, need, device_put, st,
+                sched=sched)
             return tree, src.step, meta.get("extra", {})
         except (RecoveryError, StoreError, KeyError, TypeError, ValueError,
                 EOFError, pickle.UnpicklingError) as e:

@@ -442,16 +442,22 @@ class _TokenBucket:
     when the bucket runs dry the persist worker sleeps until the deficit
     refills — trainer-side snapshots never block (the buffer is pinned,
     `begin` just picks another).  Burst is a quarter second of rate so
-    small shards pass untouched."""
+    small shards pass untouched.
 
-    def __init__(self, rate_bytes_s: float):
+    The restore side shares this class (`restore_bw_limit` via
+    `readsched.BucketedSource`); pass `threadsafe=True` there — many
+    reader threads charge one bucket, so the token arithmetic runs under
+    a lock while the deficit sleep stays outside it."""
+
+    def __init__(self, rate_bytes_s: float, threadsafe: bool = False):
         self.rate = float(rate_bytes_s)
         self.burst = max(self.rate * 0.25, float(1 << 20))
         self.tokens = self.burst
         self.t_last = time.perf_counter()
         self.throttled_s = 0.0
+        self._lock = threading.Lock() if threadsafe else None
 
-    def consume(self, nbytes: int) -> None:
+    def _tick(self, nbytes: int) -> float:
         now = time.perf_counter()
         self.tokens = min(self.burst,
                           self.tokens + (now - self.t_last) * self.rate)
@@ -460,6 +466,16 @@ class _TokenBucket:
         if self.tokens < 0:
             wait = -self.tokens / self.rate
             self.throttled_s += wait
+            return wait
+        return 0.0
+
+    def consume(self, nbytes: int) -> None:
+        if self._lock is None:
+            wait = self._tick(nbytes)
+        else:
+            with self._lock:
+                wait = self._tick(nbytes)
+        if wait > 0:
             time.sleep(wait)
 
 

@@ -80,6 +80,14 @@ class ReftConfig:
     ranged_fetch: str = "auto"       # sparse delta flights d2h only the
                                      # touched leaf extents: "auto" (on iff
                                      # a real accelerator) | "on" | "off"
+    # --- straggler-aware loading (docs/API.md "Straggler-aware loading") ---
+    restore_sched: str = "adaptive"  # restore read executor: "fcfs"
+                                     # (legacy one-thread-per-member) |
+                                     # "steal" (chunked work-stealing) |
+                                     # "adaptive" (+ parity reroute/hedges)
+    restore_bw_limit: float = 0.0    # token-bucket cap (bytes/s) on all
+                                     # restore reads; 0 = unlimited
+                                     # (read-side twin of persist_bw_limit)
 
 
 class SnapshotEngine:

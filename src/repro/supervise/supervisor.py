@@ -295,8 +295,19 @@ class Supervisor:
         return res.state, res.step
 
     def _perf_fault(self, sc: Scenario, cur_step: int):
-        """laggard / slow-persist: inject, remember the remediation."""
+        """laggard / slow-persist: inject, remember the remediation.
+
+        A laggard additionally runs a VERIFICATION restore through the
+        straggler-aware read scheduler while the member is stopped: no
+        state is adopted (the trainer never lost anything), but the
+        restore must come back bit-exact and its wall clock / tier land
+        in the fault event — this is exactly the window where adaptive
+        scheduling (work stealing, parity reroute) earns its keep, and
+        the restore's LoadStats feed the observer's bandwidth priors.
+        Disable with scenario param verify_restore=False.
+        """
         params = sc.merged_params()
+        verify_restore = bool(params.pop("verify_restore", True))
         if sc.kind == "slow-persist":
             node = sc.node % self.spec.sg_size
             e = self.sess.checkpointer.group.engines[node]
@@ -305,8 +316,29 @@ class Supervisor:
             self._slow_resets.append((due, node, old))
         self.sess.inject(sc.kind, node=sc.node % self.spec.sg_size,
                          graceful=sc.graceful, **params)
+        extra = {}
+        if sc.kind == "laggard" and verify_restore:
+            t0 = time.monotonic()
+            try:
+                res, attempts = self._restore_with_backoff()
+            except Exception as e:
+                self.log(f"[supervisor] laggard verification restore "
+                         f"failed: {e}")
+                self.unrecovered += 1
+                extra = {"restore_s": time.monotonic() - t0,
+                         "recovered": False}
+            else:
+                ld = res.load
+                extra = {"restore_s": time.monotonic() - t0,
+                         "tier": res.tier, "attempts": attempts,
+                         "bit_exact": self._bit_exact(res),
+                         "sched": getattr(ld, "sched", "") if ld else "",
+                         "stolen_chunks": getattr(ld, "stolen_chunks", 0)
+                         if ld else 0}
+            self.ledger.mark("restore")
         self._record(kind=sc.kind, node=sc.node, fired_step=sc.step,
-                     graceful=sc.graceful, recovered=True, perf_only=True,
+                     graceful=sc.graceful, perf_only=True,
+                     **{"recovered": True, **extra},
                      **{k: v for k, v in params.items()
                         if isinstance(v, (int, float))})
 

@@ -1,0 +1,498 @@
+"""Straggler-aware restore: chunked work-stealing reads, EWMA bandwidth
+model, parity-alternative routing, hedged tail reads, and pipelined
+decode (`repro.core.readsched`) — byte-identity against the FCFS oracle
+is the hard invariant throughout."""
+import threading
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import ReftConfig, ReftGroup, raim5
+from repro.core.loader import (
+    CrcMismatch, FlatSink, LoadStats, ShmSource, build_plan, load_bytes,
+    member_shard_need,
+)
+from repro.core.readsched import (
+    BucketedSource, ChunkScheduler, SchedConfig, SourceBandwidth,
+    SourceLost, ThrottledSource,
+)
+from repro.core.recovery import attach_survivors, restore_bytes, restore_state
+from repro.core.treebytes import make_flat_spec
+
+
+def small_state(seed=0):
+    k = jax.random.PRNGKey(seed)
+    return {
+        "params": {"w": jax.random.normal(k, (64, 32)),
+                   "b": jnp.ones((17,), jnp.bfloat16)},
+        "opt": {"mu": jnp.zeros((64, 32)), "step": jnp.int32(0)},
+        "rng": jax.random.PRNGKey(seed + 1),
+    }
+
+
+def trees_equal(a, b):
+    return all(np.array_equal(np.asarray(x), np.asarray(y))
+               for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)))
+
+
+@pytest.fixture
+def group(tmp_path):
+    state = small_state()
+    cfg = ReftConfig(bucket_bytes=1024, stage_slots=4,
+                     ckpt_dir=str(tmp_path),
+                     checkpoint_every_snapshots=10 ** 6)
+    g = ReftGroup(4, state, cfg)
+    yield g, state
+    g.close()
+
+
+@pytest.fixture
+def views(group):
+    g, state = group
+    g.snapshot(state, 1)
+    vs = attach_survivors(g.run, list(range(4)), 4, g.total_bytes)
+    yield g, vs
+    for v in vs.values():
+        v.close()
+
+
+def _oracle(views, n, total_bytes, failed=None, need=None):
+    """FCFS legacy executor = the byte-identity oracle."""
+    plan = build_plan(n, total_bytes, need=need, failed=failed)
+    buf, _ = load_bytes(plan, ShmSource(views, 1), verify=True)
+    return buf
+
+
+class DyingSource:
+    """ShmSource wrapper: node `die_node`'s reads raise after the first
+    `allow` successful calls (a member whose SMP/NIC dies mid-restore).
+    An optional per-read `delay_s` on that node makes it measurably slow
+    first, so the EWMA model sees a laggard before the death."""
+
+    def __init__(self, inner, die_node, allow=0, delay_s=0.0):
+        self._inner = inner
+        self.die_node = die_node
+        self.allow = allow
+        self.delay_s = delay_s
+        self._calls = 0
+        self._lock = threading.Lock()
+        self.kind = getattr(inner, "kind", "")
+
+    def _gate(self, node):
+        if node != self.die_node:
+            return
+        with self._lock:
+            self._calls += 1
+            if self._calls > self.allow:
+                raise OSError(f"node {node} connection reset")
+        if self.delay_s:
+            import time
+            time.sleep(self.delay_s)
+
+    def nodes(self):
+        return self._inner.nodes()
+
+    def meta(self, node):
+        return self._inner.meta(node)
+
+    def read_local(self, node, lo, hi):
+        self._gate(node)
+        return self._inner.read_local(node, lo, hi)
+
+    def read_block_range(self, node, stripe, index, o1, o2):
+        self._gate(node)
+        return self._inner.read_block_range(node, stripe, index, o1, o2)
+
+    def read_parity_range(self, stripe, o1, o2):
+        self._gate(stripe)
+        return self._inner.read_parity_range(stripe, o1, o2)
+
+
+class AuditedSink:
+    """FlatSink that records every written extent and fails the test on
+    any overlap — the hedge/steal claim discipline must make double
+    writes impossible."""
+
+    def __init__(self, total_bytes):
+        self._sink = FlatSink(total_bytes)
+        self._lock = threading.Lock()
+        self.extents = []
+
+    @property
+    def buf(self):
+        return self._sink.buf
+
+    def write(self, g, data):
+        with self._lock:
+            a, b = g, g + data.nbytes
+            for x, y in self.extents:
+                assert b <= x or a >= y, \
+                    f"overlapping write [{a},{b}) vs [{x},{y})"
+            self.extents.append((a, b))
+        self._sink.write(g, data)
+
+
+# ------------------------------------------------------- bandwidth model
+def test_source_bandwidth_ewma_priors_and_death():
+    bw = SourceBandwidth(alpha=0.5, priors={"shm:0": 100.0, "shm:9": -1})
+    assert bw.bandwidth("shm:0") == 100.0
+    assert bw.samples("shm:0") == 0          # priors carry no live samples
+    assert bw.bandwidth("shm:9") is None     # non-positive prior dropped
+    bw.observe("shm:0", 300, 1.0)
+    assert bw.bandwidth("shm:0") == pytest.approx(200.0)   # 0.5/0.5 blend
+    assert bw.samples("shm:0") == 1
+    bw.observe("shm:1", 50, 0.0)             # degenerate timing ignored
+    assert bw.bandwidth("shm:1") is None
+    bw.mark_dead("shm:0")
+    assert bw.bandwidth("shm:0") is None
+    assert "shm:0" not in bw.snapshot()
+
+
+# -------------------------------------------- byte identity vs the oracle
+@pytest.mark.parametrize("mode", ["steal", "adaptive"])
+@pytest.mark.parametrize("chunk", [777, 4096])
+def test_scheduler_byte_identical_to_fcfs(views, mode, chunk):
+    g, vs = views
+    want = _oracle(vs, 4, g.total_bytes)
+    plan = build_plan(4, g.total_bytes)
+    cfg = SchedConfig(mode=mode, chunk_bytes=chunk)
+    got, st = load_bytes(plan, ShmSource(vs, 1), verify=True, sched=cfg)
+    np.testing.assert_array_equal(got, want)
+    assert st.sched == mode
+    # full verification discipline: every member folds crc_own, except a
+    # member the adaptive path rerouted under scheduling jitter (rare) —
+    # its sticky blocks were digest-checked instead
+    assert set(st.crc_members) == set(range(4)) - set(st.rerouted_members)
+    if mode == "steal":
+        assert st.rerouted_members == ()     # steal never reroutes
+
+
+def test_steal_moves_work_off_slow_member(views):
+    """With one member throttled, fast members' workers steal its queued
+    chunks; result stays byte-identical and fully verified."""
+    g, vs = views
+    want = _oracle(vs, 4, g.total_bytes)
+    slow = ThrottledSource(ShmSource(vs, 1), {2: 200_000.0})
+    plan = build_plan(4, g.total_bytes)
+    cfg = SchedConfig(mode="steal", chunk_bytes=512)
+    got, st = load_bytes(plan, slow, verify=True, sched=cfg)
+    np.testing.assert_array_equal(got, want)
+    assert st.stolen_chunks > 0
+    assert st.crc_members == (0, 1, 2, 3)
+    assert "slow+shm:2" in st.source_bandwidth
+
+
+def test_adaptive_reroutes_laggard_to_parity(views):
+    """A member slow enough that parity reconstruction beats waiting gets
+    its queued chunks converted to decode work mid-flight — today parity
+    only serves dead members.  Byte identity must survive the reroute,
+    and the laggard's directly-read blocks are digest-checked."""
+    g, vs = views
+    want = _oracle(vs, 4, g.total_bytes)
+    slow = ThrottledSource(ShmSource(vs, 1), {1: 20_000.0})
+    plan = build_plan(4, g.total_bytes)
+    cfg = SchedConfig(mode="adaptive", chunk_bytes=512, min_samples=1,
+                      reroute_factor=1.0)
+    got, st = load_bytes(plan, slow, verify=True, sched=cfg)
+    np.testing.assert_array_equal(got, want)
+    assert st.rerouted_members == (1,)
+    assert st.parity_rerouted_bytes > 0
+    # the rerouted member can't fold crc_own (decoded blocks were never
+    # read); everyone else still verifies in full
+    assert set(st.crc_members) == {0, 2, 3}
+
+
+def test_laggard_dies_after_reroute_with_landed_bytes_demotes(views):
+    """The laggard dies after being rerouted, leaving a partially-read
+    sticky block whose landed bytes can no longer be digest-verified:
+    the scheduler must surface SourceLost (never silently trust them),
+    and the ladder-style demote-and-replan recovers byte-identically."""
+    g, vs = views
+    want = _oracle(vs, 4, g.total_bytes)
+    # node 1: one slow successful read (feeds the EWMA a laggard sample),
+    # every later read raises — death strikes while block 0 is half-read.
+    # Fast priors on the healthy members keep a single jittery chunk
+    # timing from ever qualifying them for the reroute, so the laggard
+    # is deterministically the member that gets converted; min_samples=1
+    # still defers the reroute until node 1's sticky read has landed.
+    src = DyingSource(ShmSource(vs, 1), die_node=1, allow=1, delay_s=0.05)
+    plan = build_plan(4, g.total_bytes)
+    cfg = SchedConfig(mode="adaptive", chunk_bytes=512, min_samples=1,
+                      reroute_factor=1.0, min_eta_s=0.0,
+                      inflight_per_source=1,
+                      priors={"shm:0": 1e9, "shm:2": 1e9, "shm:3": 1e9})
+    with pytest.raises(SourceLost) as ei:
+        load_bytes(plan, src, verify=True, sched=cfg)
+    assert ei.value.node == 1
+    plan2 = build_plan(4, g.total_bytes, failed=1)
+    got, st = load_bytes(plan2, ShmSource(vs, 1), verify=True, sched=cfg)
+    np.testing.assert_array_equal(got, want)
+    assert st.decoded_bytes > 0
+
+
+def test_known_slow_prior_reroutes_before_death_never_retouched(views):
+    """Cross-restore priors mark the laggard slow BEFORE any read (the
+    FailureObserver feedback path): the adaptive scheduler reroutes its
+    entire plan share to parity decode up front, so when the member dies
+    on first touch the restore completes without it — at most one read
+    ever reaches the dead source."""
+    g, vs = views
+    want = _oracle(vs, 4, g.total_bytes)
+    src = DyingSource(ShmSource(vs, 1), die_node=1, allow=0)
+    plan = build_plan(4, g.total_bytes)
+    cfg = SchedConfig(mode="adaptive", chunk_bytes=512, min_samples=0,
+                      reroute_factor=1.0, min_eta_s=0.0,
+                      inflight_per_source=1,
+                      priors={"shm:1": 1.0, "shm:0": 1e9,
+                              "shm:2": 1e9, "shm:3": 1e9})
+    got, st = load_bytes(plan, src, verify=True, sched=cfg)
+    np.testing.assert_array_equal(got, want)
+    assert st.rerouted_members == (1,)
+    assert st.parity_rerouted_bytes > 0
+    assert set(st.crc_members) == {0, 2, 3}
+    assert src._calls <= 1                   # the dead member: one touch max
+
+
+def test_death_without_parity_budget_raises_sourcelost(views):
+    """mode="steal" has no parity-alternative routing: a member dying
+    mid-read surfaces SourceLost, and the ladder-style re-plan with that
+    member marked failed recovers byte-identically (fresh sink)."""
+    g, vs = views
+    want = _oracle(vs, 4, g.total_bytes)
+    src = DyingSource(ShmSource(vs, 1), die_node=3, allow=1)
+    plan = build_plan(4, g.total_bytes)
+    cfg = SchedConfig(mode="steal", chunk_bytes=512,
+                      inflight_per_source=1)
+    with pytest.raises(SourceLost) as ei:
+        load_bytes(plan, src, verify=True, sched=cfg)
+    assert ei.value.node == 3
+    # demote-and-replan, exactly what _load_with_demotion does
+    plan2 = build_plan(4, g.total_bytes, failed=3)
+    got, st = load_bytes(plan2, ShmSource(vs, 1), verify=True, sched=cfg)
+    np.testing.assert_array_equal(got, want)
+    assert st.decoded_bytes > 0
+
+
+# --------------------------------------------------- hedged duplicate reads
+def test_hedged_reads_never_double_write(views):
+    """Aggressive hedging (every running chunk is hedge-eligible almost
+    immediately) against a uniformly slow source: claims are CAS-style,
+    so the audited sink must never see overlapping writes and the result
+    stays byte-identical."""
+    g, vs = views
+    want = _oracle(vs, 4, g.total_bytes)
+    slow = ThrottledSource(ShmSource(vs, 1),
+                           {i: 2_000_000.0 for i in range(4)})
+    plan = build_plan(4, g.total_bytes)
+    cfg = SchedConfig(mode="adaptive", chunk_bytes=2048,
+                      hedge_factor=0.001, max_hedges=64,
+                      reroute_factor=10 ** 9)   # isolate hedging
+    sink = AuditedSink(g.total_bytes)
+    sched = ChunkScheduler(plan, slow, sink, verify=True, cfg=cfg,
+                           stats=LoadStats())
+    st = sched.run()
+    np.testing.assert_array_equal(sink.buf, want)
+    assert st.hedged_reads > 0
+    assert st.hedged_wins <= st.hedged_reads
+    # every plan byte written exactly once
+    assert sum(b - a for a, b in sink.extents) == plan.read_bytes
+
+
+# -------------------------------------------------- elastic + facade paths
+def test_elastic_reshard_through_stealing_path(views):
+    """n->m member-shard need (the elastic restore read pattern) through
+    the gather/steal path matches the oracle on every needed byte."""
+    g, vs = views
+    m = 2
+    for member in range(m):
+        need = member_shard_need(m, member, g.total_bytes)
+        want = _oracle(vs, 4, g.total_bytes, need=need)
+        cfg = SchedConfig(mode="adaptive", chunk_bytes=700)
+        st = LoadStats()
+        got = restore_bytes(vs, 4, g.total_bytes, 1, need=need,
+                            stats=st, sched=cfg)
+        np.testing.assert_array_equal(got, want)
+        assert st.bytes_needed == sum(b - a for a, b in need)
+
+
+def test_restore_state_end_to_end_with_scheduler(group):
+    """Facade path: restore_state(sched=...) after a real node failure —
+    planned decode runs pipelined with reads, tree is exact, and the
+    span-based timing attribution is self-consistent."""
+    g, state = group
+    g.snapshot(state, 1)
+    g.inject_node_failure(2)
+    alive = [0, 1, 3]
+    st = LoadStats()
+    cfg = SchedConfig(mode="adaptive", chunk_bytes=1024)
+    tree, step, _ = restore_state(g.run, 4, g.total_bytes, state, alive,
+                                  stats=st, sched=cfg)
+    assert step == 1 and trees_equal(tree, state)
+    assert st.sched == "adaptive"
+    assert st.decoded_bytes > 0
+    assert st.read_seconds >= 0 and st.decode_seconds >= 0
+    assert st.overlap_seconds <= st.read_seconds + 1e-9
+    assert st.overlap_seconds <= st.decode_seconds + 1e-9
+    busy = st.read_seconds + st.decode_seconds - st.overlap_seconds
+    assert busy <= st.wall_seconds + 0.25
+
+
+def test_fcfs_mode_runs_legacy_executor(views):
+    g, vs = views
+    plan = build_plan(4, g.total_bytes)
+    got, st = load_bytes(plan, ShmSource(vs, 1), verify=True,
+                         sched=SchedConfig(mode="fcfs"))
+    np.testing.assert_array_equal(got, _oracle(vs, 4, g.total_bytes))
+    assert st.sched == "fcfs"
+    assert st.stolen_chunks == 0 and st.rerouted_members == ()
+
+
+# ------------------------------------------------------ restore_bw_limit
+def test_restore_bw_limit_charges_every_read(views):
+    """A non-zero restore_bw_limit routes all reads through a token
+    bucket; a spy bucket must see every direct byte charged."""
+    g, vs = views
+
+    class SpyBucket:
+        def __init__(self):
+            self.consumed = 0
+            self._lock = threading.Lock()
+
+        def consume(self, n):
+            with self._lock:
+                self.consumed += n
+
+    bucket = SpyBucket()
+    src = BucketedSource(ShmSource(vs, 1), bucket)
+    plan = build_plan(4, g.total_bytes)
+    cfg = SchedConfig(mode="steal", chunk_bytes=2048)
+    got, st = load_bytes(plan, src, verify=True, sched=cfg)
+    np.testing.assert_array_equal(got, _oracle(vs, 4, g.total_bytes))
+    assert bucket.consumed == st.bytes_read > 0
+
+
+def test_restore_bw_limit_wraps_and_stays_correct(views):
+    """execute_plan itself wraps the source when the config carries a
+    limit — correctness (and verification) are unaffected."""
+    g, vs = views
+    plan = build_plan(4, g.total_bytes)
+    cfg = SchedConfig(mode="adaptive", chunk_bytes=2048,
+                      restore_bw_limit=1 << 30)   # huge: no real throttle
+    got, st = load_bytes(plan, ShmSource(vs, 1), verify=True, sched=cfg)
+    np.testing.assert_array_equal(got, _oracle(vs, 4, g.total_bytes))
+    assert st.crc_members == (0, 1, 2, 3)
+
+
+# ------------------------------------------------------- verification edges
+def test_corrupt_stripe_detected_on_rerouted_members_sticky_blocks(views):
+    """A rerouted member's directly-read ("sticky") blocks are verified
+    against the per-stripe digest table — corruption there must still
+    raise CrcMismatch even though crc_own can no longer be folded."""
+    g, vs = views
+    plan = build_plan(4, g.total_bytes)
+    bs = raim5.block_size(g.total_bytes, 4)
+
+    class CorruptFirstBlock:
+        """Node 1 serves a flipped byte inside block 0, slowly."""
+        kind = "shm"
+
+        def __init__(self, inner):
+            self._inner = inner
+
+        def nodes(self):
+            return self._inner.nodes()
+
+        def meta(self, node):
+            return self._inner.meta(node)
+
+        def read_local(self, node, lo, hi):
+            import time
+            data = self._inner.read_local(node, lo, hi)
+            if node == 1:
+                time.sleep(0.02)
+                if lo < bs:                      # inside block 0
+                    data = data.copy()
+                    data[0] ^= 0xFF
+            return data
+
+        def read_block_range(self, node, stripe, index, o1, o2):
+            return self._inner.read_block_range(node, stripe, index, o1, o2)
+
+        def read_parity_range(self, stripe, o1, o2):
+            return self._inner.read_parity_range(stripe, o1, o2)
+
+    cfg = SchedConfig(mode="adaptive", chunk_bytes=512, min_samples=1,
+                      reroute_factor=1.0, inflight_per_source=1)
+    with pytest.raises(CrcMismatch) as ei:
+        load_bytes(plan, CorruptFirstBlock(ShmSource(vs, 1)),
+                   verify=True, sched=cfg)
+    assert ei.value.node == 1
+
+
+def test_tier3_file_restore_through_scheduler(tmp_path):
+    """Byte-identity holds for tier-3 `.reft` family restores routed
+    through the chunk scheduler (FileSource, full verify)."""
+    from repro.api import CheckpointSession, CheckpointSpec
+    from repro.core.recovery import restore_from_checkpoint
+    template = small_state(9)
+    state = jax.tree.map(
+        lambda x: x + 1 if x.dtype != jnp.uint32 else x, template)
+    spec = CheckpointSpec(backend="reft", ckpt_dir=str(tmp_path),
+                          sg_size=4, resume=False)
+    with CheckpointSession(spec, template) as sess:
+        assert sess.snapshot(state, 2, wait=True)
+        assert sess.persist() == 2
+    st = LoadStats()
+    cfg = SchedConfig(mode="adaptive", chunk_bytes=1024)
+    tree, step, _ = restore_from_checkpoint(str(tmp_path), 4, template,
+                                            stats=st, sched=cfg)
+    assert step == 2 and trees_equal(tree, state)
+    assert st.sched == "adaptive" and st.source == "file"
+    assert st.crc_members == (0, 1, 2, 3)
+
+
+def test_tier4_objstore_restore_through_scheduler(tmp_path):
+    """The ladder's fourth rung (ranged remote reads) also routes through
+    the scheduler when the spec opts in via `restore_sched`."""
+    import glob
+    import os
+    from repro.api import CheckpointSpec
+    template = small_state(11)
+    spec = CheckpointSpec(backend="objstore", ckpt_dir=str(tmp_path),
+                          sg_size=2, resume=False,
+                          options={"scrub_every_s": 0.0,
+                                   "restore_sched": "adaptive"})
+    ck = spec.build(template)
+    try:
+        assert ck.snapshot(template, 7, wait=True)
+        assert ck.persist(wait=True) == 7
+        for p in glob.glob(os.path.join(str(tmp_path), "*.reft")):
+            os.unlink(p)
+        ck.inject_failure(0, "node")
+        ck.inject_failure(1, "node")
+        res = ck.restore()
+        assert res.tier == "objstore" and res.load.source == "object"
+        assert res.load.sched == "adaptive"
+        assert trees_equal(res.state, template)
+    finally:
+        ck.close()
+
+
+def test_gather_partial_plan_through_scheduler(views):
+    """Partial-need plans (no full-member verify stream) run through the
+    gather tiling and stay byte-identical on the needed ranges."""
+    g, vs = views
+    state = small_state()
+    spec = make_flat_spec(state)
+    from repro.core.loader import need_for_leaves
+    need = need_for_leaves(spec, ("w",))
+    plan = build_plan(4, g.total_bytes, need=need)
+    cfg = SchedConfig(mode="steal", chunk_bytes=300)
+    got, st = load_bytes(plan, ShmSource(vs, 1), verify=False, sched=cfg)
+    want = _oracle(vs, 4, g.total_bytes, need=need)
+    for a, b in plan.need:
+        np.testing.assert_array_equal(got[a:b], want[a:b])
+    assert st.bytes_read < g.total_bytes
