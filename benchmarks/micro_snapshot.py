@@ -339,6 +339,42 @@ def persist_overlap(size: int, steps: int = 40,
     return rows, checks
 
 
+def trace_overhead(size: int, reps: int = 5) -> tuple:
+    """Runtime protocol-validator overhead on the saving path
+    (ReftConfig.trace_protocol): min-over-reps snapshot_sync latency
+    with tracing off vs on, identical engine geometry.  Small buckets
+    maximize the per-message validator work, so this is the worst case.
+    Min-over-reps (not mean) for CI noise immunity; a tiny absolute
+    floor absorbs scheduler jitter at smoke sizes."""
+    from repro.core import ReftConfig
+    from repro.core.snapshot import SnapshotEngine
+    state = make_param_state(size)
+
+    def best(trace: bool) -> float:
+        cfg = ReftConfig(bucket_bytes=256 << 10, trace_protocol=trace)
+        eng = SnapshotEngine(0, 1, state, cfg)
+        try:
+            eng.snapshot_sync(state, 1)                     # warm
+            ts = []
+            for i in range(reps):
+                t0 = time.perf_counter()
+                eng.snapshot_sync(state, 2 + i)
+                ts.append(time.perf_counter() - t0)
+            return min(ts)
+        finally:
+            eng.close()
+
+    base = best(False)
+    traced = best(True)
+    frac = traced / base - 1.0
+    ok = frac < 0.05 or (traced - base) < 0.002
+    rows = [("save_trace_off", base, size / 2 ** 30 / base),
+            ("save_trace_on", traced, size / 2 ** 30 / traced)]
+    checks = {"trace_base_s": base, "trace_on_s": traced,
+              "trace_overhead_frac": frac, "trace_overhead_ok": ok}
+    return rows, checks
+
+
 def interference(size: int, steps: int = 50, rounds: int = 3) -> dict:
     """Training-interference probe: step-time delta with a snapshot
     permanently in flight, serial thread vs HASC pipeline on the same
@@ -423,12 +459,36 @@ def main(argv=None):
                          "non-zero unless a 2/8-dirty-expert delta "
                          "flight costs <= 0.5x the full flight in d2h "
                          "bytes AND engine L1 seconds")
+    ap.add_argument("--trace-smoke", action="store_true",
+                    help="run ONLY the trace_protocol overhead probe and "
+                         "exit non-zero unless the runtime protocol "
+                         "validator costs < 5%% on the saving path")
     ap.add_argument("--enforce-interference", action="store_true",
                     help="exit non-zero when the pipelined engine's "
                          "interference exceeds the serial baseline's "
                          "(plus the noise guard band)")
     args = ap.parse_args(argv)
     size = args.size or (SMOKE_SIZE if args.smoke else SIZE)
+    if args.trace_smoke:
+        t_rows, t_checks = trace_overhead(size)
+        print("bench,seconds,GB_per_s")
+        for name, sec, g in t_rows:
+            print(f"{name},{sec:.6f},{g:.4f}")
+        print(f"trace_overhead_frac,{t_checks['trace_overhead_frac']:.4f},")
+        print(f"trace_overhead_ok,{int(t_checks['trace_overhead_ok'])},")
+        if args.json:
+            payload = {"bench": "trace_overhead", "size_bytes": size,
+                       "rows": [{"name": n, "seconds": sec, "derived": g}
+                                for n, sec, g in t_rows],
+                       "trace": t_checks}
+            with open(args.json, "w") as fh:
+                json.dump(payload, fh, indent=2)
+            print(f"[json] wrote {args.json}", file=sys.stderr)
+        if not t_checks["trace_overhead_ok"]:
+            print("[fail] protocol validator overhead >= 5% on the "
+                  "saving path", file=sys.stderr)
+            return 2
+        return 0
     if args.delta_smoke:
         d_rows, d_checks = delta_snapshot(size)
         print("bench,seconds,derived")

@@ -1,0 +1,13 @@
+"""repro.analyze — concurrency & protocol analysis suite.
+
+Three parts (see docs/API.md "Analysis & invariants"):
+  * `repro.analyze.lint`      — repo-specific AST lint rules (ANZ0xx)
+  * `repro.analyze.lockgraph` — runtime lock-order / deadlock checker
+  * `repro.analyze.protocol`  — SMP protocol model checker + validator
+
+Kept import-light on purpose: `core.*` modules import
+`repro.analyze.lockgraph` (stdlib-only) at module load, so nothing here
+may pull in numpy or the rest of the repro package.
+"""
+from repro.analyze.lockgraph import (  # noqa: F401
+    named_lock, named_rlock, named_condition)

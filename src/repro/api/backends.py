@@ -112,7 +112,7 @@ class ReftCheckpointer(Checkpointer):
         super().__init__(spec)
         from repro.ckpt.manager import CheckpointManager
         from repro.core.coordinator import ReftGroup
-        from repro.core.snapshot import ReftConfig
+        from repro.core.snapshot import ReftConfig, _trace_default
 
         run_id = spec.run_id or CheckpointSpec.alloc_run_id()
         opt = spec.options
@@ -159,6 +159,11 @@ class ReftCheckpointer(Checkpointer):
             # rate cap mirroring persist_bw_limit on the write side
             restore_sched=opt.get("restore_sched", "adaptive"),
             restore_bw_limit=opt.get("restore_bw_limit", 0.0),
+            # runtime SMP-protocol validation (docs/API.md "Analysis &
+            # invariants"); default follows REPRO_TRACE_PROTOCOL so CI
+            # turns it on fleet-wide without touching call sites
+            trace_protocol=bool(opt.get("trace_protocol",
+                                        _trace_default())),
         )
         self.group = ReftGroup(spec.sg_size, state_template, rcfg)
         self.manager = CheckpointManager(spec.ckpt_dir, spec.sg_size,

@@ -149,12 +149,18 @@ class DiskWriter:
     def _write(self, step, rank, blob):
         path = os.path.join(self.dir, f"ckpt-{step}-r{rank}.bin")
         tmp = path + ".tmp"
-        with open(tmp, "wb") as f:
-            f.write(blob)
-            if self.fsync:
-                f.flush()
-                os.fsync(f.fileno())
-        os.replace(tmp, path)
+        try:
+            with open(tmp, "wb") as f:
+                f.write(blob)
+                if self.fsync:
+                    f.flush()
+                    os.fsync(f.fileno())
+            os.replace(tmp, path)
+        finally:
+            try:
+                os.unlink(tmp)             # no-op after a clean replace
+            except FileNotFoundError:
+                pass
 
 
 # ------------------------------------------------------------------ load

@@ -179,11 +179,17 @@ class CheckpointManager:
         if self.store is not None:
             manifest["remote_steps"] = self.remote_complete_steps()
         tmp = os.path.join(self.dir, MANIFEST + ".tmp")
-        with open(tmp, "w") as f:
-            json.dump(manifest, f)
-            f.flush()
-            os.fsync(f.fileno())
-        os.replace(tmp, os.path.join(self.dir, MANIFEST))
+        try:
+            with open(tmp, "w") as f:
+                json.dump(manifest, f)
+                f.flush()
+                os.fsync(f.fileno())
+            os.replace(tmp, os.path.join(self.dir, MANIFEST))
+        finally:
+            try:
+                os.unlink(tmp)             # no-op after a clean replace
+            except FileNotFoundError:
+                pass
         self._gc(set(kept))
         self._gc_remote()
         return manifest

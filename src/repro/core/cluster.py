@@ -71,6 +71,7 @@ def _node_main(conn, node: int, n: int, run: str, seed: int,
     cfg = ReftConfig(bucket_bytes=bucket_bytes, ckpt_dir=ckpt_dir,
                      checkpoint_every_snapshots=10 ** 9)
     engine = SnapshotEngine(node, n, state, cfg, run_id=run)
+    # analyze: ok ANZ003 — lockstep sim: one thread per pipe end
     conn.send(("smp_pid", engine.smp.proc.pid))
     step = start
     try:
@@ -83,10 +84,11 @@ def _node_main(conn, node: int, n: int, run: str, seed: int,
                     ckpt_dir,
                     f"step-{engine.last_clean_step}-node-{node}.reft")
                 engine.persist(path)
-                conn.send(("ckpted", engine.last_clean_step))
+                conn.send(("ckpted",  # analyze: ok ANZ003 — lockstep
+                           engine.last_clean_step))
                 continue
             if cmd == "stats":
-                conn.send(("stats", engine.stats))
+                conn.send(("stats", engine.stats))  # analyze: ok ANZ003 — lockstep
                 continue
             if cmd == "stop":
                 break
@@ -94,11 +96,12 @@ def _node_main(conn, node: int, n: int, run: str, seed: int,
             step += 1
             state = update_state(state, step)
             if step_time:
-                time.sleep(step_time)         # simulated fwd+bwd compute
+                # analyze: ok ANZ007 — simulated fwd+bwd compute time
+                time.sleep(step_time)
             if step % snapshot_every == 0:
                 engine.snapshot_sync(state, step,
                                      extra_meta={"seed": seed})
-            conn.send(("at", step))
+            conn.send(("at", step))  # analyze: ok ANZ003 — lockstep
     finally:
         engine.close()
 
@@ -221,7 +224,7 @@ class LocalCluster:
         """Ask every alive trainer's SMP to persist (REFT-Ckpt)."""
         for i, np_ in self.nodes.items():
             if np_.alive:
-                np_.conn.send("ckpt")
+                np_.conn.send("ckpt")  # analyze: ok ANZ003 — coordinator is single-threaded
         t0 = time.time()
         while time.time() - t0 < timeout:
             if all(np_.last_ckpt >= 0 for np_ in self.nodes.values()

@@ -46,6 +46,7 @@ from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro.analyze.lockgraph import named_lock
 from repro.core import raim5
 from repro.core.treebytes import FlatSpec
 
@@ -694,7 +695,7 @@ class LeafSink:
         self._template = template_bytes
         self._arrs: Dict[int, np.ndarray] = {}
         self._left: Dict[int, int] = {}
-        self._lock = threading.Lock()
+        self._lock = named_lock("loader.assembler")
         for lo, hi in need:
             l0 = max(0, bisect.bisect_right(self.offsets, lo) - 1)
             for i in range(l0, len(spec.leaves)):
@@ -838,7 +839,7 @@ def probe_crc(plan: LoadPlan, source, *,
     own_bytes = (plan.total_bytes if plan.n == 1 else (plan.n - 1) * bs)
     decode_stripes = {ref.stripe for ref, _ in plan.decode}
     local = plan_local_ranges(plan)
-    lock = threading.Lock()
+    lock = named_lock("loader.probe")
     t0 = time.perf_counter()
 
     def probe_segments(node: int, seg: int, crcs: List[int]) -> bool:
@@ -955,7 +956,7 @@ def execute_plan(plan: LoadPlan, source, sink, *,
         st.crc_members = ()    # only the attempt that produced the result
                                # counts (a CrcMismatch retry re-enters here);
                                # verify=False keeps a prior probe's record
-    lock = threading.Lock()
+    lock = named_lock("loader.gather")
     t_wall = time.perf_counter()
     marks = {"read_end": 0.0, "d0": 0.0, "d1": 0.0}
 
@@ -1159,7 +1160,7 @@ def load_tree(plan: LoadPlan, source, template: Any, spec: FlatSpec, *,
     st = stats if stats is not None else LoadStats()
     flat, treedef = jax.tree_util.tree_flatten(template)
     done: Dict[int, Any] = {}
-    h2d_lock = threading.Lock()
+    h2d_lock = named_lock("loader.h2d")
 
     def finish(i: int, raw: np.ndarray):
         ls = spec.leaves[i]

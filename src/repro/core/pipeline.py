@@ -56,6 +56,7 @@ from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro.analyze.lockgraph import named_condition
 from repro.core.crcutil import crc32_concat
 from repro.core.delta import FlightDelta, merge_ranges, task_dirty
 from repro.core.treebytes import FlatSpec, iter_buckets
@@ -90,7 +91,7 @@ class StepBoundaryGate:
     ACTIVE_WINDOW = 2.0          # seconds since last tick that count as live
 
     def __init__(self):
-        self._cond = threading.Condition()
+        self._cond = named_condition("pipeline.gate")
         self._tick = 0
         self._last = float("-inf")
 

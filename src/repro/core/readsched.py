@@ -42,6 +42,7 @@ its per-stripe digest table instead (reroute requires the table).
 from __future__ import annotations
 
 import threading
+from repro.analyze.lockgraph import named_condition, named_lock
 import time
 import zlib
 from collections import deque
@@ -91,7 +92,7 @@ class SourceBandwidth:
         self._bw: Dict[str, float] = {}
         self._n: Dict[str, int] = {}
         self._dead: set = set()
-        self._lock = threading.Lock()
+        self._lock = named_lock("readsched.bw")
         for k, v in (priors or {}).items():
             if v and v > 0:
                 self._bw[k] = float(v)
@@ -160,13 +161,14 @@ class ThrottledSource:
         self._bw = dict(bw_bytes_s)
         self._default = float(default_bw)
         self._locks: Dict[int, threading.Lock] = {}
-        self._guard = threading.Lock()
+        self._guard = named_lock("readsched.throttle.guard")
         self.kind = f"slow+{getattr(inner, 'kind', '')}"
 
     def _charge(self, node: int, nbytes: int):
         bw = self._bw.get(node, self._default)
         with self._guard:
-            lk = self._locks.setdefault(node, threading.Lock())
+            lk = self._locks.setdefault(
+                node, named_lock("readsched.throttle.src"))
         with lk:
             if bw != float("inf") and bw > 0 and nbytes > 0:
                 time.sleep(nbytes / bw)
@@ -281,7 +283,7 @@ class ChunkScheduler:
         self.kind = getattr(source, "kind", "")
         self.bw = SourceBandwidth(cfg.ewma_alpha, cfg.priors)
 
-        self.cond = threading.Condition()
+        self.cond = named_condition("readsched.sched")
         self.error: Optional[BaseException] = None
         self.chunks: List[_Chunk] = []
         self.queues: Dict[int, deque] = {}        # node -> deque of cids
@@ -295,7 +297,7 @@ class ChunkScheduler:
         self.hedges_issued = 0
         self._tokens: Dict[int, List[CancelToken]] = {}
         self._parity_ok: set = set()
-        self._parity_lock = threading.Lock()
+        self._parity_lock = named_lock("readsched.parity")
         # timing attribution (perf_counter stamps)
         self.t0 = 0.0
         self.t_read_end = 0.0

@@ -32,6 +32,9 @@ from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
+from repro.analyze.lockgraph import named_condition, named_lock
+from repro.analyze.protocol import (ProtocolViolation, ServerValidator,
+                                    TraceValidator)
 from repro.core import raim5
 from repro.core.crcutil import crc32_concat
 
@@ -136,7 +139,8 @@ class NodeLayout:
 
 # ---------------------------------------------------------------- process
 def _smp_main(conn, run: str, node: int, n: int, total_bytes: int,
-              stage_slots: int, bucket_bytes: int, sem, pin_cpus=None):
+              stage_slots: int, bucket_bytes: int, sem, pin_cpus=None,
+              trace: bool = False):
     if pin_cpus:
         try:                       # best-effort NUMA/CPU pinning: keep the
             os.sched_setaffinity(0, pin_cpus)   # SMP off the trainer cores
@@ -158,6 +162,7 @@ def _smp_main(conn, run: str, node: int, n: int, total_bytes: int,
 
     # L3 readiness event: the trainer-side handle blocks on this message
     # instead of sleep-polling shm_open until the segments appear
+    # analyze: ok ANZ003 — pre-thread: worker not started, sole sender
     conn.send(("ready",))
 
     # REFT-Ckpt runs on a background thread so the message loop keeps
@@ -166,8 +171,8 @@ def _smp_main(conn, run: str, node: int, n: int, total_bytes: int,
     # pinned buffer as dirty, so the shard on its way to disk can never be
     # re-dirtied mid-write.  The pin is taken HERE, in the message loop,
     # before the job is queued — synchronous with begin/end, no race.
-    send_lock = threading.Lock()          # conn.send: loop thread + worker
-    pin_cond = threading.Condition()
+    send_lock = named_lock("smp.server.send")   # loop thread + worker
+    pin_cond = named_condition("smp.server.pin")
     # pin REFCOUNTS, not a set: two queued persists may select the SAME
     # buffer (e.g. two rounds at one common step) — the pin must hold
     # until the LAST job over that buffer finishes, or `begin` would
@@ -188,6 +193,7 @@ def _smp_main(conn, run: str, node: int, n: int, total_bytes: int,
             opts = opts or {}
             try:
                 if delay_s:                  # simulated slow durable tier
+                    # analyze: ok ANZ007 — injected latency, not polling
                     time.sleep(delay_s)      # (tests / interference bench)
                 # one token bucket covers the local stream AND the remote
                 # upload: persist_bw_limit bounds the SMP's total write
@@ -243,17 +249,32 @@ def _smp_main(conn, run: str, node: int, n: int, total_bytes: int,
                     info["upload"] = up
                 if bucket:
                     info["throttle_s"] = bucket.throttled_s
+                if trace:
+                    why = ServerValidator.on_persist_done(
+                        idx, step, int(ctl[2 + 2 * idx]),
+                        int(ctl[3 + 2 * idx]) == ST_CLEAN)
+                    if why:
+                        _send(("protocol-error", why))
                 reply = ("persisted", seq, path, step, info)
             except Exception as e:
                 reply = ("persist-error", seq, repr(e))
             finally:
+                unpin_why = None
                 with pin_cond:
+                    if trace:
+                        unpin_why = ServerValidator.on_unpin(
+                            idx, pinned.get(idx, 0))
                     left = pinned.get(idx, 1) - 1
                     if left <= 0:
                         pinned.pop(idx, None)
                     else:
                         pinned[idx] = left
                     pin_cond.notify_all()
+                if unpin_why:
+                    try:
+                        _send(("protocol-error", unpin_why))
+                    except (BrokenPipeError, OSError):
+                        pass                 # trainer gone
             try:
                 _send(reply)
             except (BrokenPipeError, OSError):
@@ -285,6 +306,11 @@ def _smp_main(conn, run: str, node: int, n: int, total_bytes: int,
                             break
                         pin_cond.wait(0.1)
                 dirty = min(cands)[1]
+                if trace:
+                    why = ServerValidator.on_begin_select(
+                        dirty, latest, pinned)
+                    if why:
+                        _send(("protocol-error", why))
                 ctl[2 + 2 * dirty] = step
                 ctl[3 + 2 * dirty] = ST_DIRTY
                 if base_step is not None:
@@ -455,7 +481,7 @@ class _TokenBucket:
         self.tokens = self.burst
         self.t_last = time.perf_counter()
         self.throttled_s = 0.0
-        self._lock = threading.Lock() if threadsafe else None
+        self._lock = named_lock("smp.tokenbucket") if threadsafe else None
 
     def _tick(self, nbytes: int) -> float:
         now = time.perf_counter()
@@ -570,8 +596,14 @@ class SMPHandle:
 
     def __init__(self, run: str, node: int, n: int, total_bytes: int, *,
                  stage_slots: int = 8, bucket_bytes: int = 4 << 20,
-                 pin_cpus=None):
+                 pin_cpus=None, trace: bool = False):
         self.run, self.node, self.n = run, node, n
+        # runtime protocol monitor (ReftConfig.trace_protocol): every
+        # sent/received message is validated against the FLIGHT_FSM
+        # table - a desync raises ProtocolViolation instead of wedging
+        self._validator = (TraceValidator(f"smp-n{node}") if trace
+                           else None)
+        self._stopped = False
         self.layout = NodeLayout(n, total_bytes)
         self.stage_slots = stage_slots
         self.bucket_bytes = bucket_bytes
@@ -581,7 +613,7 @@ class SMPHandle:
             target=_smp_main,
             args=(child, run, node, n, total_bytes, stage_slots,
                   bucket_bytes, self._sem, tuple(pin_cpus) if pin_cpus
-                  else None),
+                  else None, trace),
             daemon=True, name=f"smp-{run}-n{node}")
         self.proc.start()
         child.close()
@@ -593,8 +625,8 @@ class SMPHandle:
         # Every receive routes messages to per-kind queues under one lock
         # (`_await`); sends take `_tx_lock` (the stager thread and an
         # async persist may hit the pipe concurrently).
-        self._tx_lock = threading.Lock()
-        self._rx_lock = threading.Lock()
+        self._tx_lock = named_lock("smp.handle.tx")
+        self._rx_lock = named_lock("smp.handle.rx")
         self._rx_clean: deque = deque()
         self._rx_pong: deque = deque()
         self._rx_base: deque = deque()
@@ -621,6 +653,8 @@ class SMPHandle:
                 f"SMP for node {self.node} died during startup") from None
         if msg[0] != "ready":
             raise RuntimeError(f"unexpected SMP hello {msg!r}")
+        if self._validator is not None:
+            self._validator.rx(msg)
         self._stage = _attach(_seg(self.run, self.node, "stage"))
         self._stage_np = np.ndarray(
             (self.stage_slots, self.bucket_bytes), np.uint8,
@@ -630,6 +664,11 @@ class SMPHandle:
     def _dispatch(self, msg) -> None:
         """Route one SMP message to its queue (callers hold _rx_lock)."""
         tag = msg[0]
+        if self._validator is not None:
+            self._validator.rx(msg)       # raises on desync
+        if tag == "protocol-error":
+            # an SMP-side invariant check tripped (tracing off: never sent)
+            raise ProtocolViolation(f"SMP node {self.node}: {msg[1]}")
         if tag == "clean":
             self._rx_clean.append(msg)
         elif tag == "pong":
@@ -659,6 +698,9 @@ class SMPHandle:
                 if got is not None:
                     return got
                 if self._conn.poll(0.05):
+                    # demux by design: the rx lock IS the single-reader
+                    # guarantee; recv follows a ready poll (bounded hold)
+                    # analyze: ok ANZ002
                     self._dispatch(self._conn.recv())
                     continue
             if time.monotonic() >= deadline:
@@ -668,10 +710,13 @@ class SMPHandle:
         """Non-blocking: route everything currently in the pipe."""
         with self._rx_lock:
             while self._conn.poll(0):
+                # analyze: ok ANZ002 — poll(0) guarantees a ready frame
                 self._dispatch(self._conn.recv())
 
     def _send(self, msg) -> None:
         with self._tx_lock:
+            if self._validator is not None:
+                self._validator.tx(msg)   # raises on an off-table send
             self._conn.send(msg)
 
     # -- snapshot protocol -------------------------------------------------
@@ -786,6 +831,8 @@ class SMPHandle:
                 msg = self._take_persist(seq)   # landed since last check?
                 if msg is None:
                     self._stale_persists.add(seq)
+                    if self._validator is not None:
+                        self._validator.mark_stale(seq)
                     if seq in self._pending_persists:
                         self._pending_persists.remove(seq)
                     raise
@@ -803,6 +850,7 @@ class SMPHandle:
         the pipe on the way), else None."""
         with self._rx_lock:
             while self._conn.poll(0):
+                # analyze: ok ANZ002 — poll(0) guarantees a ready frame
                 self._dispatch(self._conn.recv())
             return self._take_persist(seq)
 
@@ -815,6 +863,15 @@ class SMPHandle:
         return self.proc.is_alive()
 
     def stop(self):
+        """Clean shutdown.  Idempotent: a second stop() (or close()) is a
+        no-op — engine teardown, supervisor heal and user-level close()
+        may all race onto the same handle.  Safe mid-persist: the SMP
+        drains its persist queue before dropping the segments, so an
+        accepted durable write still lands; its late reply is simply
+        never read."""
+        if self._stopped:
+            return
+        self._stopped = True
         try:
             self._send(("stop",))
         except (BrokenPipeError, OSError):
@@ -830,8 +887,14 @@ class SMPHandle:
             self._stage = None
         ReadOnlyNode.unlink_node(self.run, self.node)
 
+    def close(self):
+        """Alias for stop() (idempotent clean shutdown)."""
+        self.stop()
+
     def kill(self):
-        """Simulate an SMP software crash (segments survive)."""
+        """Simulate an SMP software crash (segments survive).  A later
+        stop() is still allowed (it reaps the proc and unlinks segments),
+        so kill() does NOT mark the handle stopped."""
         self.proc.kill()
         self.proc.join()
         self.release()

@@ -40,6 +40,11 @@ from repro.core.treebytes import FlatSpec, leaf_arrays, make_flat_spec
 _LeafReader = LeafReader
 
 
+def _trace_default() -> bool:
+    import os
+    return os.environ.get("REPRO_TRACE_PROTOCOL", "") not in ("", "0")
+
+
 @dataclass(frozen=True)
 class ReftConfig:
     bucket_bytes: int = 4 << 20
@@ -88,6 +93,11 @@ class ReftConfig:
     restore_bw_limit: float = 0.0    # token-bucket cap (bytes/s) on all
                                      # restore reads; 0 = unlimited
                                      # (read-side twin of persist_bw_limit)
+    # runtime SMP protocol validation (repro.analyze.protocol): every
+    # pipe message is checked against the flight FSM; desyncs raise
+    # ProtocolViolation instead of wedging a blocking recv.  Defaults to
+    # the REPRO_TRACE_PROTOCOL env var so CI can turn it on fleet-wide.
+    trace_protocol: bool = field(default_factory=lambda: _trace_default())
 
 
 class SnapshotEngine:
@@ -108,7 +118,8 @@ class SnapshotEngine:
         self.smp = SMPHandle(self.run, node, n, self.spec.total_bytes,
                              stage_slots=cfg.stage_slots,
                              bucket_bytes=cfg.bucket_bytes,
-                             pin_cpus=affinity)
+                             pin_cpus=affinity,
+                             trace=cfg.trace_protocol)
         self._own = self._own_plan()
         self._stripe = self._stripe_plan()
         self._pipeline: Optional[SnapshotPipeline] = None

@@ -178,6 +178,9 @@ def main(argv=None):
                                                         [node]):
                         if time.monotonic() > deadline:
                             ap.error("preempt grace window never expired")
+                        # deadline-bounded grace-window poll in the CLI
+                        # harness (the sim has no event to wait on)
+                        # analyze: ok ANZ007
                         time.sleep(0.05)
                 try:
                     res = sess.restore()

@@ -19,6 +19,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
+from repro.analyze.lockgraph import named_lock
 from repro.dist.api import shard
 from jax.sharding import PartitionSpec as P
 
@@ -96,7 +97,7 @@ class ExpertTouchTracker:
     """
 
     def __init__(self):
-        self._lock = threading.Lock()
+        self._lock = named_lock("moe.touched")
         self._mask: np.ndarray = np.zeros(0, bool)
         self.enabled = False
 

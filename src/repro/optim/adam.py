@@ -25,7 +25,10 @@ class AdamConfig:
     moments_dtype: str = "float32"
 
 
-def adam_init(params, cfg: AdamConfig = AdamConfig()):
+def adam_init(params, cfg: AdamConfig | None = None):
+    # default built per call: a module-level AdamConfig() instance would
+    # be shared by every caller (the PR 1 aliased-config bug class)
+    cfg = cfg if cfg is not None else AdamConfig()
     dt = jnp.dtype(cfg.moments_dtype)
     zeros = lambda p: jnp.zeros(p.shape, dt)
     return {

@@ -39,6 +39,7 @@ from typing import Callable, Dict, List, Optional, Tuple
 
 import numpy as np
 
+from repro.analyze.lockgraph import named_lock
 from repro.store.base import NotFoundError, ObjectStore, StoreError, \
     call_with_retries, retry_policy
 
@@ -512,7 +513,7 @@ class Scrubber:
         self._retry = retry
         self._stop = threading.Event()
         self._thread: Optional[threading.Thread] = None
-        self._lock = threading.Lock()
+        self._lock = named_lock("scrub.stats")
         self._stats = {"scrub_passes": 0, "scrub_families": 0,
                        "scrub_segments": 0, "scrub_bytes": 0,
                        "scrub_corrupt": 0, "scrub_repaired": 0,

@@ -173,6 +173,8 @@ class Supervisor:
             h = self.sess.health()
             if node in h["degraded"] or node in h.get("preempted", []):
                 return time.monotonic() - t0
+            # health() is a pull API over the sim cluster; detection-
+            # lag measurement needs a fine poll  # analyze: ok ANZ007
             time.sleep(0.01)
         raise RuntimeError(f"node {node} never detected unhealthy "
                            f"within {self.detect_timeout_s}s")

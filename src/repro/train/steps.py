@@ -43,7 +43,7 @@ def init_train_state(cfg: ModelConfig, seed: int = 0) -> TrainState:
                       rng=jax.random.PRNGKey(seed + 1))
 
 
-def make_train_step(cfg: ModelConfig, opt: AdamConfig = AdamConfig(),
+def make_train_step(cfg: ModelConfig, opt: AdamConfig | None = None,
                     unroll: bool = False, microbatches: int = 1):
     """Train-step factory.
 
@@ -52,6 +52,10 @@ def make_train_step(cfg: ModelConfig, opt: AdamConfig = AdamConfig(),
     the per-step activation footprint exceeds HBM (grads are averaged, so
     the update is identical to the full-batch step for equal-size chunks).
     """
+    # per-call default: a signature-level AdamConfig() would be one shared
+    # instance across every factory call (the PR 1 aliased-config bug)
+    opt = opt if opt is not None else AdamConfig()
+
     def loss_fn(p, batch):
         loss, _ = M.forward(cfg, p, batch, unroll=unroll)
         return loss

@@ -1,0 +1,453 @@
+"""Tests for repro.analyze: lint rules (positive / negative / pragma),
+lockgraph ABBA + cycle detection, the SMP protocol model checker (real
+table accepted, broken variants rejected), the runtime TraceValidator,
+and the SMPHandle close idempotency the validator guards."""
+import os
+import subprocess
+import sys
+import threading
+import time
+
+import pytest
+
+from repro.analyze.lint import RULES, lint_source
+from repro.analyze.lockgraph import (LockOrderViolation, LockTracer,
+                                     TracedCondition, TracedLock,
+                                     current_tracer, install,
+                                     named_condition, named_lock, uninstall)
+from repro.analyze.protocol import (FLIGHT_FSM, CheckConfig,
+                                    ProtocolViolation, TraceValidator,
+                                    model_check)
+
+REPO = os.path.join(os.path.dirname(__file__), "..")
+
+
+def rules_of(findings):
+    return [f.rule for f in findings]
+
+
+# ------------------------------------------------------------------- lint
+class TestLintRules:
+    def test_anz001_mutable_default_positive(self):
+        src = "def f(x=[]):\n    return x\n"
+        assert rules_of(lint_source(src)) == ["ANZ001"]
+        src = "def f(x=dict()):\n    return x\n"
+        assert rules_of(lint_source(src)) == ["ANZ001"]
+        # the PR 1 bug class: one shared config instance per *import*
+        src = "def f(cfg=ReftConfig()):\n    return cfg\n"
+        assert rules_of(lint_source(src)) == ["ANZ001"]
+
+    def test_anz001_dataclass_field_positive(self):
+        src = ("from dataclasses import dataclass\n"
+               "@dataclass\n"
+               "class C:\n"
+               "    xs: list = []\n")
+        assert rules_of(lint_source(src)) == ["ANZ001"]
+
+    def test_anz001_negative(self):
+        src = ("from dataclasses import dataclass, field\n"
+               "@dataclass\n"
+               "class C:\n"
+               "    xs: list = field(default_factory=list)\n"
+               "    n: int = 3\n"
+               "def f(x=None, y=(), z=3):\n"
+               "    return x\n")
+        assert lint_source(src) == []
+
+    def test_anz001_pragma(self):
+        src = "def f(x=[]):  # analyze: ok ANZ001\n    return x\n"
+        sup = []
+        assert lint_source(src, suppressed_out=sup) == []
+        assert rules_of(sup) == ["ANZ001"]
+
+    def test_anz002_blocking_under_lock_positive(self):
+        src = ("def f(self):\n"
+               "    with self._lock:\n"
+               "        time.sleep(1)\n")
+        assert "ANZ002" in rules_of(lint_source(src))
+        src = ("def f(self):\n"
+               "    with self._rx_lock:\n"
+               "        msg = conn.recv()\n")
+        assert "ANZ002" in rules_of(lint_source(src))
+
+    def test_anz002_negative(self):
+        # sleep outside the lock, and Condition.wait (which releases)
+        src = ("def f(self):\n"
+               "    with self._lock:\n"
+               "        x = 1\n"
+               "    time.sleep(1)\n"
+               "    with self._cond:\n"
+               "        self._cond.wait(1.0)\n")
+        assert "ANZ002" not in rules_of(lint_source(src))
+
+    def test_anz002_pragma(self):
+        src = ("def f(self):\n"
+               "    with self._lock:\n"
+               "        # analyze: ok ANZ002\n"
+               "        time.sleep(1)\n")
+        assert "ANZ002" not in rules_of(lint_source(src))
+
+    def test_anz003_send_outside_lock_positive(self):
+        src = "def f(conn):\n    conn.send(('x',))\n"
+        assert rules_of(lint_source(src)) == ["ANZ003"]
+
+    def test_anz003_negative(self):
+        src = ("def f(self):\n"
+               "    with self._tx_lock:\n"
+               "        self._conn.send(('x',))\n")
+        assert lint_source(src) == []
+        # non-pipe receivers are not flagged
+        src = "def f(sock_like):\n    requests.send(x)\n"
+        assert lint_source(src) == []
+
+    def test_anz003_pragma(self):
+        src = "def f(conn):\n    conn.send(('x',))  # analyze: ok ANZ003\n"
+        assert lint_source(src) == []
+
+    def test_anz004_tmp_without_finally_positive(self):
+        src = ("def f(path):\n"
+               "    tmp = path + '.tmp'\n"
+               "    with open(tmp, 'w') as fh:\n"
+               "        fh.write('x')\n")
+        assert "ANZ004" in rules_of(lint_source(src))
+
+    def test_anz004_negative(self):
+        src = ("def f(path):\n"
+               "    tmp = path + '.tmp'\n"
+               "    try:\n"
+               "        with open(tmp, 'w') as fh:\n"
+               "            fh.write('x')\n"
+               "        os.replace(tmp, path)\n"
+               "    finally:\n"
+               "        try:\n"
+               "            os.unlink(tmp)\n"
+               "        except FileNotFoundError:\n"
+               "            pass\n")
+        assert "ANZ004" not in rules_of(lint_source(src))
+        # reads don't leak partial files
+        src = "def f(tmp):\n    with open(tmp, 'r') as fh:\n        fh.read()\n"
+        assert "ANZ004" not in rules_of(lint_source(src))
+
+    def test_anz004_pragma(self):
+        src = ("def f(tmp):\n"
+               "    fh = open(tmp, 'w')  # analyze: ok ANZ004\n")
+        assert "ANZ004" not in rules_of(lint_source(src))
+
+    def test_anz005_bare_except_positive(self):
+        src = "try:\n    x()\nexcept:\n    pass\n"
+        assert rules_of(lint_source(src)) == ["ANZ005"]
+
+    def test_anz005_negative(self):
+        src = "try:\n    x()\nexcept Exception:\n    pass\n"
+        assert lint_source(src) == []
+
+    def test_anz005_pragma(self):
+        src = "try:\n    x()\nexcept:  # analyze: ok ANZ005\n    pass\n"
+        assert lint_source(src) == []
+
+    def test_anz006_nondeterminism_in_planner_positive(self):
+        src = ("def plan_scenarios(seed):\n"
+               "    return time.time()\n")
+        assert rules_of(lint_source(src)) == ["ANZ006"]
+        src = ("def plan_x(seed):\n"
+               "    import uuid\n"
+               "    return uuid.uuid4()\n")
+        assert "ANZ006" in rules_of(lint_source(src))
+
+    def test_anz006_negative(self):
+        # seeded RNG is the *point*; and non-planner scope is exempt
+        src = ("def plan_scenarios(seed):\n"
+               "    rng = np.random.default_rng(seed)\n"
+               "    return rng.random()\n"
+               "def helper():\n"
+               "    return time.time()\n")
+        assert "ANZ006" not in rules_of(lint_source(src))
+
+    def test_anz006_pragma(self):
+        src = ("def plan_x(seed):\n"
+               "    return time.time()  # analyze: ok ANZ006\n")
+        assert "ANZ006" not in rules_of(lint_source(src))
+
+    def test_anz007_sleep_in_loop_positive(self):
+        src = ("def f():\n"
+               "    while not done():\n"
+               "        time.sleep(0.1)\n")
+        assert rules_of(lint_source(src)) == ["ANZ007"]
+
+    def test_anz007_negative(self):
+        src = "def f():\n    time.sleep(0.1)\n"
+        assert lint_source(src) == []
+
+    def test_anz007_pragma_previous_line(self):
+        src = ("def f():\n"
+               "    while not done():\n"
+               "        # analyze: ok ANZ007\n"
+               "        time.sleep(0.1)\n")
+        assert lint_source(src) == []
+
+    def test_rule_catalog_is_complete(self):
+        assert set(RULES) == {f"ANZ00{i}" for i in range(1, 8)}
+
+    def test_repo_tree_is_clean(self):
+        """Acceptance gate: the shipped tree has no unsuppressed findings
+        and the bounded model check passes — same command CI runs."""
+        r = subprocess.run(
+            [sys.executable, "-m", "repro.analyze", "--strict", "src"],
+            cwd=REPO, capture_output=True, text=True, timeout=300,
+            env={**os.environ,
+                 "PYTHONPATH": os.path.join(REPO, "src")})
+        assert r.returncode == 0, r.stderr
+
+
+# -------------------------------------------------------------- lockgraph
+class TestLockgraph:
+    def test_consistent_order_passes(self):
+        tr = LockTracer()
+        a, b = TracedLock("A", tr), TracedLock("B", tr)
+
+        def use():
+            with a:
+                with b:
+                    pass
+        t = threading.Thread(target=use)
+        t.start()
+        t.join()
+        use()
+        tr.check()            # no raise
+        assert ("A", "B") in {tuple(e) for e in tr.summary()["edges"]}
+
+    def test_abba_detected_eagerly(self):
+        tr = LockTracer()
+        a, b = TracedLock("A", tr), TracedLock("B", tr)
+        with a:
+            with b:
+                pass
+        # reversed order on another thread: the classic deadlock setup,
+        # caught at acquisition without needing the actual interleaving
+        def reversed_order():
+            with b:
+                with a:
+                    pass
+        t = threading.Thread(target=reversed_order)
+        t.start()
+        t.join()
+        assert tr.violations and tr.violations[0]["kind"] == \
+            "inconsistent-order"
+        with pytest.raises(LockOrderViolation):
+            tr.check()
+
+    def test_three_lock_cycle(self):
+        tr = LockTracer(keep_stacks=False)
+        a, b, c = (TracedLock(n, tr) for n in "ABC")
+        for first, second in ((a, b), (b, c), (c, a)):
+            with first:
+                with second:
+                    pass
+        assert tr.cycles()
+        with pytest.raises(LockOrderViolation):
+            tr.check()
+
+    def test_condition_wait_releases_held_record(self):
+        tr = LockTracer()
+        cond = TracedCondition("C", tr)
+        other = TracedLock("L", tr)
+        done = threading.Event()
+
+        def waiter():
+            with cond:
+                cond.wait(0.2)
+            done.set()
+        t = threading.Thread(target=waiter)
+        t.start()
+        time.sleep(0.05)
+        # while the waiter sleeps in wait(), C is NOT held: acquiring
+        # C->L here must not create an L-after-C edge from its thread
+        with cond:
+            cond.notify_all()
+        t.join()
+        assert done.is_set()
+        tr.check()
+
+    def test_factories_plain_without_tracer(self):
+        # restore any session-wide tracer afterwards (ANALYZE_LOCKGRAPH=1
+        # runs must keep collecting their corpus after this test)
+        prev = current_tracer()
+        uninstall()
+        try:
+            lk = named_lock("x")
+            assert isinstance(lk, type(threading.Lock()))
+            assert isinstance(named_condition("x"), threading.Condition)
+        finally:
+            if prev is not None:
+                install(prev)
+
+    def test_factories_traced_with_tracer(self):
+        prev = current_tracer()
+        tr = install()
+        try:
+            lk = named_lock("smp.test")
+            assert isinstance(lk, TracedLock)
+            with lk:
+                pass
+            assert "smp.test" in tr.locks_seen
+        finally:
+            if prev is not None:
+                install(prev)
+            else:
+                uninstall()
+
+
+# --------------------------------------------------------- model checker
+class TestModelChecker:
+    def test_real_table_fully_explored_clean(self):
+        res = model_check()
+        assert res.complete
+        assert res.ok, (res.violations[:2], res.wedges[:2])
+        assert res.states > 1000        # genuinely exhaustive, not trivial
+        assert res.transitions > res.states
+
+    def test_unpin_before_pin_rejected(self):
+        res = model_check(CheckConfig(variant="unpin-before-pin"))
+        assert not res.ok
+        kinds = " ".join(v["kind"] for v in res.violations)
+        assert "double-unpin" in kinds
+        # counterexamples carry a replayable action trace
+        assert all(v["trace"] for v in res.violations)
+
+    def test_begin_picks_latest_rejected(self):
+        res = model_check(CheckConfig(variant="begin-picks-latest"))
+        assert not res.ok
+        assert any("latest" in v["kind"] for v in res.violations)
+
+    def test_broken_fsm_wedges(self):
+        # a table that forgets open->end can never publish a snapshot:
+        # the checker reports the wedge (open flight, no enabled action)
+        fsm = {k: v for k, v in FLIGHT_FSM.items()
+               if k != ("open", "end") and k[1] != "stop"}
+        res = model_check(CheckConfig(fsm=fsm, allow_death=False,
+                                      allow_timeout=False,
+                                      max_persists=0))
+        assert res.wedges
+
+
+# -------------------------------------------------------- trace validator
+class TestTraceValidator:
+    def run_happy_path(self, v):
+        v.rx(("ready",))
+        v.tx(("begin", 1))
+        v.tx(("bucket", 0, 0, 0, 4096))
+        v.tx(("end", 1, b"meta"))
+        v.rx(("clean", 1))
+        v.tx(("ping",))
+        v.rx(("pong", 123.0))
+        v.tx(("persist", 1, "/p", None, 0.0))
+        v.rx(("persisted", 1, "/p", 1, {}))
+        v.tx(("stop",))
+
+    def test_happy_path_accepted(self):
+        v = TraceValidator()
+        self.run_happy_path(v)
+        assert v.violations == []
+        assert v.phase == "stopped"
+
+    def test_broken_table_rejects_real_trace(self):
+        fsm = {k: n for k, n in FLIGHT_FSM.items() if k != ("open", "end")}
+        v = TraceValidator(fsm=fsm)
+        with pytest.raises(ProtocolViolation):
+            self.run_happy_path(v)
+
+    def test_double_begin_rejected(self):
+        v = TraceValidator()
+        v.rx(("ready",))
+        v.tx(("begin", 1))
+        with pytest.raises(ProtocolViolation):
+            v.tx(("begin", 2))
+
+    def test_clean_desync_rejected(self):
+        v = TraceValidator()
+        v.rx(("ready",))
+        v.tx(("begin", 1))
+        v.tx(("end", 1, b""))
+        with pytest.raises(ProtocolViolation):
+            v.rx(("clean", 7))
+
+    def test_unknown_persist_reply_rejected(self):
+        v = TraceValidator()
+        v.rx(("ready",))
+        with pytest.raises(ProtocolViolation):
+            v.rx(("persisted", 9, "/p", 1, {}))
+
+    def test_stale_reply_tolerated(self):
+        v = TraceValidator()
+        v.rx(("ready",))
+        v.tx(("persist", 1, "/p", None, 0.0))
+        v.mark_stale(1)
+        v.rx(("persisted", 1, "/p", 1, {}))      # late, discarded, legal
+        assert v.violations == []
+
+    def test_post_stop_persist_reply_tolerated(self):
+        v = TraceValidator()
+        v.rx(("ready",))
+        v.tx(("persist", 1, "/p", None, 0.0))
+        v.tx(("stop",))
+        v.rx(("persisted", 1, "/p", 1, {}))      # drain during close
+        assert v.violations == []
+
+    def test_send_after_stop_rejected(self):
+        v = TraceValidator()
+        v.rx(("ready",))
+        v.tx(("stop",))
+        with pytest.raises(ProtocolViolation):
+            v.tx(("persist", 1, "/p", None, 0.0))
+
+    def test_pong_without_ping_rejected(self):
+        v = TraceValidator()
+        v.rx(("ready",))
+        with pytest.raises(ProtocolViolation):
+            v.rx(("pong", 1.0))
+
+
+# --------------------------------------------- SMPHandle close idempotency
+@pytest.fixture(scope="module")
+def jax_state():
+    import jax
+    import jax.numpy as jnp
+    k = jax.random.PRNGKey(0)
+    return {"w": jax.random.normal(k, (64, 32)),
+            "b": jnp.ones((17,), jnp.bfloat16)}
+
+
+class TestCloseIdempotency:
+    def make_engine(self, jax_state):
+        from repro.core import ReftConfig
+        from repro.core.snapshot import SnapshotEngine
+        cfg = ReftConfig(bucket_bytes=4096, trace_protocol=True)
+        return SnapshotEngine(0, 1, jax_state, cfg)
+
+    def test_double_close_is_safe(self, jax_state):
+        eng = self.make_engine(jax_state)
+        eng.snapshot_sync(jax_state, 1)
+        eng.smp.stop()
+        eng.smp.stop()          # second stop: no-op, no raise
+        eng.smp.close()         # alias, also a no-op now
+        assert eng.smp._validator.violations == []
+
+    def test_close_during_persist_lands_the_shard(self, tmp_path,
+                                                  jax_state):
+        """stop() while a persist is mid-write: the SMP drains its queue
+        before dropping segments, so the accepted durable write still
+        lands; the trace validator sees a clean close-during-persist."""
+        eng = self.make_engine(jax_state)
+        eng.snapshot_sync(jax_state, 1)
+        path = str(tmp_path / "mid.reft")
+        eng.smp.persist_send(path, delay_s=0.3)
+        eng.smp.stop()          # join waits for the drain
+        assert os.path.exists(path)
+        eng.smp.stop()          # and still idempotent afterwards
+        assert eng.smp._validator.violations == []
+
+    def test_engine_close_then_handle_close(self, jax_state):
+        eng = self.make_engine(jax_state)
+        eng.snapshot_sync(jax_state, 1)
+        eng.close()
+        eng.smp.close()         # teardown racing user close: no raise
